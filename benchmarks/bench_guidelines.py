@@ -1,0 +1,44 @@
+"""Paper Figs. 3/4/5: guideline-violation tables per platform.
+
+For each platform preset (Jupiter-like optimal fabric at p=512, the
+JUQUEEN-like naive+HW-bcast fabric at p=1024 — the paper's 32x16 and 64x16
+runs — and the v5e model axis at p=16), benchmark every mock-up against the
+default via the cost model and report relative latency + violations, the
+paper's Tuned-vs-Default panels.
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core import costmodel as cm
+from repro.core import tuner
+
+PLATFORMS = [
+    ("jupiter_like_p512", cm.V5E_ICI, 512),
+    ("juqueen_like_p1024", cm.BGQ_LIKE, 1024),
+    ("v5e_model_axis_p16", cm.V5E_ICI, 16),
+]
+
+SIZES = (1, 8, 32, 100, 1024, 8192, 32768, 100_000, 1_048_576)
+
+
+def run():
+    for pname, topo, p in PLATFORMS:
+        rep = tuner.tune(sizes=SIZES, axis_size=p,
+                         backend=tuner.CostModelBackend(topo))
+        n_pat = sum(1 for v in rep.violations if v.gl_kind == "pattern")
+        emit(f"guidelines/{pname}/violations", 0.0,
+             f"pattern={n_pat} profiles={len(rep.profiles)}")
+        # per-op best-case speedup (the Figs. 3-5 headline numbers)
+        best: dict[str, float] = {}
+        for v in rep.violations:
+            if v.gl_kind == "pattern":
+                best[v.op] = max(best.get(v.op, 1.0), v.speedup)
+        for op, sp in sorted(best.items()):
+            # default latency at 32 KiB for scale (the paper's marked sizes)
+            t_def = cm.latency(op, "default", p, 32768, topo) * 1e6
+            emit(f"guidelines/{pname}/{op}", t_def,
+                 f"best_mockup_speedup=x{sp:.2f}")
+
+
+if __name__ == "__main__":
+    run()

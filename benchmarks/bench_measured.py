@@ -1,0 +1,32 @@
+"""Measured-latency pipeline on host devices (the offline tuning pass the
+paper runs with ReproMPI): default vs mock-ups, barrier-synced wall clock.
+
+On this container the bench process sees ONE device (axis size 1), so the
+numbers are dispatch floors — the point is exercising the exact pipeline
+that runs on a real pod (see tests/test_spmd_subprocess.py for 8-device
+execution of every mock-up).
+"""
+from __future__ import annotations
+
+import statistics
+
+from benchmarks.common import emit
+from repro.core import measure
+
+
+def run():
+    p = measure.axis_size()
+    for op, impls in [
+        ("allreduce", ["default", "allreduce_as_rsb_allgather"]),
+        ("allgather", ["default", "allgather_as_allreduce"]),
+        ("reducescatter", ["default", "rsb_as_allreduce"]),
+    ]:
+        for impl in impls:
+            lat = measure.sample_latency(op, impl, 4096, 20)
+            med = statistics.median(lat) * 1e6
+            emit(f"measured/p{p}/{op}/{impl}", med,
+                 f"min={min(lat)*1e6:.1f}us")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,43 @@
+"""Paper §3.2.3 + §4.2 microbenchmarks:
+
+1. NREP estimation (Alg. 1 / Eq. 1) against a real wall-clock sampler.
+2. Profile lookup latency — the O(1) hash + O(log M) bisect claim.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import measure, nrep
+from repro.core.profiles import Profile, ProfileStore, Range
+
+
+def run():
+    # --- NREP on a real sampler (host-device collective wall clock) --------
+    sampler = measure.make_sampler("allreduce", "default")
+    t0 = time.perf_counter()
+    ob = nrep.estimate_1byte(sampler, rse_threshold=0.05, batch0=5,
+                             max_samples=60)
+    emit("nrep/1byte_estimation", (time.perf_counter() - t0) * 1e6,
+         f"nrep={ob.nrep} rse={ob.final_rse:.4f}")
+    for msize in (1024, 65_536, 1_048_576):
+        n = nrep.estimate_nrep(sampler, msize, ob, K=5)
+        emit(f"nrep/eq1_nrep/{msize}B", 0.0, f"nrep={n}")
+
+    # --- profile lookup scaling --------------------------------------------
+    for m in (8, 64, 512, 4096):
+        ranges = [Range(i * 10, i * 10 + 9, f"alg{i % 5}") for i in range(m)]
+        prof = Profile(op="allreduce", axis_size=256, ranges=ranges)
+        store = ProfileStore([prof])
+        qs = np.random.default_rng(0).integers(0, m * 10, 10_000)
+        t0 = time.perf_counter()
+        for q in qs:
+            store.lookup("allreduce", 256, int(q))
+        dt = (time.perf_counter() - t0) / len(qs)
+        emit(f"lookup/M={m}", dt * 1e6, "O(log M) bisect")
+
+
+if __name__ == "__main__":
+    run()

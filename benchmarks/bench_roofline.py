@@ -1,0 +1,38 @@
+"""§Roofline table: read the dry-run artifacts and print per-cell terms.
+
+One row per (arch × shape × mesh): the three roofline terms, the dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPS, and the roofline fraction.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from benchmarks.common import emit
+
+DRYRUN = pathlib.Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+def run():
+    files = sorted(DRYRUN.glob("*.json")) if DRYRUN.exists() else []
+    if not files:
+        emit("roofline/missing", 0.0, "run: python -m repro.launch.dryrun")
+        return
+    for f in files:
+        d = json.loads(f.read_text())
+        key = f"roofline/{d['arch']}/{d['shape']}/{d['mesh']}"
+        if d["status"] != "ok":
+            emit(key, 0.0, d["status"])
+            continue
+        r = d["roofline"]
+        step_ms = max(float(r["t_compute"][:-2]), float(r["t_memory"][:-2]),
+                      float(r["t_collective"][:-2]))
+        emit(key, step_ms * 1e3,
+             f"bottleneck={r['bottleneck']}"
+             f" useful={r['useful_flops_ratio']}"
+             f" frac={r['roofline_fraction']}"
+             f" coll={d['collectives'].get('total_bytes', 0)}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,13 @@
+"""Shared helpers for the benchmark suite (CSV row emission)."""
+from __future__ import annotations
+
+ROWS: list[tuple[str, float, str]] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.4f},{derived}")
+
+
+def header():
+    print("name,us_per_call,derived")

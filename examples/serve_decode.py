@@ -1,0 +1,67 @@
+"""Serving example: prefill a batch of prompts, then batched greedy decode,
+with tuned collectives active.
+
+  PYTHONPATH=src python examples/serve_decode.py --arch gemma3-1b --tokens 24
+"""
+import argparse
+import pathlib
+import sys
+import time
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import api, costmodel, tuner
+from repro.models import lm
+from repro.models.params import init_tree
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3-1b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--tokens", type=int, default=24)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).smoke()
+    s_max = args.prompt_len + args.tokens + 8
+    profiles = tuner.tune(
+        axis_size=16,
+        backend=tuner.CostModelBackend(costmodel.V5E_ICI)).profiles
+
+    params = init_tree(lm.model_specs(cfg, tp=1), jax.random.key(0))
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len)),
+        jnp.int32)
+
+    decode = jax.jit(lambda p, t, c, i: lm.decode_step(p, cfg, t, c, i))
+
+    with api.tuned(profiles=profiles):
+        caches = lm.init_caches(cfg, args.batch, s_max)
+        t0 = time.time()
+        logits, caches = lm.prefill(params, cfg, {"tokens": prompts}, caches)
+        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        tok = tok % cfg.vocab_size
+        out = [tok]
+        for step in range(args.tokens - 1):
+            lg, caches = decode(params, tok, caches,
+                                jnp.int32(args.prompt_len + step))
+            tok = (jnp.argmax(lg[:, -1], axis=-1).astype(jnp.int32)[:, None]
+                   % cfg.vocab_size)
+            out.append(tok)
+        dt = time.time() - t0
+    gen = jnp.concatenate(out, axis=1)
+    print(f"arch={cfg.name} batch={args.batch} prompt={args.prompt_len} "
+          f"generated={gen.shape[1]} tokens in {dt:.2f}s "
+          f"({args.batch*gen.shape[1]/dt:.1f} tok/s on 1 CPU core)")
+    print("sample ids:", np.asarray(gen[0][:12]))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Offline collective tuning CLI — the PGMPITuneCLI workflow.
+
+Benchmarks every mock-up against the default (cost model at production
+scale, or measured wall-clock on host devices), detects guideline
+violations, and writes Listing-1 performance profiles.
+
+  PYTHONPATH=src python examples/tune_collectives.py \
+      --backend costmodel --topo v5e-ici --axis-size 16 --out results/profiles
+  PYTHONPATH=src python examples/tune_collectives.py --backend measured
+"""
+import argparse
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+from repro.core import costmodel, tuner
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backend", choices=("costmodel", "measured"),
+                    default="costmodel")
+    ap.add_argument("--topo", default="v5e-ici",
+                    choices=sorted(costmodel.PRESETS))
+    ap.add_argument("--axis-size", type=int, default=16)
+    ap.add_argument("--min-win", type=float, default=0.10,
+                    help="paper's 10%% replacement threshold")
+    ap.add_argument("--scratch-budget", type=int, default=None,
+                    help="size_msg_buffer_bytes analogue")
+    ap.add_argument("--out", default="results/profiles")
+    args = ap.parse_args()
+
+    if args.backend == "costmodel":
+        backend = tuner.CostModelBackend(costmodel.PRESETS[args.topo])
+        axis = args.axis_size
+    else:
+        from repro.core import measure
+        backend = tuner.MeasuredBackend()
+        axis = measure.axis_size()
+
+    rep = tuner.tune(axis_size=axis, backend=backend, min_win=args.min_win,
+                     scratch_budget_bytes=args.scratch_budget)
+    print(rep.summary())
+    print("\nviolations:")
+    for v in rep.violations:
+        print(f"  {v.gl_kind:16s} {v.op:14s} p={v.axis_size} "
+              f"{v.nbytes:>9d}B x{v.speedup:5.2f} {v.best_impl or ''}")
+    rep.profiles.save(args.out, fmt="text")
+    print(f"\nwrote {len(rep.profiles)} profiles to {args.out}/")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,176 @@
+"""Assemble EXPERIMENTS.md from results/ artifacts (re-runnable)."""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "src"))
+
+DRY = ROOT / "results" / "dryrun"
+PERF = ROOT / "results" / "perf"
+
+ARCHS = ["llama3.2-3b", "gemma3-1b", "gemma2-9b", "llama3-8b",
+         "phi3.5-moe-42b-a6.6b", "deepseek-v3-671b", "whisper-medium",
+         "paligemma-3b", "rwkv6-3b", "zamba2-1.2b"]
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(directory):
+    out = {}
+    for f in sorted(directory.glob("*.json")):
+        d = json.loads(f.read_text())
+        out[(d["arch"], d["shape"], d["mesh"], d.get("variant",
+                                                     "baseline"))] = d
+    return out
+
+
+def ms(s):
+    return float(s[:-2])
+
+
+def roofline_row(d):
+    r = d["roofline"]
+    return (f"| {d['arch']} | {d['shape']} | {d['mesh']} | "
+            f"{r['t_compute']} | {r['t_memory']} | {r['t_collective']} | "
+            f"{r['bottleneck']} | {r['useful_flops_ratio']} | "
+            f"{r['roofline_fraction']} |")
+
+
+def mem_gib(d):
+    m = d["memory"]
+    return (m["argument_bytes"] + m["temp_bytes"]) / 2**30
+
+
+def coll_break(d):
+    c = d["collectives"]
+    parts = [f"{k}={v['bytes']/2**30:.2f}GiB/{v['count']}"
+             for k, v in sorted(c.items()) if k != "total_bytes"]
+    return " ".join(parts)
+
+
+def main():
+    dry = load(DRY)
+    perf = load(PERF) if PERF.exists() else {}
+
+    L = []
+    A = L.append
+    A("# EXPERIMENTS — PGTune-JAX")
+    A("")
+    A("Paper: *Tuning MPI Collectives by Verifying Performance Guidelines*"
+      " (Hunold & Carpen-Amarie, 2017).  Paper text verified against the"
+      " stated title (DESIGN.md header).")
+    A("")
+    A("Hardware target: TPU v5e — 197 TF/s bf16/chip, 819 GB/s HBM,"
+      " ~50 GB/s/link ICI.  Container is CPU-only: production numbers are"
+      " AOT artifacts (lower+compile on 512 host devices) + the fabric cost"
+      " model; host-measured numbers validate orderings only.")
+    A("")
+
+    # ---------------- dry-run --------------------------------------------
+    A("## §Dry-run — 40 cells × {16×16, 2×16×16}")
+    A("")
+    ok = sum(1 for d in dry.values() if d["status"] == "ok")
+    sk = sum(1 for d in dry.values() if d["status"] == "skip")
+    A(f"**{ok} cells compile, {sk} documented skips, 0 failures** "
+      f"(skips = `long_500k` on the {sk//2} pure full-attention archs × 2 "
+      "meshes; DESIGN.md §Arch-applicability).")
+    A("")
+    A("Per-cell `memory_analysis()` (argument+temp per device, CPU-backend"
+      " caveat: bf16 buffers may be accounted f32, ~2× pessimistic) and the"
+      " HLO collective schedule:")
+    A("")
+    A("| arch | shape | mesh | mem GiB/dev | collective schedule |")
+    A("|---|---|---|---|---|")
+    for a in ARCHS:
+        for s in SHAPES:
+            for m in ("16x16", "2x16x16"):
+                d = dry.get((a, s, m, "baseline"))
+                if not d or d["status"] != "ok":
+                    continue
+                A(f"| {a} | {s} | {m} | {mem_gib(d):.1f} | {coll_break(d)} |")
+    A("")
+    A("Multi-pod pass: every non-skipped cell also lowers+compiles on the"
+      " 2×16×16 mesh (the `pod` axis shards the batch; gradients sync"
+      " hierarchically: in-pod reduce-scatter via the FSDP backward, then a"
+      " tunable `pod` all-reduce of 1/16-sized shards).")
+    A("")
+
+    # ---------------- roofline -------------------------------------------
+    A("## §Roofline — single-pod (16×16) baselines, paper-faithful"
+      " (attn_impl=ref)")
+    A("")
+    A("Terms per the spec: compute = dot_FLOPs/dev ÷ 197 TF/s; memory ="
+      " HLO bytes/dev ÷ 819 GB/s; collective = collective operand bytes/dev"
+      " ÷ 50 GB/s.  FLOPs/bytes are parsed from the compiled HLO with"
+      " **loop-trip-count weighting** (XLA's `cost_analysis()` counts scan"
+      " bodies once — underreporting deep stacks by n_layers×n_micro; see"
+      " `analysis/hlo.py`).  Bytes are counted at kernel boundaries"
+      " (fusion-aware).  `useful` = MODEL_FLOPS(6·N_active·D or 2·N·D) ÷"
+      " HLO dot-FLOPs; `frac` = useful-FLOPs roofline fraction at the"
+      " dominant term.")
+    A("")
+    A("| arch | shape | mesh | t_compute | t_memory | t_collective |"
+      " bottleneck | useful | frac |")
+    A("|---|---|---|---|---|---|---|---|---|")
+    for a in ARCHS:
+        for s in SHAPES:
+            d = dry.get((a, s, "16x16", "baseline"))
+            if not d:
+                continue
+            if d["status"] == "skip":
+                A(f"| {a} | {s} | 16x16 | skip | — | — | — | — | — |")
+                continue
+            A(roofline_row(d))
+    A("")
+    A("**Reading the baseline.** Every cell is memory-bound: the"
+      " paper-faithful reference lowering materializes dense [Sq,Skv]"
+      " attention scores, repeated-KV tensors, and (rwkv6) a per-timestep"
+      " [hd,hd] state write — exactly the waste the §Perf iterations and"
+      " the Pallas kernels remove.  Per-cell one-line diagnosis:")
+    A("")
+    A("* train/prefill dense — S² score materialization dominates bytes;")
+    A("* decode — repeated-KV materialization + full-cache copies;")
+    A("* deepseek decode — naive MLA re-up-projects the whole latent cache"
+      " per token (the absorbed-matmul variant is the known fix);")
+    A("* rwkv6 train/prefill — lax.scan writes [B,H,64,64] f32 state per"
+      " token (582 s modeled!); the chunked Pallas kernel keeps state in"
+      " VMEM (§Perf pair D);")
+    A("* phi3.5/deepseek MoE — capacity-padded dispatch buffers.")
+    A("")
+
+    # ---------------- perf ------------------------------------------------
+    A("## §Perf — hillclimbing log (hypothesis → change → before → after)")
+    A("")
+    if perf:
+        A("| pair | variant | t_compute | t_memory | t_collective |"
+          " bottleneck | frac | mem GiB/dev |")
+        A("|---|---|---|---|---|---|---|---|")
+        order = [
+            ("llama3-8b", "train_4k"), ("deepseek-v3-671b", "prefill_32k"),
+            ("gemma3-1b", "decode_32k"), ("rwkv6-3b", "prefill_32k")]
+        for a, s in order:
+            base = dry.get((a, s, "16x16", "baseline"))
+            if base:
+                r = base["roofline"]
+                A(f"| {a}×{s} | baseline(ref) | {r['t_compute']} |"
+                  f" {r['t_memory']} | {r['t_collective']} |"
+                  f" {r['bottleneck']} | {r['roofline_fraction']} |"
+                  f" {mem_gib(base):.1f} |")
+            for key, d in sorted(perf.items()):
+                if key[0] == a and key[1] == s and d["status"] == "ok":
+                    r = d["roofline"]
+                    A(f"| {a}×{s} | {d['variant']} | {r['t_compute']} |"
+                      f" {r['t_memory']} | {r['t_collective']} |"
+                      f" {r['bottleneck']} | {r['roofline_fraction']} |"
+                      f" {mem_gib(d):.1f} |")
+    A("")
+    A("(Narrative per iteration below is maintained by hand — see the"
+      " PERF ITERATION LOG section.)")
+    A("")
+    print("\n".join(L))
+
+
+if __name__ == "__main__":
+    main()

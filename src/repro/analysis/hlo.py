@@ -1,0 +1,319 @@
+"""HLO text analysis: collective payload bytes per op class.
+
+``cost_analysis()`` does not report collective traffic, so we parse the
+compiled module text: build a symbol table (instruction name -> result
+bytes), then for every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute sum the byte sizes of its OPERANDS (the
+spec'd convention for the roofline's collective term).
+
+Instructions inside ``while`` (scan) bodies execute once per iteration —
+multiply by the loop trip count.  Trip counts are recovered from the
+canonical XLA pattern (compare against a constant in the loop condition).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\(?[^)]*?\)?"
+                       r"[\w\[\],\s{}:#\*]*?)\s+([\w\-]+)\(")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Bytes of an HLO result type (sums tuple elements)."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-op-class operand bytes (and call counts), weighted by loop trip
+    counts.  Returns {"all-gather": {"bytes": int, "count": int}, ...,
+    "total_bytes": int}."""
+    sizes: dict[str, int] = {}
+    # pass 1: symbol table over all computations
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, type_str, _op = m.groups()
+        sizes[name] = _shape_bytes(type_str)
+
+    # pass 2: computation trip counts (while bodies)
+    comp_mult = _loop_multipliers(hlo_text)
+
+    out: dict[str, dict] = defaultdict(lambda: {"bytes": 0, "count": 0})
+    current_comp = ""
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        if _is_header(ls):
+            current_comp = _header_name(ls)
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, _type_str, op = m.groups()
+        if op.rstrip("-start") not in COLLECTIVES and op not in COLLECTIVES:
+            continue
+        # operand list = %refs in the parens, excluding the instr itself
+        paren = line[line.index(op) + len(op):]
+        operands = [o for o in _OPERAND_RE.findall(paren)
+                    if o in sizes and o != name]
+        b = sum(sizes[o] for o in operands)
+        mult = comp_mult.get(current_comp, 1)
+        key = op[:-6] if op.endswith("-start") else op
+        out[key]["bytes"] += b * mult
+        out[key]["count"] += mult
+
+    result = {k: dict(v) for k, v in out.items()}
+    result["total_bytes"] = sum(v["bytes"] for v in out.values())
+    return result
+
+
+_DOT_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+
+def _shape_dims(type_str: str) -> list[tuple[str, list[int]]]:
+    """[(dtype, dims), ...] for every array in an HLO type string."""
+    out = []
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        out.append((dt, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def program_costs(hlo_text: str) -> dict:
+    """Trip-count-aware program costs parsed from HLO text.
+
+    XLA's ``compiled.cost_analysis()`` counts each ``while`` (scan) body
+    ONCE; layer-scans and microbatch-scans therefore undercount by the trip
+    product.  This walks every computation, accumulates
+
+      * dot_flops — 2 · |out| · |contraction| per dot (matmul-dominated LM
+        programs; elementwise flops are excluded and documented),
+      * bytes     — operand + result bytes per instruction (un-fused upper
+        bound of HBM traffic),
+
+    and weights each computation by its loop-trip multiplier.
+    """
+    # symbol table: name -> (bytes, dims-of-first-array)
+    sizes: dict[str, int] = {}
+    dims: dict[str, list[int]] = {}
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, type_str, _op = m.groups()
+        sizes[name] = _shape_bytes(type_str)
+        arr = _shape_dims(type_str)
+        dims[name] = arr[0][1] if arr else []
+
+    comp_mult = _loop_multipliers(hlo_text)
+    comps = _split_computations(hlo_text)
+
+    # bytes are accumulated only at KERNEL boundaries: instructions in the
+    # entry computation and while (scan) bodies.  Fusion bodies / reduce
+    # regions are the INSIDE of fused kernels — counting them would treat
+    # every fused elementwise op as HBM traffic.
+    kernel_comps = set()
+    for m in re.finditer(r"condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)",
+                         hlo_text):
+        kernel_comps.update(m.groups())
+    entry = re.search(r"^ENTRY\s+%?([\w\.\-]+)", hlo_text, re.M)
+    if entry:
+        kernel_comps.add(entry.group(1).rstrip("{").strip())
+    for c in comps:
+        if c.startswith("main") or c.endswith("_spmd"):
+            kernel_comps.add(c)
+
+    total_flops = 0.0
+    total_bytes = 0.0
+    by_op: dict[str, float] = defaultdict(float)
+    per_comp: dict[str, dict] = {}
+    # while/conditional pass carries by reference — their bodies are counted
+    skip_ops = {"parameter", "constant", "tuple", "get-tuple-element",
+                "bitcast", "copy", "while", "conditional", "after-all"}
+
+    # fusions whose root is a dynamic-update-slice update their big operand
+    # IN PLACE on real hardware (loop-carried/donated buffers): traffic is
+    # the touched region, not the whole buffer.
+    dus_fusions = set()
+    zero_fusions = set()      # pure dtype-convert: fuses into MXU consumers
+    move_fusions = set()      # pure data movement: one pass over the output
+    slice_fusions = set()     # slice + elementwise: operand reads capped
+    _ZERO = {"parameter", "constant", "convert", "bitcast", "reshape",
+             "tuple", "get-tuple-element", "copy"}
+    _MOVE = _ZERO | {"transpose", "broadcast", "dynamic-slice", "slice",
+                     "concatenate", "pad"}
+    for m in re.finditer(r"calls=%?([\w\.\-]+)", hlo_text):
+        cname = m.group(1)
+        body = comps.get(cname, "")
+        if "dynamic-update-slice" in body:
+            dus_fusions.add(cname)
+            continue
+        ops_in = set()
+        for ln in body.splitlines():
+            mm = _INSTR_RE.match(ln)
+            if mm:
+                ops_in.add(mm.group(3))
+        if ops_in and ops_in <= _ZERO:
+            zero_fusions.add(cname)
+        elif ops_in and ops_in <= _MOVE:
+            move_fusions.add(cname)
+        elif ({"dynamic-slice", "slice", "gather"} & ops_in
+                and not {"reduce", "dot", "reduce-window"} & ops_in):
+            # slices big operands: reads are slice-sized, not buffer-sized
+            slice_fusions.add(cname)
+    for comp, body in comps.items():
+        mult = comp_mult.get(comp, 1)
+        count_bytes = comp in kernel_comps
+        f = 0.0
+        b = 0.0
+        for line in body.splitlines():
+            m = _INSTR_RE.match(line)
+            if not m:
+                continue
+            name, type_str, op = m.groups()
+            if op in skip_ops:
+                continue
+            out_b = _shape_bytes(type_str)
+            paren = line[line.index(op) + len(op):]
+            operands = [o for o in _OPERAND_RE.findall(paren)
+                        if o in sizes and o != name]
+            if count_bytes:
+                if op in ("dynamic-slice", "slice", "gather"):
+                    # reads only the slice, not the operand buffer
+                    db = 2 * out_b
+                elif op == "dynamic-update-slice":
+                    # in-place read-modify-write of the update region
+                    upd = sizes.get(operands[1], out_b) if len(
+                        operands) > 1 else out_b
+                    db = 2 * upd
+                elif op == "fusion":
+                    called = re.search(r"calls=%?([\w\.\-]+)", line)
+                    cname = called.group(1) if called else ""
+                    aliasable = any(sizes[o] == out_b for o in operands)
+                    if cname in dus_fusions and aliasable:
+                        # in-place cache update: touched region only
+                        db = 2 * sum(sizes[o] for o in operands
+                                     if sizes[o] < out_b)
+                    elif cname in zero_fusions:
+                        # dtype converts feeding dots: native on the MXU
+                        db = 0
+                    elif cname in move_fusions:
+                        db = 2 * out_b
+                    elif cname in slice_fusions:
+                        db = out_b + sum(min(sizes[o], out_b)
+                                         for o in operands)
+                    else:
+                        db = out_b + sum(sizes[o] for o in operands)
+                else:
+                    db = out_b + sum(sizes[o] for o in operands)
+                b += db
+                by_op[op] += db * mult
+            if op == "dot":
+                arrs = _shape_dims(type_str)
+                out_elems = 1
+                for d in (arrs[0][1] if arrs else []):
+                    out_elems *= d
+                cm = _DOT_CONTRACT_RE.search(line)
+                contract = 1
+                if cm and operands:
+                    lhs_dims = dims.get(operands[0], [])
+                    for di in cm.group(1).split(","):
+                        if di and int(di) < len(lhs_dims):
+                            contract *= lhs_dims[int(di)]
+                f += 2.0 * out_elems * contract
+        per_comp[comp] = {"mult": mult, "dot_flops": f, "bytes": b}
+        total_flops += f * mult
+        total_bytes += b * mult
+
+    return {"dot_flops": total_flops, "bytes": total_bytes,
+            "computations": len(per_comp),
+            "bytes_by_op": dict(sorted(by_op.items(),
+                                       key=lambda kv: -kv[1])[:10])}
+
+
+def _loop_multipliers(hlo_text: str) -> dict[str, int]:
+    """computation name -> estimated executions (scan trip counts).
+
+    Heuristic: for every while op, find the trip count from the condition
+    computation's `constant(N)` compare; attribute it to the body
+    computation's name.  Nested scans multiply."""
+    # map condition/body comp -> while instruction line
+    body_of_while: dict[str, str] = {}
+    cond_of_while: dict[str, str] = {}
+    for m in re.finditer(
+            r"while\([^)]*\),\s*condition=%?([\w\.\-]+),\s*body=%?"
+            r"([\w\.\-]+)", hlo_text):
+        cond, body = m.groups()
+        body_of_while[body] = cond
+        cond_of_while[body] = cond
+
+    # trip count per condition computation: look for compare with constant
+    comp_bodies = _split_computations(hlo_text)
+    trips: dict[str, int] = {}
+    for body, cond in cond_of_while.items():
+        text = comp_bodies.get(cond, "")
+        consts = [int(x) for x in re.findall(
+            r"constant\((\d+)\)", text)]
+        trips[body] = max(consts) if consts else 1
+
+    # nested scan multiplication: if a body computation contains a while
+    # whose body is another computation, multiply (one level is enough for
+    # our stacks: layer-scan x microbatch-scan)
+    mult = dict(trips)
+    for body, n in trips.items():
+        text = comp_bodies.get(body, "")
+        for m in re.finditer(r"body=%?([\w\.\-]+)", text):
+            inner = m.group(1)
+            if inner in mult:
+                mult[inner] = mult[inner] * n
+    return mult
+
+
+def _is_header(s: str) -> bool:
+    """Computation header: '%name (sig) -> type {' (may contain /*index*/
+    comments); instruction lines never END with '{'."""
+    return s.endswith("{") and ("->" in s or s.startswith("ENTRY")) and \
+        (s.startswith("%") or s.startswith("ENTRY"))
+
+
+def _header_name(s: str) -> str:
+    tok = s.split()[0]
+    if tok == "ENTRY":
+        tok = s.split()[1]
+    return tok.lstrip("%").rstrip("{").strip()
+
+
+def _split_computations(hlo_text: str) -> dict[str, str]:
+    comps: dict[str, list[str]] = {}
+    cur = None
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if _is_header(s):
+            cur = _header_name(s)
+            comps[cur] = []
+        elif cur is not None:
+            comps[cur].append(line)
+            if s == "}":
+                cur = None
+    return {k: "\n".join(v) for k, v in comps.items()}

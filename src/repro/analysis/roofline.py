@@ -1,0 +1,104 @@
+"""Roofline terms from a compiled dry-run artifact (TPU v5e constants).
+
+    compute    = HLO_FLOPs_per_device / peak_FLOPs          (197 TF/s bf16)
+    memory     = HLO_bytes_per_device / HBM_bw              (819 GB/s)
+    collective = collective_bytes_per_device / link_bw      (~50 GB/s/link)
+
+``cost_analysis()`` describes the per-device SPMD module, i.e. the spec's
+"HLO_FLOPs / chips".  MODEL_FLOPS uses 6·N·D (dense) or 6·N_active·D (MoE)
+for training, 2·N·D for single forward programs.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # B/s / chip
+LINK_BW = 50e9               # B/s / link
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: float
+    model_flops_per_device: float
+    t_compute: float = 0.0
+    t_memory: float = 0.0
+    t_collective: float = 0.0
+    bottleneck: str = ""
+    useful_ratio: float = 0.0
+
+    def finish(self) -> "Roofline":
+        self.t_compute = self.flops_per_device / PEAK_FLOPS
+        self.t_memory = self.bytes_per_device / HBM_BW
+        self.t_collective = self.collective_bytes_per_device / LINK_BW
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        self.bottleneck = max(terms, key=terms.get)
+        self.useful_ratio = (self.model_flops_per_device /
+                             self.flops_per_device
+                             if self.flops_per_device else 0.0)
+        return self
+
+    @property
+    def step_time_bound(self) -> float:
+        """Lower bound on step time (no overlap assumption: max of terms)."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the compute roofline the USEFUL model flops achieve
+        if the dominant term is fully utilized (the §Perf score)."""
+        if self.step_time_bound == 0:
+            return 0.0
+        return (self.model_flops_per_device / PEAK_FLOPS) / \
+            self.step_time_bound
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "flops/dev": f"{self.flops_per_device:.3e}",
+            "bytes/dev": f"{self.bytes_per_device:.3e}",
+            "coll_bytes/dev": f"{self.collective_bytes_per_device:.3e}",
+            "t_compute": f"{self.t_compute*1e3:.2f}ms",
+            "t_memory": f"{self.t_memory*1e3:.2f}ms",
+            "t_collective": f"{self.t_collective*1e3:.2f}ms",
+            "bottleneck": self.bottleneck,
+            "useful_flops_ratio": f"{self.useful_ratio:.3f}",
+            "roofline_fraction": f"{self.roofline_fraction:.3f}",
+        }
+
+
+def model_flops(cfg, cell, n_devices: int) -> float:
+    """6·N_active·D training / 2·N_active·D forward, per device."""
+    n_active = cfg.active_param_count()
+    if cell.kind == "train":
+        tokens = cell.global_batch * cell.seq_len
+        total = 6.0 * n_active * tokens
+    elif cell.kind == "prefill":
+        tokens = cell.global_batch * cell.seq_len
+        total = 2.0 * n_active * tokens
+    else:  # decode: one token per sequence
+        total = 2.0 * n_active * cell.global_batch
+    return total / n_devices
+
+
+def roofline_terms(arch: str, shape: str, mesh_name: str, *, cost: dict,
+                   coll: dict, cfg, cell, n_devices: int,
+                   flops_override: float | None = None,
+                   bytes_override: float | None = None) -> Roofline:
+    flops = float(flops_override if flops_override
+                  else cost.get("flops", 0.0))
+    byts = float(bytes_override if bytes_override
+                 else cost.get("bytes accessed", 0.0))
+    return Roofline(
+        arch=arch, shape=shape, mesh=mesh_name,
+        flops_per_device=flops,
+        bytes_per_device=byts,
+        collective_bytes_per_device=float(coll.get("total_bytes", 0)),
+        model_flops_per_device=model_flops(cfg, cell, n_devices),
+    ).finish()

@@ -1,0 +1,2 @@
+from repro.ckpt.checkpoint import (AsyncCheckpointer, latest_step,  # noqa: F401
+                                   restore, save)

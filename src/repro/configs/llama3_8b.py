@@ -1,0 +1,10 @@
+"""llama3-8b [dense] — 32L d=4096 32H (GQA kv=8) ff=14336 V=128256.
+[arXiv:2407.21783; unverified]"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama3-8b", family="dense",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8,
+    d_ff=14336, vocab_size=128_256, head_dim=128,
+    rope_theta=500_000.0, tie_embeddings=False,
+)

@@ -1,0 +1,15 @@
+"""repro.core — guideline-based collective autotuning (the paper's library).
+
+Public surface:
+
+* ``repro.core.api``         — dispatching collective entry points
+* ``repro.core.collectives`` — default + mock-up implementations (GL1-22)
+* ``repro.core.guidelines``  — guideline registry / Table-1 memory model
+* ``repro.core.costmodel``   — α-β-γ fabric model (v5e ICI / DCN presets)
+* ``repro.core.profiles``    — performance profiles (Listing-1 format)
+* ``repro.core.tuner``       — offline tuning pass
+* ``repro.core.nrep``        — NREP estimation (Alg. 1 / Eq. 1)
+"""
+from repro.core import api  # noqa: F401
+from repro.core.api import tuned  # noqa: F401
+from repro.core.profiles import Profile, ProfileStore, Range  # noqa: F401

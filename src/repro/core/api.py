@@ -1,0 +1,197 @@
+"""The dispatching collective API — the PGMPITuneLib "PMPI layer".
+
+All framework code (dist/, models/, train/) calls these entry points instead
+of raw ``jax.lax`` collectives.  Selection order per call:
+
+1. explicit ``impl=`` argument              (unit tests, hillclimbing)
+2. context ``force`` table                  (PGMPITuneCLI ``--module=op:alg=x``)
+3. ``PGTUNE_MODULE`` environment variable   (same syntax as the paper's CLI)
+4. loaded performance profiles              (PGMPITuneD online redirection)
+5. the default implementation
+
+Dispatch happens at TRACE time: JAX shapes are static, so the profile's
+O(log M) binary search runs while tracing and the compiled program contains
+only the winning algorithm — zero runtime overhead (an improvement over the
+paper's runtime hash+bsearch, see DESIGN.md §2).
+
+The context also carries the scratch budget (the paper's
+``size_msg_buffer_bytes``): a mock-up whose Table-1 extra memory exceeds the
+budget is not applied, exactly like PGMPITuneLib refusing replacements when
+the user-controlled buffer is too small.
+
+Every dispatch is recorded; ``format_footer()`` emits the paper's Listing-2
+``#@pgmpi alg <op> <bytes> <impl>`` trailer.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import os
+import threading
+
+from repro.core import collectives as C
+from repro.core._axis import axis_size
+from repro.core.profiles import OP_TO_MPI, ProfileStore
+
+_TLS = threading.local()
+
+
+@dataclasses.dataclass
+class TuneContext:
+    profiles: ProfileStore | None = None
+    force: dict[str, str] = dataclasses.field(default_factory=dict)
+    scratch_budget_bytes: int | None = None
+    record: list[tuple[str, int, int, str]] = dataclasses.field(
+        default_factory=list)  # (op, axis_size, nbytes, impl)
+    chunk_bytes: int = 0
+
+
+def _ctx() -> TuneContext | None:
+    return getattr(_TLS, "ctx", None)
+
+
+@contextlib.contextmanager
+def tuned(profiles: ProfileStore | None = None,
+          force: dict[str, str] | None = None,
+          scratch_budget_bytes: int | None = None,
+          chunk_bytes: int = 0):
+    """Activate tuning for every ``repro.core.api`` collective issued inside.
+
+    ``force`` maps op name -> impl name (the CLI library's static selection);
+    ``profiles`` is the PGMPITuneD mode.  Without either, defaults are used
+    but calls are still recorded.
+    """
+    prev = _ctx()
+    ctx = TuneContext(profiles=profiles, force=dict(force or {}),
+                      scratch_budget_bytes=scratch_budget_bytes,
+                      chunk_bytes=chunk_bytes)
+    _TLS.ctx = ctx
+    try:
+        yield ctx
+    finally:
+        _TLS.ctx = prev
+
+
+def parse_module_spec(spec: str) -> dict[str, str]:
+    """Parse the paper's ``--module=allgather:alg=allgather_as_gather_bcast``
+    syntax (';'-separated for multiple ops)."""
+    out: dict[str, str] = {}
+    for part in spec.split(";"):
+        part = part.strip()
+        if not part:
+            continue
+        op, _, alg = part.partition(":")
+        key, _, val = alg.partition("=")
+        if key != "alg" or not val:
+            raise ValueError(f"bad module spec {part!r}")
+        out[op.strip()] = val.strip()
+    return out
+
+
+def _env_force() -> dict[str, str]:
+    spec = os.environ.get("PGTUNE_MODULE", "")
+    return parse_module_spec(spec) if spec else {}
+
+
+def _payload_bytes(x) -> int:
+    return int(x.size) * x.dtype.itemsize
+
+
+def _select(op: str, x, axis: str, impl: str | None) -> str:
+    ctx = _ctx()
+    p = axis_size(axis)
+    nbytes = _payload_bytes(x)
+    name = impl
+    if name is None and ctx is not None and op in ctx.force:
+        name = ctx.force[op]
+    if name is None:
+        env = _env_force()
+        if op in env:
+            name = env[op]
+    if name is None and ctx is not None and ctx.profiles is not None:
+        name = ctx.profiles.lookup(op, p, nbytes)
+    if name is None:
+        name = "default"
+    cand = C.REGISTRY[op].get(name)
+    if cand is None:
+        raise KeyError(f"unknown impl {name!r} for op {op!r}")
+    # pow2 guard + scratch budget (paper's size_msg_buffer_bytes semantics)
+    if cand.requires_pow2 and (p & (p - 1)) != 0:
+        name, cand = "default", C.REGISTRY[op]["default"]
+    if (ctx is not None and ctx.scratch_budget_bytes is not None
+            and name != "default"
+            and cand.extra_bytes(nbytes, p) > ctx.scratch_budget_bytes):
+        name, cand = "default", C.REGISTRY[op]["default"]
+    if ctx is not None:
+        ctx.record.append((op, p, nbytes, name))
+    return name
+
+
+def _dispatch(op: str, x, axis: str, impl: str | None, **kw):
+    name = _select(op, x, axis, impl)
+    fn = C.REGISTRY[op][name].fn
+    ctx = _ctx()
+    if ctx is not None and ctx.chunk_bytes and "chunk" not in kw:
+        itemsize = x.dtype.itemsize
+        kw["chunk"] = max(1, ctx.chunk_bytes // itemsize)
+    return fn(x, axis, **kw)
+
+
+# -- public entry points -----------------------------------------------------
+
+def allgather(x, axis: str, *, impl: str | None = None):
+    return _dispatch("allgather", x, axis, impl)
+
+
+def allreduce(x, axis: str, *, impl: str | None = None, **kw):
+    return _dispatch("allreduce", x, axis, impl, **kw)
+
+
+def reducescatter(x, axis: str, *, impl: str | None = None):
+    return _dispatch("reducescatter", x, axis, impl)
+
+
+def alltoall(x, axis: str, *, impl: str | None = None):
+    return _dispatch("alltoall", x, axis, impl)
+
+
+def bcast(x, axis: str, *, root: int = 0, impl: str | None = None):
+    return _dispatch("bcast", x, axis, impl, root=root)
+
+
+def gather(x, axis: str, *, root: int = 0, impl: str | None = None):
+    return _dispatch("gather", x, axis, impl, root=root)
+
+
+def scatter(x, axis: str, *, root: int = 0, impl: str | None = None):
+    return _dispatch("scatter", x, axis, impl, root=root)
+
+
+def reduce(x, axis: str, *, root: int = 0, impl: str | None = None, **kw):
+    return _dispatch("reduce", x, axis, impl, root=root, **kw)
+
+
+def scan(x, axis: str, *, op: str = "add", impl: str | None = None):
+    return _dispatch("scan", x, axis, impl, op=op)
+
+
+def exscan(x, axis: str, *, op: str = "add", impl: str | None = None):
+    return _dispatch("exscan", x, axis, impl, op=op)
+
+
+def format_footer(ctx: TuneContext) -> str:
+    """The paper's Listing-2 footer: which algorithm served each call."""
+    lines = []
+    seen = set()
+    for op, p, nbytes, name in ctx.record:
+        key = (op, p, nbytes, name)
+        if key in seen:
+            continue
+        seen.add(key)
+        mpi = OP_TO_MPI.get(op, op)
+        label = "default" if name == "default" else name
+        lines.append(f"#@pgmpi alg {mpi} {nbytes} {label}")
+    if ctx.scratch_budget_bytes is not None:
+        lines.append(
+            f"#@pgmpi config size_msg_buffer_bytes {ctx.scratch_budget_bytes}")
+    return "\n".join(lines)

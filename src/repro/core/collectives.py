@@ -1,0 +1,720 @@
+"""Collective implementations: defaults + guideline mock-ups (GL1-GL22 + ⊕).
+
+This is the PGMPITuneLib mock-up catalog re-derived for the ``jax.lax``
+collective vocabulary (see DESIGN.md §3).  Every function here operates on
+*per-shard* arrays inside ``shard_map`` (or ``vmap(axis_name=...)`` in the
+semantic tests) and communicates over a single named mesh axis.
+
+Conventions (axis size ``p``, per-shard payload ``n`` rows along dim 0):
+
+=============== =============================== ===========================
+op              input (per shard)               output (per shard)
+=============== =============================== ===========================
+allgather       ``[n, ...]``                    ``[p*n, ...]``
+allreduce       ``[n, ...]``                    ``[n, ...]`` (sum over axis)
+reducescatter   ``[p*n, ...]``                  ``[n, ...]``
+alltoall        ``[p*n, ...]``                  ``[p*n, ...]``
+bcast           ``[n, ...]``                    ``[n, ...]`` (root's values)
+gather          ``[n, ...]``                    ``[p*n, ...]`` (valid on root)
+scatter         ``[p*n, ...]`` (valid on root)  ``[n, ...]``
+reduce          ``[n, ...]``                    ``[n, ...]`` (valid on root)
+scan            ``[n, ...]``                    inclusive prefix over ranks
+exscan          ``[n, ...]``                    exclusive prefix over ranks
+=============== =============================== ===========================
+
+Rooted collectives have no TPU/XLA primitive; their "default" is the
+composition XLA itself would pick (documented per op).  "valid on root"
+means only the root shard's output is part of the contract; non-root
+shards may receive the full result (superset semantics) or zeros.
+
+Irregular ("v") emulations attach the paper's ``2pI`` count/displacement
+metadata as a real (tiny) collective kept alive through
+``lax.optimization_barrier`` so its cost stays visible in the HLO.
+
+MOCK-UPS CALL CONCRETE SUB-IMPLEMENTATIONS, NEVER THE DISPATCHER — exactly
+as PGMPITuneLib mock-ups call ``PMPI_*`` (library defaults), not the
+intercepted entry points.  This rules out recursive re-tuning.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core._axis import (axis_index, axis_size, pshift, ring_perm,
+                              shift_perm)
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+
+def _n_rows(x) -> int:
+    return int(x.shape[0])
+
+
+def _pad_rows(x, n_pad: int):
+    """Zero-pad dim 0 of ``x`` up to ``n_pad`` rows."""
+    n = _n_rows(x)
+    if n_pad == n:
+        return x
+    pad = [(0, n_pad - n)] + [(0, 0)] * (x.ndim - 1)
+    return jnp.pad(x, pad)
+
+
+def _one_hot_place(x, axis: str, scale: int = 1):
+    """Place ``x`` at row-offset ``axis_index*n`` inside a ``p*n`` zero buffer
+    (the paper's GL3/GL13 "p-times-larger send buffer").  Additive placement
+    replaces the paper's MPI_BOR (identical result, MXU/float friendly)."""
+    p = axis_size(axis)
+    n = _n_rows(x)
+    buf = jnp.zeros((p * n,) + x.shape[1:], x.dtype)
+    idx = axis_index(axis)
+    return lax.dynamic_update_slice(buf, x, (idx * n,) + (0,) * (x.ndim - 1))
+
+
+def _v_metadata(x, axis: str):
+    """The irregular-collective count/displacement exchange: ``2p`` ints of
+    metadata all-gathered over the axis (Table 1's ``2pI`` term)."""
+    n = _n_rows(x)
+    meta = jnp.stack(  # (count, displ)
+        [jnp.int32(n), (n * axis_index(axis)).astype(jnp.int32)])
+    return lax.all_gather(meta, axis, axis=0, tiled=True)
+
+
+def _attach(y, meta):
+    """Keep the metadata exchange alive in the HLO (prevent DCE) without
+    touching the payload values."""
+    y, _ = lax.optimization_barrier((y, meta))
+    return y
+
+
+def _rel(idx, root: int, p: int):
+    """Rank relative to a static root (binomial schedules)."""
+    if root == 0:
+        return idx
+    return (idx - root) % p
+
+
+def _abs_perm(rel_pairs, root: int, p: int):
+    """Map relative-rank (src, dst) pairs to absolute ranks."""
+    if root == 0:
+        return rel_pairs
+    return [((s + root) % p, (d + root) % p) for (s, d) in rel_pairs]
+
+
+def _is_pow2(p: int) -> bool:
+    return p & (p - 1) == 0
+
+
+# ---------------------------------------------------------------------------
+# defaults (what an untuned lowering would emit)
+# ---------------------------------------------------------------------------
+
+
+def allgather_default(x, axis: str, **_):
+    return lax.all_gather(x, axis, axis=0, tiled=True)
+
+
+def allreduce_default(x, axis: str, **_):
+    return lax.psum(x, axis)
+
+
+def reducescatter_default(x, axis: str, **_):
+    return lax.psum_scatter(x, axis, scatter_dimension=0, tiled=True)
+
+
+def alltoall_default(x, axis: str, **_):
+    return lax.all_to_all(x, axis, split_axis=0, concat_axis=0, tiled=True)
+
+
+def bcast_as_psum(x, axis: str, *, root: int = 0, **_):
+    """XLA's canonical broadcast-from-root: select + all-reduce."""
+    idx = axis_index(axis)
+    return lax.psum(jnp.where(idx == root, x, jnp.zeros_like(x)), axis)
+
+
+def gather_as_allgather(x, axis: str, *, root: int = 0, **_):
+    """(GL11) root-gather served by all-gather; non-roots get a superset."""
+    del root
+    return lax.all_gather(x, axis, axis=0, tiled=True)
+
+
+def scatter_as_alltoall(x, axis: str, *, root: int = 0, **_):
+    """Default scatter: mask non-root buffers, all-to-all, keep segment root.
+    Single primitive; moves p*n where a tree scatter moves n*(p-1)/p·log p."""
+    idx = axis_index(axis)
+    xz = jnp.where(idx == root, x, jnp.zeros_like(x))
+    y = lax.all_to_all(xz, axis, split_axis=0, concat_axis=0, tiled=True)
+    n = _n_rows(x) // axis_size(axis)
+    return lax.slice_in_dim(y, root * n, (root + 1) * n, axis=0)
+
+
+def reduce_as_allreduce(x, axis: str, *, root: int = 0, **_):
+    """(GL14) rooted reduce served by psum; non-roots ignore the result."""
+    del root
+    return lax.psum(x, axis)
+
+
+def scan_default(x, axis: str, *, op: str = "add", **_):
+    """Inclusive prefix over ranks — Hillis–Steele with log2(p) ppermutes."""
+    p = axis_size(axis)
+    idx = axis_index(axis)
+    y = x
+    d = 1
+    while d < p:
+        shifted = pshift(y, axis, shift_perm(p, d))
+        if op == "add":
+            y = y + shifted  # ppermute zero-fill is the additive identity
+        elif op == "max":
+            y = jnp.where(idx >= d, jnp.maximum(y, shifted), y)
+        else:
+            raise ValueError(f"unsupported scan op {op!r}")
+        d *= 2
+    return y
+
+
+def exscan_default(x, axis: str, *, op: str = "add", **_):
+    """Exclusive prefix: shift inputs one rank up, then inclusive scan."""
+    p = axis_size(axis)
+    shifted = pshift(x, axis, shift_perm(p, 1))
+    if op == "max":
+        idx = axis_index(axis)
+        neg = jnp.full_like(x, -jnp.inf if jnp.issubdtype(x.dtype, jnp.floating)
+                            else jnp.iinfo(x.dtype).min)
+        shifted = jnp.where(idx == 0, neg, shifted)
+    return scan_default(shifted, axis, op=op)
+
+
+# ---------------------------------------------------------------------------
+# MPI_Allgather mock-ups
+# ---------------------------------------------------------------------------
+
+
+def allgather_as_gather_bcast(x, axis: str, **_):
+    """(GL1) Gather + Bcast."""
+    g = gather_as_allgather(x, axis, root=0)
+    return bcast_as_psum(g, axis, root=0)
+
+
+def allgather_as_alltoall(x, axis: str, **_):
+    """(GL2) p-times replicated send buffer, then all-to-all."""
+    p = axis_size(axis)
+    reps = (p,) + (1,) * (x.ndim - 1)
+    big = jnp.tile(x, reps)
+    return lax.all_to_all(big, axis, split_axis=0, concat_axis=0, tiled=True)
+
+
+def allgather_as_allreduce(x, axis: str, **_):
+    """(GL3) one-hot placement into a p·n zero buffer, then all-reduce."""
+    return lax.psum(_one_hot_place(x, axis), axis)
+
+
+def allgather_as_allgatherv(x, axis: str, **_):
+    """(GL4) irregular emulation: counts/displs metadata + padded gather."""
+    meta = _v_metadata(x, axis)
+    y = lax.all_gather(x, axis, axis=0, tiled=True)
+    return _attach(y, meta)
+
+
+def allgather_as_ring(x, axis: str, **_):
+    """(⊕) (p-1)-step neighbour ring — ICI-local traffic only (the
+    BlueGene/Q-style topology-native schedule the paper could not inject)."""
+    p = axis_size(axis)
+    n = _n_rows(x)
+    idx = axis_index(axis)
+    buf = _one_hot_place(x, axis)
+    cur = x
+    for s in range(1, p):
+        cur = pshift(cur, axis, ring_perm(p, 1))
+        src = (idx - s) % p  # originating rank of the block received now
+        buf = lax.dynamic_update_slice(
+            buf, cur, (src * n,) + (0,) * (x.ndim - 1))
+    return buf
+
+
+def allgather_as_doubling(x, axis: str, **_):
+    """(⊕) recursive doubling: log2(p) rounds, partner i XOR d.  Requires a
+    power-of-two axis; the registry guards this."""
+    p = axis_size(axis)
+    assert _is_pow2(p), "recursive doubling needs power-of-two axis"
+    buf = _one_hot_place(x, axis)
+    d = 1
+    while d < p:
+        pairs = [(i, i ^ d) for i in range(p)]
+        buf = buf + pshift(buf, axis, pairs)
+        d *= 2
+    return buf
+
+
+# ---------------------------------------------------------------------------
+# MPI_Allreduce mock-ups
+# ---------------------------------------------------------------------------
+
+
+def allreduce_as_reduce_bcast(x, axis: str, **_):
+    """(GL5) Reduce + Bcast through the library defaults."""
+    r = reduce_as_allreduce(x, axis, root=0)
+    return bcast_as_psum(r, axis, root=0)
+
+
+def allreduce_as_tree_reduce_bcast(x, axis: str, **_):
+    """(⊕/GL5-variant) binomial-tree Reduce + binomial-tree Bcast — the
+    schedule an MPI library's 'nonoverlapping' algorithm uses (Fig. 7)."""
+    r = reduce_as_tree(x, axis, root=0)
+    return bcast_as_tree(r, axis, root=0)
+
+
+def allreduce_as_rsb_allgather(x, axis: str, **_):
+    """(GL6) Reduce_scatter_block + Allgather (ring / Rabenseifner).  Pads
+    n up to a multiple of p (the paper's "small c for padding")."""
+    p = axis_size(axis)
+    n = _n_rows(x)
+    n_pad = -(-n // p) * p
+    xp = _pad_rows(x, n_pad)
+    rs = lax.psum_scatter(xp, axis, scatter_dimension=0, tiled=True)
+    y = lax.all_gather(rs, axis, axis=0, tiled=True)
+    return lax.slice_in_dim(y, 0, n, axis=0)
+
+
+def allreduce_as_rs_allgatherv(x, axis: str, *, chunk: int = 1, **_):
+    """(GL7) Reduce_scatter + Allgatherv with round-robin chunks of size
+    ``chunk`` (the paper's C) — the Fig.-7 winner.  Emulated with chunk-
+    aligned padding + the 2pI metadata exchange."""
+    p = axis_size(axis)
+    n = _n_rows(x)
+    c = max(1, min(int(chunk), n))
+    k = -(-(-(-n // c)) // p)  # ceil(ceil(n/c)/p) chunks per rank
+    n_pad = p * k * c
+    xp = _pad_rows(x, n_pad)
+    meta = _v_metadata(x, axis)
+    rs = lax.psum_scatter(xp, axis, scatter_dimension=0, tiled=True)
+    y = lax.all_gather(rs, axis, axis=0, tiled=True)
+    return _attach(lax.slice_in_dim(y, 0, n, axis=0), meta)
+
+
+def allreduce_as_doubling(x, axis: str, **_):
+    """(⊕) recursive-doubling all-reduce: log2(p)·(α + nβ) — latency-optimal
+    for small payloads where the ring's 2(p-1)α dominates."""
+    p = axis_size(axis)
+    assert _is_pow2(p), "recursive doubling needs power-of-two axis"
+    y = x
+    d = 1
+    while d < p:
+        y = y + pshift(y, axis, [(i, i ^ d) for i in range(p)])
+        d *= 2
+    return y
+
+
+# ---------------------------------------------------------------------------
+# MPI_Alltoall mock-ups
+# ---------------------------------------------------------------------------
+
+
+def alltoall_as_alltoallv(x, axis: str, **_):
+    """(GL8) irregular emulation: metadata + padded all-to-all."""
+    meta = _v_metadata(x, axis)
+    y = lax.all_to_all(x, axis, split_axis=0, concat_axis=0, tiled=True)
+    return _attach(y, meta)
+
+
+def alltoall_as_ppermute(x, axis: str, **_):
+    """(⊕) (p-1) shifted-ring rounds; latency-regime alternative to the
+    bisection-limited monolithic all-to-all."""
+    p = axis_size(axis)
+    n = _n_rows(x) // p
+    idx = axis_index(axis)
+    zeros = (0,) * (x.ndim - 1)
+    out = jnp.zeros_like(x)
+    # my own chunk stays in place
+    own = lax.dynamic_slice(x, (idx * n,) + zeros, (n,) + x.shape[1:])
+    out = lax.dynamic_update_slice(out, own, (idx * n,) + zeros)
+    for s in range(1, p):
+        dst = (idx + s) % p
+        piece = lax.dynamic_slice(x, (dst * n,) + zeros, (n,) + x.shape[1:])
+        recv = pshift(piece, axis, ring_perm(p, s))
+        src = (idx - s) % p
+        out = lax.dynamic_update_slice(out, recv, (src * n,) + zeros)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# MPI_Bcast mock-ups
+# ---------------------------------------------------------------------------
+
+
+def bcast_as_allgatherv(x, axis: str, *, root: int = 0, **_):
+    """(GL9) root contributes n, everyone else 0, via allgatherv: emulated as
+    masked all-gather + static segment select + metadata."""
+    idx = axis_index(axis)
+    n = _n_rows(x)
+    xz = jnp.where(idx == root, x, jnp.zeros_like(x))
+    meta = _v_metadata(x, axis)
+    y = lax.all_gather(xz, axis, axis=0, tiled=True)
+    return _attach(lax.slice_in_dim(y, root * n, (root + 1) * n, axis=0), meta)
+
+
+def bcast_as_scatter_allgather(x, axis: str, *, root: int = 0, **_):
+    """(GL10) Scatter + Allgather (van de Geijn) — bandwidth-optimal large-
+    message broadcast.  Pads n to a multiple of p."""
+    p = axis_size(axis)
+    n = _n_rows(x)
+    n_pad = -(-n // p) * p
+    xp = _pad_rows(x, n_pad)
+    sc = scatter_as_alltoall(xp, axis, root=root)
+    y = lax.all_gather(sc, axis, axis=0, tiled=True)
+    return lax.slice_in_dim(y, 0, n, axis=0)
+
+
+def bcast_as_tree(x, axis: str, *, root: int = 0, **_):
+    """(⊕) binomial-tree broadcast: ceil(log2 p) ppermute rounds."""
+    p = axis_size(axis)
+    idx = axis_index(axis)
+    y = jnp.where(idx == root, x, jnp.zeros_like(x))
+    d = 1
+    while d < p:
+        rel_pairs = [(r, r + d) for r in range(d) if r + d < p]
+        y = y + pshift(y, axis, _abs_perm(rel_pairs, root, p))
+        d *= 2
+    return y
+
+
+# ---------------------------------------------------------------------------
+# MPI_Gather mock-ups
+# ---------------------------------------------------------------------------
+
+
+def gather_as_gatherv(x, axis: str, *, root: int = 0, **_):
+    """(GL12) irregular emulation: metadata + gather; non-roots zeroed to
+    keep rooted semantics observable."""
+    meta = _v_metadata(x, axis)
+    y = lax.all_gather(x, axis, axis=0, tiled=True)
+    idx = axis_index(axis)
+    y = jnp.where(idx == root, y, jnp.zeros_like(y))
+    return _attach(y, meta)
+
+
+def gather_as_reduce(x, axis: str, *, root: int = 0, **_):
+    """(GL13) one-hot placement + rooted reduce (additive ≡ the paper's BOR
+    on disjoint supports)."""
+    return reduce_as_allreduce(_one_hot_place(x, axis), axis, root=root)
+
+
+def gather_as_tree(x, axis: str, *, root: int = 0, **_):
+    """(⊕) binomial-tree gather on a p·n zero-merged buffer."""
+    p = axis_size(axis)
+    idx = axis_index(axis)
+    rel = _rel(idx, root, p)
+    del rel  # merge is positional; masking handled by zero-fill
+    y = _one_hot_place(x, axis)
+    d = 1
+    while d < p:
+        rel_pairs = [(r + d, r) for r in range(0, p, 2 * d) if r + d < p]
+        y = y + pshift(y, axis, _abs_perm(rel_pairs, root, p))
+        d *= 2
+    return y
+
+
+# ---------------------------------------------------------------------------
+# MPI_Reduce mock-ups
+# ---------------------------------------------------------------------------
+
+
+def reduce_as_rsb_gather(x, axis: str, *, root: int = 0, **_):
+    """(GL15) Reduce_scatter_block + Gather (padded)."""
+    p = axis_size(axis)
+    n = _n_rows(x)
+    n_pad = -(-n // p) * p
+    xp = _pad_rows(x, n_pad)
+    rs = lax.psum_scatter(xp, axis, scatter_dimension=0, tiled=True)
+    y = gather_as_allgather(rs, axis, root=root)
+    return lax.slice_in_dim(y, 0, n, axis=0)
+
+
+def reduce_as_rs_gatherv(x, axis: str, *, root: int = 0, chunk: int = 1, **_):
+    """(GL16) chunked Reduce_scatter + Gatherv (paper's C, metadata cost)."""
+    p = axis_size(axis)
+    n = _n_rows(x)
+    c = max(1, min(int(chunk), n))
+    k = -(-(-(-n // c)) // p)
+    n_pad = p * k * c
+    xp = _pad_rows(x, n_pad)
+    meta = _v_metadata(x, axis)
+    rs = lax.psum_scatter(xp, axis, scatter_dimension=0, tiled=True)
+    y = gather_as_allgather(rs, axis, root=root)
+    return _attach(lax.slice_in_dim(y, 0, n, axis=0), meta)
+
+
+def reduce_as_tree(x, axis: str, *, root: int = 0, **_):
+    """(⊕) binomial-tree reduce to root: log2(p) rounds."""
+    p = axis_size(axis)
+    y = x
+    d = 1
+    while d < p:
+        rel_pairs = [(r + d, r) for r in range(0, p, 2 * d) if r + d < p]
+        y = y + pshift(y, axis, _abs_perm(rel_pairs, root, p))
+        d *= 2
+    return y
+
+
+# ---------------------------------------------------------------------------
+# MPI_Reduce_scatter_block mock-ups
+# ---------------------------------------------------------------------------
+
+
+def rsb_as_reduce_scatter(x, axis: str, **_):
+    """(GL17) Reduce + Scatter through the defaults."""
+    r = reduce_as_allreduce(x, axis, root=0)
+    return scatter_as_alltoall(r, axis, root=0)
+
+
+def rsb_as_reduce_scatter_irr(x, axis: str, **_):
+    """(GL18) irregular reduce_scatter emulation: metadata + psum_scatter."""
+    meta = _v_metadata(x, axis)
+    y = lax.psum_scatter(x, axis, scatter_dimension=0, tiled=True)
+    return _attach(y, meta)
+
+
+def rsb_as_allreduce(x, axis: str, **_):
+    """(GL19) Allreduce + keep my block."""
+    p = axis_size(axis)
+    n = _n_rows(x) // p
+    y = lax.psum(x, axis)
+    idx = axis_index(axis)
+    return lax.dynamic_slice(
+        y, (idx * n,) + (0,) * (x.ndim - 1), (n,) + x.shape[1:])
+
+
+# ---------------------------------------------------------------------------
+# MPI_Scan mock-ups
+# ---------------------------------------------------------------------------
+
+
+def scan_as_exscan_reducelocal(x, axis: str, *, op: str = "add", **_):
+    """(GL20) Exscan + local reduction."""
+    ex = exscan_default(x, axis, op=op)
+    if op == "add":
+        return ex + x
+    if op == "max":
+        return jnp.maximum(ex, x)
+    raise ValueError(f"unsupported scan op {op!r}")
+
+
+# ---------------------------------------------------------------------------
+# MPI_Scatter mock-ups
+# ---------------------------------------------------------------------------
+
+
+def scatter_as_bcast(x, axis: str, *, root: int = 0, **_):
+    """(GL21) Bcast the whole buffer + local slice."""
+    p = axis_size(axis)
+    n = _n_rows(x) // p
+    y = bcast_as_psum(x, axis, root=root)
+    idx = axis_index(axis)
+    return lax.dynamic_slice(
+        y, (idx * n,) + (0,) * (x.ndim - 1), (n,) + x.shape[1:])
+
+
+def scatter_as_scatterv(x, axis: str, *, root: int = 0, **_):
+    """(GL22) irregular emulation: metadata + scatter."""
+    meta = _v_metadata(x, axis)
+    return _attach(scatter_as_alltoall(x, axis, root=root), meta)
+
+
+def scatter_as_tree(x, axis: str, *, root: int = 0, **_):
+    """(⊕) binomial-tree scatter: root halves its range every round."""
+    p = axis_size(axis)
+    assert _is_pow2(p), "tree scatter needs power-of-two axis"
+    n = _n_rows(x) // p
+    idx = axis_index(axis)
+    rel = _rel(idx, root, p)
+    zeros = (0,) * (x.ndim - 1)
+    # rotate into relative-rank layout so tree ranges stay contiguous;
+    # rank rel r finally reads chunk (r+root)%p == its absolute chunk.
+    y = jnp.roll(x, -root * n, axis=0)
+    y = jnp.where(idx == root, y, jnp.zeros_like(y))
+    d = p // 2
+    while d >= 1:
+        rel_pairs = [(r, r + d) for r in range(0, p, 2 * d)]
+        send = lax.dynamic_slice(
+            y, ((rel + d) % p * n,) + zeros, (d * n,) + x.shape[1:])
+        recv = pshift(send, axis, _abs_perm(rel_pairs, root, p))
+        keep = lax.dynamic_slice(y, (rel * n,) + zeros, (d * n,) + x.shape[1:])
+        y = lax.dynamic_update_slice(y, keep + recv, (rel * n,) + zeros)
+        d //= 2
+    return lax.dynamic_slice(y, (rel * n,) + zeros, (n,) + x.shape[1:])
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Impl:
+    """One algorithm for one logical collective."""
+    name: str
+    op: str
+    fn: Callable
+    guideline: str | None  # "GL<k>", "EXT" (⊕), or None for the default
+    # extra scratch bytes(payload_bytes, p) — the Table-1 memory model.
+    extra_bytes: Callable[[int, int], int]
+    requires_pow2: bool = False
+    desc: str = ""
+
+    def __call__(self, x, axis, **kw):
+        return self.fn(x, axis, **kw)
+
+
+_I = 4  # extent of an int32 "MPI_INT" (Table 1's I)
+
+
+def _nb0(nbytes: int, p: int) -> int:  # no extra memory
+    del nbytes, p
+    return 0
+
+
+def _reg() -> dict[str, dict[str, Impl]]:
+    def mk(name, op, fn, gl, extra, pow2=False, desc=""):
+        return Impl(name, op, fn, gl, extra, pow2, desc)
+
+    r: dict[str, dict[str, Impl]] = {}
+
+    r["allgather"] = {i.name: i for i in [
+        mk("default", "allgather", allgather_default, None, _nb0,
+           desc="lax.all_gather (XLA ring)"),
+        mk("allgather_as_gather_bcast", "allgather", allgather_as_gather_bcast,
+           "GL1", _nb0),
+        mk("allgather_as_alltoall", "allgather", allgather_as_alltoall,
+           "GL2", lambda n, p: p * n, desc="p× larger send buffer"),
+        mk("allgather_as_allreduce", "allgather", allgather_as_allreduce,
+           "GL3", lambda n, p: p * n, desc="p× larger send buffer"),
+        mk("allgather_as_allgatherv", "allgather", allgather_as_allgatherv,
+           "GL4", lambda n, p: 2 * p * _I, desc="displs+recvcounts"),
+        mk("allgather_as_ring", "allgather", allgather_as_ring,
+           "EXT", lambda n, p: p * n),
+        mk("allgather_as_doubling", "allgather", allgather_as_doubling,
+           "EXT", lambda n, p: p * n, pow2=True),
+    ]}
+
+    r["allreduce"] = {i.name: i for i in [
+        mk("default", "allreduce", allreduce_default, None, _nb0,
+           desc="lax.psum"),
+        mk("allreduce_as_reduce_bcast", "allreduce", allreduce_as_reduce_bcast,
+           "GL5", _nb0),
+        mk("allreduce_as_tree_reduce_bcast", "allreduce",
+           allreduce_as_tree_reduce_bcast, "EXT", _nb0,
+           desc="binomial reduce+bcast ('nonoverlapping')"),
+        mk("allreduce_as_rsb_allgather", "allreduce",
+           allreduce_as_rsb_allgather, "GL6",
+           lambda n, p: (n + p) + (n + p) // p, desc="padded RS + AG"),
+        mk("allreduce_as_rs_allgatherv", "allreduce",
+           allreduce_as_rs_allgatherv, "GL7",
+           lambda n, p: max(n // p + 1, 1) + 2 * p * _I,
+           desc="chunked RS + AGv (Fig.7 winner)"),
+        mk("allreduce_as_doubling", "allreduce", allreduce_as_doubling,
+           "EXT", _nb0, pow2=True, desc="recursive doubling (latency-opt)"),
+    ]}
+
+    r["alltoall"] = {i.name: i for i in [
+        mk("default", "alltoall", alltoall_default, None, _nb0,
+           desc="lax.all_to_all"),
+        mk("alltoall_as_alltoallv", "alltoall", alltoall_as_alltoallv,
+           "GL8", lambda n, p: 2 * p * _I),
+        mk("alltoall_as_ppermute", "alltoall", alltoall_as_ppermute,
+           "EXT", lambda n, p: n),
+    ]}
+
+    r["bcast"] = {i.name: i for i in [
+        mk("default", "bcast", bcast_as_psum, None, _nb0,
+           desc="select + all-reduce (XLA canonical)"),
+        mk("bcast_as_allgatherv", "bcast", bcast_as_allgatherv,
+           "GL9", lambda n, p: 2 * p * _I + n),
+        mk("bcast_as_scatter_allgather", "bcast", bcast_as_scatter_allgather,
+           "GL10", lambda n, p: (n + p) + (n + p) // p,
+           desc="van de Geijn"),
+        mk("bcast_as_tree", "bcast", bcast_as_tree, "EXT", _nb0,
+           desc="binomial tree"),
+    ]}
+
+    r["gather"] = {i.name: i for i in [
+        mk("default", "gather", gather_as_allgather, None,
+           lambda n, p: p * n, desc="all_gather; non-roots superset"),
+        mk("gather_as_allgather", "gather", gather_as_allgather,
+           "GL11", lambda n, p: p * n),
+        mk("gather_as_gatherv", "gather", gather_as_gatherv,
+           "GL12", lambda n, p: 2 * p * _I),
+        mk("gather_as_reduce", "gather", gather_as_reduce,
+           "GL13", lambda n, p: p * n, desc="one-hot + reduce"),
+        mk("gather_as_tree", "gather", gather_as_tree,
+           "EXT", lambda n, p: p * n),
+    ]}
+
+    r["reduce"] = {i.name: i for i in [
+        mk("default", "reduce", reduce_as_allreduce, None,
+           lambda n, p: n, desc="psum; non-roots superset"),
+        mk("reduce_as_allreduce", "reduce", reduce_as_allreduce,
+           "GL14", lambda n, p: n),
+        mk("reduce_as_rsb_gather", "reduce", reduce_as_rsb_gather,
+           "GL15", lambda n, p: (n + p) + (n + p) // p),
+        mk("reduce_as_rs_gatherv", "reduce", reduce_as_rs_gatherv,
+           "GL16", lambda n, p: max(n // p + 1, 1) + 2 * p * _I),
+        mk("reduce_as_tree", "reduce", reduce_as_tree, "EXT", _nb0),
+    ]}
+
+    r["reducescatter"] = {i.name: i for i in [
+        mk("default", "reducescatter", reducescatter_default, None, _nb0,
+           desc="lax.psum_scatter"),
+        mk("rsb_as_reduce_scatter", "reducescatter", rsb_as_reduce_scatter,
+           "GL17", lambda n, p: n, desc="reduce + scatter"),
+        mk("rsb_as_reduce_scatter_irr", "reducescatter",
+           rsb_as_reduce_scatter_irr, "GL18", lambda n, p: p * _I),
+        mk("rsb_as_allreduce", "reducescatter", rsb_as_allreduce,
+           "GL19", lambda n, p: n),
+    ]}
+
+    r["scan"] = {i.name: i for i in [
+        mk("default", "scan", scan_default, None, _nb0,
+           desc="Hillis-Steele over ppermute"),
+        mk("scan_as_exscan_reducelocal", "scan", scan_as_exscan_reducelocal,
+           "GL20", _nb0),
+    ]}
+
+    r["exscan"] = {i.name: i for i in [
+        mk("default", "exscan", exscan_default, None, _nb0),
+    ]}
+
+    r["scatter"] = {i.name: i for i in [
+        mk("default", "scatter", scatter_as_alltoall, None, _nb0,
+           desc="masked all_to_all + segment select"),
+        mk("scatter_as_bcast", "scatter", scatter_as_bcast,
+           "GL21", lambda n, p: n, desc="bcast + local slice"),
+        mk("scatter_as_scatterv", "scatter", scatter_as_scatterv,
+           "GL22", lambda n, p: 2 * p * _I),
+        mk("scatter_as_tree", "scatter", scatter_as_tree,
+           "EXT", _nb0, pow2=True),
+    ]}
+
+    return r
+
+
+REGISTRY: dict[str, dict[str, Impl]] = _reg()
+
+OPS = tuple(REGISTRY.keys())
+
+
+def get_impl(op: str, name: str | None = None) -> Impl:
+    table = REGISTRY[op]
+    return table[name or "default"]
+
+
+def impl_names(op: str, *, include_default: bool = True) -> list[str]:
+    names = list(REGISTRY[op].keys())
+    if not include_default:
+        names = [n for n in names if n != "default"]
+    return names

@@ -1,0 +1,315 @@
+"""α-β-γ latency model for collective algorithms on TPU interconnects.
+
+The paper benchmarks mock-ups on real clusters; this container is CPU-only,
+so production-scale tuning decisions come from an analytic latency model of
+the target fabric (TPU v5e ICI 2-D torus per pod; DCN across pods), with the
+measured-latency backend (``core.measure``) validating *orderings* on host
+devices.
+
+Model: a mesh axis is a 1-D bidirectional ring (an ICI torus dimension) or a
+DCN star.  Per-message cost α + B·β per hop, reduction γ per byte.  Formulas
+are the textbook schedules (Chan et al. 2007, the paper's [3]):
+
+  ring all-gather      (p-1)·α + (p-1)·B·β                  (B = per-shard bytes)
+  recursive doubling   log2(p)·α + (p-1)·B·β
+  ring reduce-scatter  (p-1)·α + (p-1)/p·Bt·(β+γ)           (Bt = total bytes)
+  ring all-reduce      2(p-1)·α + 2(p-1)/p·Bt·β + (p-1)/p·Bt·γ
+  binomial tree        ceil(log2 p)·(α + B·β) (+γ for reduce)
+  ring all-to-all      (p-1)·α + p·Bt·β/8      (bisection-limited, bidir ring)
+
+``default_pricing`` selects what the *untuned* library is assumed to emit:
+
+* ``"optimal"`` — XLA-like: defaults already use the best ring schedules.
+  Used for roofline/§Perf work (honest baseline).
+* ``"naive"``   — a mediocre vendor library: tree-based defaults sized for
+  latency, no bandwidth-optimal paths.  Used to reproduce the paper's
+  violation studies (the JUQUEEN/IBM-MPI situation).
+
+``hw_bcast`` models platform broadcast acceleration (BlueGene/Q's HW bcast,
+the reason GL1/GL21 violations dominate Fig. 5): tree bcast latency term is
+divided by ``hw_bcast_speedup``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from repro.core.collectives import REGISTRY
+
+# ---------------------------------------------------------------------------
+# fabric presets
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Topo:
+    """One mesh-axis fabric."""
+    name: str
+    alpha: float            # per-message latency (s)
+    link_bw: float          # per-link bandwidth (B/s), one direction
+    gamma: float            # reduction cost (s/B) — HBM-bound vector add
+    bidir: bool = True      # ring usable in both directions
+    default_pricing: str = "optimal"   # "optimal" | "naive"
+    hw_bcast: bool = False
+    hw_bcast_speedup: float = 5.0
+
+    @property
+    def beta(self) -> float:
+        return 1.0 / self.link_bw
+
+
+# v5e: ~50 GB/s per ICI link/direction, ~1 µs collective start, reductions
+# run at HBM speed (819 GB/s read+write ≈ 2.4e-12 s/B effective).
+V5E_ICI = Topo("v5e-ici", alpha=1.0e-6, link_bw=50e9, gamma=2.5e-12)
+# cross-pod DCN: ~10x latency, ~4x less bandwidth per host link.
+V5E_DCN = Topo("v5e-dcn", alpha=10.0e-6, link_bw=12.5e9, gamma=2.5e-12)
+# "mediocre vendor library on a machine with HW broadcast" — the JUQUEEN-like
+# setting for reproducing the paper's violation tables.
+BGQ_LIKE = Topo("bgq-like", alpha=2.0e-6, link_bw=2e9, gamma=4e-12,
+                default_pricing="naive", hw_bcast=True)
+
+PRESETS = {t.name: t for t in (V5E_ICI, V5E_DCN, BGQ_LIKE)}
+
+
+def _log2c(p: int) -> int:
+    return max(1, math.ceil(math.log2(max(p, 2))))
+
+
+def _is_pow2(p: int) -> bool:
+    return p & (p - 1) == 0
+
+
+# ---------------------------------------------------------------------------
+# primitive schedule costs.  B = bytes "per shard sent" in the op's natural
+# convention (documented per formula).
+# ---------------------------------------------------------------------------
+
+
+def t_ring_allgather(p, B, t: Topo):
+    """B = per-shard contribution bytes; output p·B."""
+    return (p - 1) * t.alpha + (p - 1) * B * t.beta
+
+
+def t_doubling_allgather(p, B, t: Topo):
+    return _log2c(p) * t.alpha + (p - 1) * B * t.beta
+
+
+def t_ring_reduce_scatter(p, Bt, t: Topo):
+    """Bt = total buffer bytes (p·chunk)."""
+    return (p - 1) * t.alpha + (p - 1) / p * Bt * (t.beta + t.gamma)
+
+
+def t_ring_allreduce(p, Bt, t: Topo):
+    return (2 * (p - 1) * t.alpha
+            + 2 * (p - 1) / p * Bt * t.beta
+            + (p - 1) / p * Bt * t.gamma)
+
+
+def t_doubling_allreduce(p, Bt, t: Topo):
+    return _log2c(p) * (t.alpha + Bt * t.beta + Bt * t.gamma)
+
+
+def t_tree(p, B, t: Topo, *, reduce: bool = False, bcast: bool = False):
+    """Binomial tree; B bytes move each round."""
+    a = t.alpha
+    if bcast and t.hw_bcast:
+        a = a / t.hw_bcast_speedup
+    per = a + B * t.beta + (B * t.gamma if reduce else 0.0)
+    return _log2c(p) * per
+
+
+def t_tree_scatter_gather(p, Bt, t: Topo):
+    """Binomial scatter/gather: log p rounds, halving/doubling payload;
+    total bytes ≈ Bt·(p-1)/p."""
+    return _log2c(p) * t.alpha + (p - 1) / p * Bt * t.beta
+
+
+def t_ring_alltoall(p, Bt, t: Topo):
+    """Bt = per-shard buffer (p chunks).  Bisection-limited on a bidirectional
+    ring: byte-hops ≈ Bt·p/4, 2 links per node ⇒ Bt·p·β/8."""
+    div = 8.0 if t.bidir else 4.0
+    return (p - 1) * t.alpha + p * Bt * t.beta / div
+
+
+def t_meta(p, t: Topo):
+    """The 2p·I count/displacement exchange of the 'v' emulations."""
+    return t_ring_allgather(p, 8, t)
+
+
+def t_linear_rooted(p, B, t: Topo, *, reduce: bool = False):
+    """Naive rooted gather/scatter/reduce: root talks to p-1 peers serially."""
+    per = t.alpha + B * t.beta + (B * t.gamma if reduce else 0.0)
+    return (p - 1) * per
+
+
+# ---------------------------------------------------------------------------
+# per-impl latency.  ``nbytes`` is the byte size of the op's *input* per-shard
+# array (dim-0 rows × row bytes) — the same key the dispatcher uses.
+# ---------------------------------------------------------------------------
+
+
+def latency(op: str, impl: str, p: int, nbytes: int, topo: Topo,
+            *, chunk_bytes: int = 0) -> float:
+    """Modeled latency (seconds) of one ``impl`` of ``op`` on an axis of size
+    ``p``.  Compositions are priced as the sum of the sub-implementations
+    they actually lower to (see collectives.py)."""
+    if p <= 1:
+        return 0.0
+    B = float(max(nbytes, 1))
+    naive = topo.default_pricing == "naive"
+
+    def dflt_allgather(Bv):
+        if naive:
+            # linear gather + tree bcast of the full buffer
+            return (t_linear_rooted(p, Bv, topo)
+                    + t_tree(p, p * Bv, topo, bcast=True))
+        return t_ring_allgather(p, Bv, topo)
+
+    def dflt_allreduce(Bv):
+        if naive:
+            return (t_tree(p, Bv, topo, reduce=True)
+                    + t_tree(p, Bv, topo, bcast=True))
+        return t_ring_allreduce(p, Bv, topo)
+
+    def dflt_reducescatter(Bt):
+        if naive:
+            return (t_tree(p, Bt, topo, reduce=True)
+                    + t_linear_rooted(p, Bt / p, topo))
+        return t_ring_reduce_scatter(p, Bt, topo)
+
+    def dflt_alltoall(Bt):
+        if naive:
+            return t_linear_rooted(p, Bt / p, topo) * 2
+        return t_ring_alltoall(p, Bt, topo)
+
+    def dflt_bcast(Bv):
+        # default bcast is select+psum (XLA canonical)
+        return dflt_allreduce(Bv)
+
+    def dflt_gather(Bv):
+        if naive:                          # mediocre vendor: linear rooted
+            return t_linear_rooted(p, Bv, topo)
+        return dflt_allgather(Bv)          # gather served by all-gather
+
+    def dflt_scatter(Bt):
+        if naive:
+            return t_linear_rooted(p, Bt / p, topo)
+        return dflt_alltoall(Bt)           # scatter served by all-to-all
+
+    def dflt_reduce(Bv):
+        if naive:
+            return t_linear_rooted(p, Bv, topo, reduce=True)
+        return dflt_allreduce(Bv)          # reduce served by psum
+
+    def scan_cost(Bv):
+        return _log2c(p) * (topo.alpha + Bv * topo.beta + Bv * topo.gamma)
+
+    ag, ar, rs, a2a = (dflt_allgather, dflt_allreduce, dflt_reducescatter,
+                       dflt_alltoall)
+
+    table = {
+        # ---- allgather (B = per-shard contribution) ----
+        ("allgather", "default"): lambda: ag(B),
+        ("allgather", "allgather_as_gather_bcast"):
+            lambda: dflt_gather(B) + dflt_bcast(p * B),
+        ("allgather", "allgather_as_alltoall"): lambda: a2a(p * B),
+        ("allgather", "allgather_as_allreduce"): lambda: ar(p * B),
+        ("allgather", "allgather_as_allgatherv"):
+            lambda: ag(B) + t_meta(p, topo),
+        ("allgather", "allgather_as_ring"):
+            lambda: t_ring_allgather(p, B, topo),
+        ("allgather", "allgather_as_doubling"):
+            lambda: t_doubling_allgather(p, B, topo),
+        # ---- allreduce (B = buffer bytes) ----
+        ("allreduce", "default"): lambda: ar(B),
+        ("allreduce", "allreduce_as_reduce_bcast"):
+            lambda: dflt_reduce(B) + dflt_bcast(B),
+        ("allreduce", "allreduce_as_tree_reduce_bcast"):
+            lambda: (t_tree(p, B, topo, reduce=True)
+                     + t_tree(p, B, topo, bcast=True)),
+        ("allreduce", "allreduce_as_rsb_allgather"):
+            lambda: (t_ring_reduce_scatter(p, B, topo)
+                     + t_ring_allgather(p, B / p, topo)),
+        ("allreduce", "allreduce_as_rs_allgatherv"):
+            lambda: (t_ring_reduce_scatter(p, _pad(B, p, chunk_bytes), topo)
+                     + t_ring_allgather(p, _pad(B, p, chunk_bytes) / p, topo)
+                     + t_meta(p, topo)),
+        ("allreduce", "allreduce_as_doubling"):
+            lambda: t_doubling_allreduce(p, B, topo),
+        # ---- alltoall (B = per-shard buffer, p chunks) ----
+        ("alltoall", "default"): lambda: a2a(B),
+        ("alltoall", "alltoall_as_alltoallv"):
+            lambda: a2a(B) + t_meta(p, topo),
+        ("alltoall", "alltoall_as_ppermute"):
+            lambda: (p - 1) * topo.alpha + p * B * topo.beta / (
+                8.0 if topo.bidir else 4.0),
+        # ---- bcast (B = payload) ----
+        ("bcast", "default"): lambda: dflt_bcast(B),
+        ("bcast", "bcast_as_allgatherv"):
+            lambda: ag(B) + t_meta(p, topo),
+        ("bcast", "bcast_as_scatter_allgather"):
+            lambda: (t_tree_scatter_gather(p, B, topo)
+                     + t_ring_allgather(p, B / p, topo)),
+        ("bcast", "bcast_as_tree"):
+            lambda: t_tree(p, B, topo, bcast=True),
+        # ---- gather (B = per-shard contribution) ----
+        ("gather", "default"): lambda: dflt_gather(B),
+        ("gather", "gather_as_allgather"): lambda: t_ring_allgather(p, B, topo),
+        ("gather", "gather_as_gatherv"):
+            lambda: dflt_gather(B) + t_meta(p, topo),
+        ("gather", "gather_as_reduce"): lambda: dflt_reduce(p * B),
+        ("gather", "gather_as_tree"):
+            lambda: t_tree_scatter_gather(p, p * B, topo),
+        # ---- reduce (B = buffer bytes) ----
+        ("reduce", "default"): lambda: dflt_reduce(B),
+        ("reduce", "reduce_as_allreduce"): lambda: t_ring_allreduce(p, B, topo),
+        ("reduce", "reduce_as_rsb_gather"):
+            lambda: (t_ring_reduce_scatter(p, B, topo)
+                     + t_ring_allgather(p, B / p, topo)),
+        ("reduce", "reduce_as_rs_gatherv"):
+            lambda: (t_ring_reduce_scatter(p, _pad(B, p, chunk_bytes), topo)
+                     + t_ring_allgather(p, _pad(B, p, chunk_bytes) / p, topo)
+                     + t_meta(p, topo)),
+        ("reduce", "reduce_as_tree"):
+            lambda: t_tree(p, B, topo, reduce=True),
+        # ---- reducescatter (B = total buffer bytes, p chunks) ----
+        ("reducescatter", "default"): lambda: rs(B),
+        ("reducescatter", "rsb_as_reduce_scatter"):
+            lambda: dflt_reduce(B) + dflt_scatter(B),
+        ("reducescatter", "rsb_as_reduce_scatter_irr"):
+            lambda: t_ring_reduce_scatter(p, B, topo) + t_meta(p, topo),
+        ("reducescatter", "rsb_as_allreduce"): lambda: dflt_reduce(B),
+        # ---- scan ----
+        ("scan", "default"): lambda: scan_cost(B),
+        ("scan", "scan_as_exscan_reducelocal"):
+            lambda: scan_cost(B) + topo.alpha + B * (topo.beta + topo.gamma),
+        ("exscan", "default"): lambda: scan_cost(B) + topo.alpha + B * topo.beta,
+        # ---- scatter (B = total buffer bytes, p chunks) ----
+        ("scatter", "default"): lambda: dflt_scatter(B),
+        ("scatter", "scatter_as_bcast"): lambda: dflt_bcast(B),
+        ("scatter", "scatter_as_scatterv"):
+            lambda: dflt_scatter(B) + t_meta(p, topo),
+        ("scatter", "scatter_as_tree"):
+            lambda: t_tree_scatter_gather(p, B, topo),
+    }
+    key = (op, impl)
+    if key not in table:
+        raise KeyError(f"no cost model for {key}")
+    imp = REGISTRY[op][impl]
+    if imp.requires_pow2 and not _is_pow2(p):
+        return math.inf
+    return float(table[key]())
+
+
+def _pad(B: float, p: int, chunk_bytes: int) -> float:
+    """GL7/GL16 chunk-aligned padding of the buffer."""
+    c = max(float(chunk_bytes), 1.0)
+    k = math.ceil(math.ceil(B / c) / p)
+    return p * k * c
+
+
+def sweep(op: str, p: int, nbytes: int, topo: Topo, *,
+          chunk_bytes: int = 0) -> dict[str, float]:
+    """Latency of every registered impl of ``op`` at one (p, nbytes)."""
+    return {name: latency(op, name, p, nbytes, topo, chunk_bytes=chunk_bytes)
+            for name in REGISTRY[op]}

@@ -1,0 +1,102 @@
+"""Measured-latency backend: ReproMPI's Algorithm 1 on JAX host devices.
+
+Timing procedure (paper Algorithm 1): synchronize, t = now, run collective,
+record t' - t.  The dissemination-barrier analogue here is a jitted 1-element
+psum executed (and blocked on) before every sample; collectives themselves
+are pre-compiled so only execution is timed.
+
+This backend runs on whatever devices the process sees (CPU host devices in
+this container).  Its absolute numbers are CPU-flavored; the tuner uses it to
+validate *orderings* and to exercise the full offline-tuning pipeline, while
+production-scale decisions use ``core.costmodel``.
+"""
+from __future__ import annotations
+
+import time
+from functools import lru_cache
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax import shard_map
+
+from repro.core import collectives as C
+
+AXIS = "bench"
+
+
+@lru_cache(maxsize=1)
+def _mesh() -> Mesh:
+    devs = np.array(jax.devices())
+    return Mesh(devs, (AXIS,))
+
+
+def axis_size() -> int:
+    return _mesh().devices.size
+
+
+def _input_rows(op: str, n_rows: int, p: int) -> int:
+    """Rows of the per-shard input for a per-chunk payload of ``n_rows``."""
+    if op in ("alltoall", "reducescatter", "scatter"):
+        return n_rows * p
+    return n_rows
+
+
+@lru_cache(maxsize=512)
+def _compiled(op: str, impl: str, n_rows: int, width: int, dtype_name: str):
+    mesh = _mesh()
+    p = mesh.devices.size
+    fn = C.REGISTRY[op][impl].fn
+    rows = _input_rows(op, n_rows, p)
+
+    def body(x):
+        return fn(x, AXIS)
+
+    sm = shard_map(body, mesh=mesh, in_specs=P(AXIS), out_specs=P(AXIS),
+                   check_vma=False)
+    spec = NamedSharding(mesh, P(AXIS))
+    x = jax.device_put(
+        jnp.ones((p * rows, width), jnp.dtype(dtype_name)), spec)
+    return jax.jit(sm).lower(x).compile(), x
+
+
+@lru_cache(maxsize=1)
+def _barrier():
+    mesh = _mesh()
+
+    def body(x):
+        return jax.lax.psum(x, AXIS)
+
+    sm = shard_map(body, mesh=mesh, in_specs=P(AXIS), out_specs=P(),
+                   check_vma=False)
+    spec = NamedSharding(mesh, P(AXIS))
+    x = jax.device_put(jnp.ones((mesh.devices.size,), jnp.float32), spec)
+    return jax.jit(sm).lower(x).compile(), x
+
+
+def sample_latency(op: str, impl: str, nbytes: int, count: int,
+                   *, width: int = 1, dtype=jnp.float32,
+                   barrier: bool = True) -> list[float]:
+    """``count`` barrier-synced wall-clock samples of one collective (s)."""
+    itemsize = jnp.dtype(dtype).itemsize
+    n_rows = max(1, nbytes // (itemsize * width))
+    fn, x = _compiled(op, impl, n_rows, width, jnp.dtype(dtype).name)
+    bar, bx = _barrier()
+    # warm one execution so first-run allocation noise is out of the samples
+    jax.block_until_ready(fn(x))
+    out = []
+    for _ in range(count):
+        if barrier:
+            jax.block_until_ready(bar(bx))
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(x))
+        out.append(time.perf_counter() - t0)
+    return out
+
+
+def make_sampler(op: str, impl: str):
+    """Adapter to the NREP estimator's (msize, count) -> latencies shape."""
+    def sampler(msize: int, count: int):
+        return sample_latency(op, impl, msize, count)
+    return sampler

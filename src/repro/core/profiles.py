@@ -1,0 +1,156 @@
+"""Performance profiles (paper §3.2.2, Listing 1) + O(log M) lookup.
+
+A profile is valid for ONE collective and ONE axis size (the paper: "profiles
+are only valid for the same number of processes").  It maps message-size
+ranges (bytes) to a replacement mock-up.  The on-disk text format round-trips
+the paper's Listing 1 (MPI op names, numbered algorithm table, ``lo hi alg``
+range lines); a JSON form carries extra provenance (topo, backend, chunk).
+
+Lookup is ``O(1)`` to find the (op, p) profile + ``O(log M)`` bisect over the
+sorted ranges — the paper's "combination of hash functions and binary
+searches".
+"""
+from __future__ import annotations
+
+import bisect
+import dataclasses
+import json
+import pathlib
+
+OP_TO_MPI = {
+    "allgather": "MPI_Allgather",
+    "allreduce": "MPI_Allreduce",
+    "alltoall": "MPI_Alltoall",
+    "bcast": "MPI_Bcast",
+    "gather": "MPI_Gather",
+    "reduce": "MPI_Reduce",
+    "reducescatter": "MPI_Reduce_scatter_block",
+    "scan": "MPI_Scan",
+    "exscan": "MPI_Exscan",
+    "scatter": "MPI_Scatter",
+}
+MPI_TO_OP = {v: k for k, v in OP_TO_MPI.items()}
+
+
+@dataclasses.dataclass(frozen=True)
+class Range:
+    lo: int          # bytes, inclusive
+    hi: int          # bytes, inclusive
+    impl: str        # mock-up name
+
+
+@dataclasses.dataclass
+class Profile:
+    op: str
+    axis_size: int
+    ranges: list[Range] = dataclasses.field(default_factory=list)
+    meta: dict = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        self.ranges = sorted(self.ranges, key=lambda r: r.lo)
+        self._los = [r.lo for r in self.ranges]
+        for a, b in zip(self.ranges, self.ranges[1:]):
+            if b.lo <= a.hi:
+                raise ValueError(f"overlapping ranges {a} / {b}")
+
+    # -- lookup ------------------------------------------------------------
+    def lookup(self, nbytes: int) -> str | None:
+        """Replacement impl for ``nbytes``, or None (use the default)."""
+        i = bisect.bisect_right(self._los, nbytes) - 1
+        if i >= 0 and self.ranges[i].lo <= nbytes <= self.ranges[i].hi:
+            return self.ranges[i].impl
+        return None
+
+    # -- Listing-1 text format ----------------------------------------------
+    def to_text(self) -> str:
+        impls = sorted({r.impl for r in self.ranges})
+        ids = {name: i + 2 for i, name in enumerate(impls)}  # 1 = default
+        lines = [
+            "# pgtune profile",
+            OP_TO_MPI.get(self.op, self.op),
+            f"{self.axis_size} # nb. of. processes",
+            f"{len(impls)} # nb. of mock-up impl.",
+        ]
+        lines += [f"{ids[name]} {name}" for name in impls]
+        lines.append(f"{len(self.ranges)} # nb. of ranges")
+        lines += [f"{r.lo} {r.hi} {ids[r.impl]}" for r in self.ranges]
+        return "\n".join(lines) + "\n"
+
+    @classmethod
+    def from_text(cls, text: str) -> "Profile":
+        raw = [ln.split("#")[0].strip() for ln in text.splitlines()]
+        rows = [ln for ln in raw if ln]
+        opname = rows[0]
+        op = MPI_TO_OP.get(opname, opname)
+        axis_size = int(rows[1])
+        n_impl = int(rows[2])
+        table: dict[int, str] = {}
+        for ln in rows[3:3 + n_impl]:
+            num, name = ln.split(None, 1)
+            table[int(num)] = name.strip()
+        n_ranges = int(rows[3 + n_impl])
+        ranges = []
+        for ln in rows[4 + n_impl:4 + n_impl + n_ranges]:
+            lo, hi, alg = ln.split()
+            ranges.append(Range(int(lo), int(hi), table[int(alg)]))
+        return cls(op=op, axis_size=axis_size, ranges=ranges)
+
+    # -- JSON ----------------------------------------------------------------
+    def to_json(self) -> str:
+        return json.dumps({
+            "op": self.op, "axis_size": self.axis_size,
+            "ranges": [dataclasses.asdict(r) for r in self.ranges],
+            "meta": self.meta,
+        }, indent=1)
+
+    @classmethod
+    def from_json(cls, text: str) -> "Profile":
+        d = json.loads(text)
+        return cls(op=d["op"], axis_size=d["axis_size"],
+                   ranges=[Range(**r) for r in d["ranges"]],
+                   meta=d.get("meta", {}))
+
+
+class ProfileStore:
+    """All loaded profiles; the PGMPITuneD in-memory state."""
+
+    def __init__(self, profiles: list[Profile] | None = None):
+        self._by_key: dict[tuple[str, int], Profile] = {}
+        for p in profiles or []:
+            self.add(p)
+
+    def add(self, p: Profile) -> None:
+        self._by_key[(p.op, p.axis_size)] = p
+
+    def get(self, op: str, axis_size: int) -> Profile | None:
+        return self._by_key.get((op, axis_size))
+
+    def lookup(self, op: str, axis_size: int, nbytes: int) -> str | None:
+        p = self.get(op, axis_size)
+        return p.lookup(nbytes) if p else None
+
+    def __len__(self) -> int:
+        return len(self._by_key)
+
+    def __iter__(self):
+        return iter(self._by_key.values())
+
+    # -- disk ----------------------------------------------------------------
+    def save(self, directory: str | pathlib.Path, *, fmt: str = "text") -> None:
+        d = pathlib.Path(directory)
+        d.mkdir(parents=True, exist_ok=True)
+        for (op, p_size), prof in sorted(self._by_key.items()):
+            if fmt == "text":
+                (d / f"{op}_p{p_size}.pgtune").write_text(prof.to_text())
+            else:
+                (d / f"{op}_p{p_size}.json").write_text(prof.to_json())
+
+    @classmethod
+    def load(cls, directory: str | pathlib.Path) -> "ProfileStore":
+        d = pathlib.Path(directory)
+        store = cls()
+        for f in sorted(d.glob("*.pgtune")):
+            store.add(Profile.from_text(f.read_text()))
+        for f in sorted(d.glob("*.json")):
+            store.add(Profile.from_json(f.read_text()))
+        return store

@@ -1,0 +1,220 @@
+"""Offline tuning pass (paper §4.2): benchmark → detect violations → profile.
+
+Workflow, faithful to the paper's three steps:
+
+1. NREP estimation per (op, msize)   — measured backend only (Alg. 1, Eq. 1).
+2. Benchmark default + every mock-up; a *violation* is a mock-up at least
+   ``min_win`` (paper: 10%) faster than the default.  Among violating
+   mock-ups the fastest is selected; one range per message size is written
+   (degenerate [s, s] ranges exactly like Listing 1), then adjacent equal
+   selections are coalesced.
+3. The resulting ``ProfileStore`` drives ``api.tuned(profiles=...)`` — the
+   PGMPITuneD online phase.
+
+Two interchangeable backends:
+
+* ``CostModelBackend``  — α-β-γ model (production scales: p = 16…1024).
+* ``MeasuredBackend``   — wall-clock on host devices with barrier + NREP.
+
+The tuner also verifies the other two guideline classes from [6]
+(monotony / split-robustness) and reports — but does not repair — those.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import statistics
+from typing import Sequence
+
+from repro.core import costmodel, measure, nrep
+from repro.core.collectives import REGISTRY
+from repro.core.profiles import Profile, ProfileStore, Range
+
+DEFAULT_SIZES = (1, 8, 32, 64, 100, 512, 1024, 4096, 8192, 32768,
+                 100_000, 1_048_576, 16_777_216)
+
+
+@dataclasses.dataclass(frozen=True)
+class Measurement:
+    op: str
+    impl: str
+    axis_size: int
+    nbytes: int
+    latency: float          # seconds (median for measured backend)
+    nrep: int = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    gl_kind: str            # "pattern" | "monotony" | "split_robustness"
+    op: str
+    axis_size: int
+    nbytes: int
+    detail: str
+    speedup: float          # default / best  (>1 means violation)
+    best_impl: str | None = None
+
+
+@dataclasses.dataclass
+class TuneReport:
+    measurements: list[Measurement]
+    violations: list[Violation]
+    profiles: ProfileStore
+
+    def summary(self) -> str:
+        pat = [v for v in self.violations if v.gl_kind == "pattern"]
+        lines = [f"measurements: {len(self.measurements)}",
+                 f"pattern violations: {len(pat)}",
+                 f"other violations: {len(self.violations) - len(pat)}",
+                 f"profiles written: {len(self.profiles)}"]
+        return "\n".join(lines)
+
+
+class CostModelBackend:
+    """Latency = analytic model; deterministic, any axis size."""
+
+    name = "costmodel"
+
+    def __init__(self, topo: costmodel.Topo, *, chunk_bytes: int = 0):
+        self.topo = topo
+        self.chunk_bytes = chunk_bytes
+
+    def latency(self, op: str, impl: str, p: int, nbytes: int) -> float:
+        return costmodel.latency(op, impl, p, nbytes, self.topo,
+                                 chunk_bytes=self.chunk_bytes)
+
+    def nrep_for(self, op: str, impl: str, nbytes: int) -> int:
+        return 1
+
+
+class MeasuredBackend:
+    """Wall-clock on host devices; NREP via the paper's estimator."""
+
+    name = "measured"
+
+    def __init__(self, *, rse_1byte: float = 0.05, rse_large: float = 0.10,
+                 K: int = 5, max_nrep: int = 50):
+        self.rse_1byte = rse_1byte
+        self.rse_large = rse_large
+        self.K = K
+        self.max_nrep = max_nrep
+        self._one_byte: dict[tuple[str, str], nrep.OneByteEstimate] = {}
+
+    def _ob(self, op: str, impl: str) -> nrep.OneByteEstimate:
+        key = (op, impl)
+        if key not in self._one_byte:
+            self._one_byte[key] = nrep.estimate_1byte(
+                measure.make_sampler(op, impl),
+                rse_threshold=self.rse_1byte, batch0=5, max_samples=60)
+        return self._one_byte[key]
+
+    def nrep_for(self, op: str, impl: str, nbytes: int) -> int:
+        n = nrep.estimate_nrep(measure.make_sampler(op, impl), nbytes,
+                               self._ob(op, impl),
+                               rse_threshold=self.rse_large, K=self.K)
+        return min(n, self.max_nrep)
+
+    def latency(self, op: str, impl: str, p: int, nbytes: int) -> float:
+        if p != measure.axis_size():
+            raise ValueError(
+                f"measured backend runs at p={measure.axis_size()}, not {p}")
+        count = self.nrep_for(op, impl, nbytes)
+        samples = measure.sample_latency(op, impl, nbytes, count)
+        return statistics.median(samples)
+
+
+def tune(ops: Sequence[str] | None = None,
+         sizes: Sequence[int] = DEFAULT_SIZES,
+         axis_size: int = 16,
+         backend=None,
+         *, min_win: float = 0.10,
+         scratch_budget_bytes: int | None = None,
+         coalesce: bool = True) -> TuneReport:
+    """Run the full offline pass and build profiles.
+
+    ``min_win`` is the paper's "only replace if the mock-up is at least 10%
+    faster"; ``scratch_budget_bytes`` enforces Table-1 extra memory.
+    """
+    ops = list(ops or REGISTRY.keys())
+    backend = backend or CostModelBackend(costmodel.V5E_ICI)
+    p = axis_size
+    ms: list[Measurement] = []
+    vios: list[Violation] = []
+    store = ProfileStore()
+
+    for op in ops:
+        picks: list[tuple[int, str]] = []   # (nbytes, winning impl)
+        lat_by_size: dict[int, dict[str, float]] = {}
+        for nbytes in sizes:
+            lats: dict[str, float] = {}
+            for impl_name, impl in REGISTRY[op].items():
+                if impl.requires_pow2 and (p & (p - 1)) != 0:
+                    continue
+                if (scratch_budget_bytes is not None
+                        and impl_name != "default"
+                        and impl.extra_bytes(nbytes, p) > scratch_budget_bytes):
+                    continue
+                t = backend.latency(op, impl_name, p, nbytes)
+                if math.isinf(t):
+                    continue
+                lats[impl_name] = t
+                ms.append(Measurement(op, impl_name, p, nbytes, t,
+                                      backend.nrep_for(op, impl_name, nbytes)))
+            lat_by_size[nbytes] = lats
+            t_def = lats["default"]
+            cands = {k: v for k, v in lats.items() if k != "default"}
+            if not cands:
+                continue
+            best = min(cands, key=cands.get)
+            if cands[best] < t_def * (1.0 - min_win):
+                gl = REGISTRY[op][best].guideline or "EXT"
+                vios.append(Violation(
+                    "pattern", op, p, nbytes,
+                    f"{gl}: {op} default {t_def:.3e}s > {best} "
+                    f"{cands[best]:.3e}s", t_def / cands[best], best))
+                picks.append((nbytes, best))
+
+        # monotony: T(n1) <= T(n2) for n1 < n2 (default impl)
+        sorted_sizes = sorted(lat_by_size)
+        for a, b in zip(sorted_sizes, sorted_sizes[1:]):
+            ta, tb = lat_by_size[a]["default"], lat_by_size[b]["default"]
+            if ta > tb * (1.0 + min_win):
+                vios.append(Violation(
+                    "monotony", op, p, b,
+                    f"T({a}B)={ta:.3e} > T({b}B)={tb:.3e}", ta / tb))
+        # split-robustness: k chunks of n/k not faster than one op on n
+        for nbytes in sorted_sizes:
+            if nbytes < 8:
+                continue
+            for k in (2, 4):
+                part = nbytes // k
+                if part in lat_by_size:
+                    t_whole = lat_by_size[nbytes]["default"]
+                    t_split = k * lat_by_size[part]["default"]
+                    if t_split < t_whole * (1.0 - min_win):
+                        vios.append(Violation(
+                            "split_robustness", op, p, nbytes,
+                            f"{k}x{part}B = {t_split:.3e} < {t_whole:.3e}",
+                            t_whole / t_split))
+
+        if picks:
+            ranges = [Range(nb, nb, impl) for nb, impl in sorted(picks)]
+            if coalesce:
+                ranges = _coalesce(ranges)
+            store.add(Profile(op=op, axis_size=p, ranges=ranges,
+                              meta={"backend": backend.name,
+                                    "min_win": min_win}))
+
+    return TuneReport(measurements=ms, violations=vios, profiles=store)
+
+
+def _coalesce(ranges: list[Range]) -> list[Range]:
+    """Merge adjacent measured sizes that picked the same impl into one
+    closed range (covers the gap between the discrete sizes)."""
+    out: list[Range] = []
+    for r in ranges:
+        if out and out[-1].impl == r.impl:
+            out[-1] = Range(out[-1].lo, r.hi, r.impl)
+        else:
+            out.append(r)
+    return out

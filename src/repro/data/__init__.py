@@ -1,0 +1,1 @@
+from repro.data.synthetic import make_batch, batch_specs  # noqa: F401

@@ -1,0 +1,2 @@
+from repro.ft.watchdog import StepWatchdog  # noqa: F401
+from repro.ft.restart import run_with_restarts  # noqa: F401

@@ -1,0 +1,124 @@
+"""Blockwise flash attention for TPU (Pallas) — online softmax, causal /
+sliding-window masks, logit softcap, GQA via head-group index maps.
+
+Tiling: grid (B, Hq, Sq/BQ, Skv/BKV); the KV block index is the innermost
+(sequential) grid dim, so the running (m, l, acc) state lives in VMEM
+scratch across KV steps — the canonical TPU flash schedule.  Block shapes
+are MXU-aligned (BQ, BKV multiples of 128 on hardware; tests use smaller
+interpret-mode blocks).
+
+q: [B, Hq, Sq, dh]; k, v: [B, Hkv, Skv, dh]; out: [B, Hq, Sq, dh].
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            causal: bool, window: int, softcap: float, bq: int, bkv: int,
+            n_kv_blocks: int, scale: float):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * bq
+    k_start = ki * bkv
+
+    # block-level skip: fully-masked KV blocks contribute nothing
+    def relevant():
+        if causal:
+            c = k_start <= q_start + bq - 1
+        else:
+            c = True
+        if window:
+            c = jnp.logical_and(c, k_start + bkv - 1 > q_start - window)
+        return c
+
+    @pl.when(jnp.asarray(relevant()))
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)          # [bq, dh]
+        k = k_ref[0, 0].astype(jnp.float32)          # [bkv, dh]
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s * scale
+        if softcap:
+            s = jnp.tanh(s / softcap) * softcap
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+        mask = jnp.ones((bq, bkv), jnp.bool_)
+        if causal:
+            mask = kpos <= qpos
+        if window:
+            mask = jnp.logical_and(mask, kpos > qpos - window)
+        s = jnp.where(mask, s, NEG)
+
+        m_prev = m_scr[...]
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur[:, None])
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=-1)
+        acc_scr[...] = (acc_scr[...] * alpha[:, None]
+                        + jax.lax.dot_general(
+                            p, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+        m_scr[...] = m_cur
+
+    @pl.when(ki == n_kv_blocks - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "softcap",
+                                             "bq", "bkv", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    softcap: float = 0.0, bq: int = 128, bkv: int = 128,
+                    interpret: bool = False):
+    b, hq, sq, dh = q.shape
+    _, hkv, skv, _ = k.shape
+    assert hq % hkv == 0
+    g = hq // hkv
+    bq = min(bq, sq)
+    bkv = min(bkv, skv)
+    assert sq % bq == 0 and skv % bkv == 0
+    nq, nk = sq // bq, skv // bkv
+    scale = 1.0 / math.sqrt(dh)
+
+    kernel = functools.partial(
+        _kernel, causal=causal, window=window, softcap=softcap, bq=bq,
+        bkv=bkv, n_kv_blocks=nk, scale=scale)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(b, hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, dh), lambda b_, h, q_, k_: (b_, h, q_, 0)),
+            pl.BlockSpec((1, 1, bkv, dh),
+                         lambda b_, h, q_, k_, g=g: (b_, h // g, k_, 0)),
+            pl.BlockSpec((1, 1, bkv, dh),
+                         lambda b_, h, q_, k_, g=g: (b_, h // g, k_, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, dh),
+                               lambda b_, h, q_, k_: (b_, h, q_, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, sq, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,46 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (this container) so the same call
+sites run the kernel bodies in interpret mode for CI and compile to Mosaic
+on real hardware.  The model stack keeps pure-jnp paths as its default; the
+kernels are the TPU hot-spot implementations validated against
+``kernels/ref.py`` and swapped in via ``use_kernels`` launch flags.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.pack import guideline_pack as _pack
+from repro.kernels.rwkv6_scan import rwkv6_scan as _rwkv
+from repro.kernels.ssd_mamba2 import ssd_scan as _ssd
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
+                    bq=128, bkv=128, interpret=None):
+    if interpret is None:
+        interpret = not _on_tpu()
+    return _flash(q, k, v, causal=causal, window=window, softcap=softcap,
+                  bq=bq, bkv=bkv, interpret=interpret)
+
+
+def rwkv6_scan(r, k, v, w, u, *, chunk=32, interpret=None):
+    if interpret is None:
+        interpret = not _on_tpu()
+    return _rwkv(r, k, v, w, u, chunk=chunk, interpret=interpret)
+
+
+def ssd_scan(x, dt, a, B, C, *, chunk=64, interpret=None):
+    if interpret is None:
+        interpret = not _on_tpu()
+    return _ssd(x, dt, a, B, C, chunk=chunk, interpret=interpret)
+
+
+def guideline_pack(x, idx, p, *, interpret=None):
+    if interpret is None:
+        interpret = not _on_tpu()
+    return _pack(x, idx, p, interpret=interpret)

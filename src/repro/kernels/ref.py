@@ -1,0 +1,82 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0, softcap=0.0):
+    """q: [B,Hq,Sq,dh]; k,v: [B,Hkv,Skv,dh]; GQA by head grouping.
+    window>0: sliding-window causal.  Returns [B,Hq,Sq,dh] (q dtype)."""
+    b, hq, sq, dh = q.shape
+    hkv = k.shape[1]
+    g = hq // hkv
+    kk = jnp.repeat(k, g, axis=1)
+    vv = jnp.repeat(v, g, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) / math.sqrt(dh)
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(k.shape[2])[None, :]
+    mask = jnp.ones((sq, k.shape[2]), bool)
+    if causal:
+        mask = kpos <= qpos
+    if window:
+        mask = mask & (kpos > qpos - window)
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vv.astype(jnp.float32)).astype(
+        q.dtype)
+
+
+def rwkv6_ref(r, k, v, w, u, s0=None):
+    """Sequential WKV6.  r,k,v,w: [BH, S, hd] (w = decay in (0,1));
+    u: [BH, hd]; s0: [BH, hd, hd].  Returns (y [BH,S,hd] f32, s_fin)."""
+    bh, s, hd = r.shape
+    if s0 is None:
+        s0 = jnp.zeros((bh, hd, hd), jnp.float32)
+
+    def step(S, t):
+        rt, kt, vt, wt = (r[:, t].astype(jnp.float32),
+                          k[:, t].astype(jnp.float32),
+                          v[:, t].astype(jnp.float32),
+                          w[:, t].astype(jnp.float32))
+        kv = jnp.einsum("bk,bv->bkv", kt, vt)
+        y = (jnp.einsum("bk,bkv->bv", rt, S)
+             + jnp.einsum("bk,bkv->bv", rt * u.astype(jnp.float32), kv))
+        S = wt[..., None] * S + kv
+        return S, y
+
+    S, ys = jax.lax.scan(step, s0.astype(jnp.float32), jnp.arange(s))
+    return ys.transpose(1, 0, 2), S
+
+
+def ssd_ref(x, dt, a, B, C, s0=None):
+    """Sequential Mamba2/SSD.  x: [BH,S,P]; dt: [BH,S]; a: [BH];
+    B,C: [BH,S,N]; s0: [BH,N,P].  S_t = exp(-dt_t a) S + B_t (dt_t x_t)^T;
+    y_t = C_t^T S_t.  Returns (y [BH,S,P] f32, s_fin)."""
+    bh, s, p = x.shape
+    n = B.shape[-1]
+    if s0 is None:
+        s0 = jnp.zeros((bh, n, p), jnp.float32)
+
+    def step(S, t):
+        dec = jnp.exp(-dt[:, t] * a).astype(jnp.float32)       # [BH]
+        xb = (x[:, t] * dt[:, t][:, None]).astype(jnp.float32)  # [BH,P]
+        S = dec[:, None, None] * S + jnp.einsum(
+            "bn,bp->bnp", B[:, t].astype(jnp.float32), xb)
+        y = jnp.einsum("bn,bnp->bp", C[:, t].astype(jnp.float32), S)
+        return S, y
+
+    S, ys = jax.lax.scan(step, s0.astype(jnp.float32), jnp.arange(s))
+    return ys.transpose(1, 0, 2), S
+
+
+def pack_ref(x, idx, p):
+    """GL3/GL13 one-hot placement: [n,d] -> [p*n,d] zeros except block idx."""
+    n, d = x.shape
+    buf = jnp.zeros((p * n, d), x.dtype)
+    return jax.lax.dynamic_update_slice(buf, x, (idx * n, 0))

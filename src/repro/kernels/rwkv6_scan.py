@@ -1,0 +1,108 @@
+"""Chunked RWKV6 WKV kernel (Pallas TPU).
+
+Channel-wise data-dependent decay cannot be factored through one stable
+matmul (exp(-cumsum) overflows), so the kernel keeps the chunk-local decay
+differences in VMEM where they are formed pairwise (always ≤ 0 ⇒ exp ≤ 1,
+underflow-safe) and does:
+
+  inter-chunk:  y_t += (r_t ⊙ e^{cum_{t-1}}) @ S_prev           [L,hd]@[hd,hd]
+  intra-chunk:  per-row matvec over the masked pairwise tensor
+  state update: S ← e^{cum_L} ⊙ S + (k ⊙ e^{cum_L - cum})ᵀ @ v  [hd,L]@[L,hd]
+
+Grid (BH, S/L): the chunk index is innermost (sequential on TPU), carrying
+S in an f32 VMEM scratch; BH changes reset it (@pl.when chunk==0).
+
+Inputs: r,k,v,w [BH, S, hd] (w = decay in (0,1)); u [BH, hd].
+Outputs: y [BH, S, hd] f32, s_fin [BH, hd, hd] f32.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, y_ref, s_out_ref, s_scr, *,
+            chunk: int, n_chunks: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_scr[...] = jnp.zeros_like(s_scr)
+
+    r = r_ref[0].astype(jnp.float32)                 # [L, hd]
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    w = w_ref[0].astype(jnp.float32)
+    u = u_ref[0].astype(jnp.float32)                 # [hd]
+    L, hd = r.shape
+
+    logw = jnp.log(jnp.maximum(w, 1e-38))
+    cum = jnp.cumsum(logw, axis=0)                   # [L, hd], decreasing
+    cum_prev = cum - logw                            # cum_{t-1}
+
+    s_prev = s_scr[...]                              # [hd, hd]
+
+    # inter-chunk
+    r_dec = r * jnp.exp(cum_prev)                    # safe: cum_prev <= 0
+    y = jax.lax.dot_general(r_dec, s_prev, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+
+    # intra-chunk: pairwise decay differences, always <= 0 for s < t
+    # A[t,s] = sum_c r[t,c] k[s,c] exp(cum_prev[t,c] - cum[s,c])
+    diff = cum_prev[:, None, :] - cum[None, :, :]    # [L, L, hd]
+    tri = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0) > \
+        jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    e = jnp.exp(jnp.minimum(diff, 0.0)) * tri[..., None]
+    a = jnp.einsum("tc,sc,tsc->ts", r, k, e,
+                   preferred_element_type=jnp.float32)
+    y = y + jax.lax.dot_general(a, v, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    # bonus diagonal: (r_t . (u*k_t)) v_t
+    bonus = jnp.sum(r * (u[None, :] * k), axis=-1, keepdims=True)
+    y = y + bonus * v
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    # state update
+    kdec = k * jnp.exp(cum[-1][None, :] - cum)       # <= 1, safe
+    s_new = jnp.exp(cum[-1])[:, None] * s_prev + jax.lax.dot_general(
+        kdec, v, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    s_scr[...] = s_new
+
+    @pl.when(ci == n_chunks - 1)
+    def _out():
+        s_out_ref[0] = s_new
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def rwkv6_scan(r, k, v, w, u, *, chunk: int = 32, interpret: bool = False):
+    bh, s, hd = r.shape
+    chunk = min(chunk, s)
+    assert s % chunk == 0
+    nc = s // chunk
+    kern = functools.partial(_kernel, chunk=chunk, n_chunks=nc)
+    y, s_fin = pl.pallas_call(
+        kern,
+        grid=(bh, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, hd), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, hd), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, hd), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, hd), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, hd), lambda b, c: (b, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, hd), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, hd, hd), lambda b, c: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, s, hd), jnp.float32),
+            jax.ShapeDtypeStruct((bh, hd, hd), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u)
+    return y, s_fin

@@ -1,0 +1,101 @@
+"""Chunked Mamba2 SSD kernel (Pallas TPU).
+
+Scalar per-head decay makes the [L, L] pairwise decay matrix cheap and
+stable (differences of a monotone cumsum, always ≤ 0).  Per chunk:
+
+  cb      = C @ Bᵀ                       [L,N]@[N,L] (MXU)
+  y_intra = (cb ⊙ decay ⊙ tril) @ X      [L,L]@[L,P] (MXU)
+  y_inter = (C ⊙ e^{cum}) @ S            [L,N]@[N,P] (MXU)
+  S       ← e^{cum_L} S + (B ⊙ e^{cum_L-cum})ᵀ @ X
+
+Grid (BH, S/L), chunk innermost; state in VMEM scratch.
+
+x: [BH,S,P]; dt: [BH,S] (softplus'ed); a: [BH] (>0); B,C: [BH,S,N].
+Returns y [BH,S,P] f32, s_fin [BH,N,P] f32.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, s_out_ref, s_scr, *,
+            n_chunks: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_scr[...] = jnp.zeros_like(s_scr)
+
+    x = x_ref[0].astype(jnp.float32)                 # [L, P]
+    dt = dt_ref[0].astype(jnp.float32)               # [L]
+    a = a_ref[0].astype(jnp.float32)                 # scalar
+    B = b_ref[0].astype(jnp.float32)                 # [L, N]
+    C = c_ref[0].astype(jnp.float32)                 # [L, N]
+    L, P = x.shape
+
+    la = -dt * a                                     # log-decay per step
+    cum = jnp.cumsum(la)                             # [L], decreasing
+    xb = x * dt[:, None]
+
+    s_prev = s_scr[...]                              # [N, P]
+
+    cb = jax.lax.dot_general(C, B, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # [L,L]
+    diff = cum[:, None] - cum[None, :]
+    tri = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    m = cb * jnp.exp(jnp.minimum(diff, 0.0)) * tri
+    y = jax.lax.dot_general(m, xb, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+
+    c_dec = C * jnp.exp(cum)[:, None]
+    y = y + jax.lax.dot_general(c_dec, s_prev, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    b_dec = B * jnp.exp(cum[-1] - cum)[:, None]
+    s_new = jnp.exp(cum[-1]) * s_prev + jax.lax.dot_general(
+        b_dec, xb, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    s_scr[...] = s_new
+
+    @pl.when(ci == n_chunks - 1)
+    def _out():
+        s_out_ref[0] = s_new
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, a, B, C, *, chunk: int = 64, interpret: bool = False):
+    bh, s, p = x.shape
+    n = B.shape[-1]
+    chunk = min(chunk, s)
+    assert s % chunk == 0
+    nc = s // chunk
+    kern = functools.partial(_kernel, n_chunks=nc)
+    y, s_fin = pl.pallas_call(
+        kern,
+        grid=(bh, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, p), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk), lambda b, c: (b, c)),
+            pl.BlockSpec((1,), lambda b, c: (b,)),
+            pl.BlockSpec((1, chunk, n), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, n), lambda b, c: (b, c, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, p), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, n, p), lambda b, c: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, s, p), jnp.float32),
+            jax.ShapeDtypeStruct((bh, n, p), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, a, B, C)
+    return y, s_fin

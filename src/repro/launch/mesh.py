@@ -1,0 +1,31 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing never touches jax
+device state.  Single-pod: 16x16 = 256 chips (v5e pod), axes (data, model).
+Multi-pod: 2x16x16 = 512 chips, axes (pod, data, model); the pod axis is
+pure DP over DCN (hierarchical gradient sync — see train/trainer.py).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def _auto(n: int):
+    return (jax.sharding.AxisType.Auto,) * n
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    import numpy as np
+    devs = jax.devices()
+    n = 1
+    for s in shape:
+        n *= s
+    return jax.sharding.Mesh(
+        np.asarray(devs[:n]).reshape(shape), axes, axis_types=_auto(len(axes)))
+
+
+def make_host_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
+    """Small mesh over host devices (tests / measured tuning)."""
+    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))

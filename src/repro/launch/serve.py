@@ -1,0 +1,54 @@
+"""Serving step builders (prefill / decode) as shard_map'd jits."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.core import api
+from repro.models import lm
+from repro.models.config import ModelConfig
+
+
+def build_prefill(cfg: ModelConfig, mesh, cell, *, profiles=None,
+                  force=None):
+    from repro.launch.shapes import input_specs
+
+    (p_sds, b_sds, c_sds), (p_ps, b_ps, c_ps) = input_specs(cfg, cell, mesh)
+
+    def fn(params, batch, caches):
+        logits, new_caches = lm.prefill(params, cfg, batch, caches,
+                                        seq_sharded=cell.seq_sharded)
+        return logits, new_caches
+
+    with api.tuned(profiles=profiles, force=force):
+        sm = shard_map(fn, mesh=mesh, in_specs=(p_ps, b_ps, c_ps),
+                       out_specs=(P(_dp(mesh, cell)), c_ps),
+                       check_vma=False)
+        return jax.jit(sm), (p_sds, b_sds, c_sds)
+
+
+def build_decode(cfg: ModelConfig, mesh, cell, *, profiles=None, force=None):
+    from repro.launch.shapes import input_specs
+
+    (p_sds, t_sds, c_sds, i_sds), (p_ps, t_ps, c_ps, i_ps) = \
+        input_specs(cfg, cell, mesh)
+
+    def fn(params, token, caches, t):
+        return lm.decode_step(params, cfg, token, caches, t,
+                              seq_sharded=cell.seq_sharded)
+
+    with api.tuned(profiles=profiles, force=force):
+        sm = shard_map(fn, mesh=mesh,
+                       in_specs=(p_ps, t_ps, c_ps, i_ps),
+                       out_specs=(t_ps if cell.seq_sharded
+                                  else P(_dp(mesh, cell)), c_ps),
+                       check_vma=False)
+        return jax.jit(sm, donate_argnums=(2,)), (p_sds, t_sds, c_sds, i_sds)
+
+
+def _dp(mesh, cell):
+    if cell.seq_sharded:
+        return None
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)

@@ -1,0 +1,147 @@
+"""Assigned input-shape cells and their jit signatures (``input_specs``).
+
+Four cells per architecture (40 total):
+
+=============  ==========  ============  =========================
+cell           seq_len     global_batch  lowered program
+=============  ==========  ============  =========================
+train_4k       4,096       256           train_step (fwd+bwd+opt)
+prefill_32k    32,768      32            serve prefill
+decode_32k     32,768      128           serve decode (1 new token)
+long_500k      524,288     1             serve decode, seq-sharded KV
+=============  ==========  ============  =========================
+
+``long_500k`` is lowered only for sub-quadratic-capable archs
+(cfg.subquadratic); pure full-attention archs record a ``skip`` (DESIGN.md
+§Arch-applicability).  Encoder-decoder decode cells drive the DECODER with
+a cached encoder context of the same length.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.data.synthetic import batch_specs
+from repro.models import lm
+from repro.models.config import ModelConfig
+from repro.models.params import tree_global_sds, tree_map_specs, tree_pspecs
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str            # "train" | "prefill" | "decode"
+    seq_sharded: bool = False
+    n_micro: int = 8
+
+
+SHAPES = {
+    "train_4k": ShapeCell("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32_768, 32, "prefill",
+                             n_micro=1),
+    "decode_32k": ShapeCell("decode_32k", 32_768, 128, "decode", n_micro=1),
+    "long_500k": ShapeCell("long_500k", 524_288, 1, "decode",
+                           seq_sharded=True, n_micro=1),
+}
+
+
+def applicable(cfg: ModelConfig, cell: ShapeCell) -> tuple[bool, str]:
+    if cell.name == "long_500k" and not cfg.subquadratic:
+        return False, "full-attention arch: 500k KV decode skipped"
+    return True, ""
+
+
+def dp_axes(mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def batch_pspec(mesh) -> P:
+    return P(dp_axes(mesh))
+
+
+def input_specs(cfg: ModelConfig, cell: ShapeCell, mesh):
+    """(args_sds, in_pspecs) for the cell's program, params included.
+
+    train:   (params, opt_state, batch, step)
+    prefill: (params, batch, caches)
+    decode:  (params, token, caches, t)
+    """
+    from repro.train.trainer import opt_state_pspecs
+    tp = mesh.shape.get("model", 1)
+    spec_tree = lm.model_specs(cfg, tp)
+    params_sds = tree_global_sds(spec_tree)
+    params_ps = tree_pspecs(spec_tree)
+    bp = batch_pspec(mesh)
+
+    if cell.kind == "train":
+        opt_name = cfg.optimizer
+        opt_ps = opt_state_pspecs(opt_name, spec_tree)
+        opt_sds = _opt_sds(opt_name, spec_tree)
+        bs = batch_specs(cfg, cell.global_batch, cell.seq_len)
+        bs_ps = jax.tree.map(lambda _: bp, bs)
+        step_sds = jax.ShapeDtypeStruct((), jnp.int32)
+        return ((params_sds, opt_sds, bs, step_sds),
+                (params_ps, opt_ps, bs_ps, P()))
+
+    cspec = lm.cache_specs(cfg, cell.global_batch, cell.seq_len, tp,
+                           seq_sharded=cell.seq_sharded)
+    caches_sds = tree_global_sds(cspec)
+    caches_ps = _cache_pspecs(cspec, mesh, cell)
+    if cell.kind == "prefill":
+        bs = batch_specs(cfg, cell.global_batch, cell.seq_len)
+        bs.pop("labels", None)
+        bs_ps = jax.tree.map(lambda _: bp, bs)
+        return ((params_sds, bs, caches_sds),
+                (params_ps, bs_ps, caches_ps))
+
+    # decode: one new token with a KV cache of seq_len
+    tok_b = cell.global_batch
+    tok = jax.ShapeDtypeStruct((tok_b, 1), jnp.int32)
+    tok_ps = bp if not cell.seq_sharded else P()
+    t_sds = jax.ShapeDtypeStruct((), jnp.int32)
+    return ((params_sds, tok, caches_sds, t_sds),
+            (params_ps, tok_ps, caches_ps, P()))
+
+
+def _cache_pspecs(cspec, mesh, cell):
+    """Cache PartitionSpecs; the batch dim additionally shards over 'pod'
+    when present (except seq-sharded cells, where pod replicates)."""
+    pod = "pod" in mesh.shape and not cell.seq_sharded
+
+    def ps(s):
+        dims = list(s.dims)
+        if pod:
+            # the first "data" dim is the batch dim (stacked specs carry a
+            # leading None scan dim); batch additionally shards over "pod"
+            for i, d in enumerate(dims):
+                if d == "data":
+                    dims[i] = ("pod", "data")
+                    break
+        return P(*dims)
+
+    return tree_map_specs(ps, cspec)
+
+
+def _opt_sds(opt_name: str, spec_tree):
+    from repro.models.params import ParamSpec
+
+    if opt_name == "adamw":
+        ms = tree_map_specs(
+            lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), spec_tree)
+        return {"m": ms, "v": ms,
+                "count": jax.ShapeDtypeStruct((), jnp.int32)}
+    if opt_name == "adafactor":
+        def fac(s: ParamSpec):
+            if len(s.shape) >= 2:
+                return {"vr": jax.ShapeDtypeStruct(s.shape[:-1], jnp.float32),
+                        "vc": jax.ShapeDtypeStruct(
+                            s.shape[:-2] + s.shape[-1:], jnp.float32)}
+            return {"v": jax.ShapeDtypeStruct(s.shape, jnp.float32)}
+        return {"f": tree_map_specs(fac, spec_tree),
+                "count": jax.ShapeDtypeStruct((), jnp.int32)}
+    raise ValueError(opt_name)

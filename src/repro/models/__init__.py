@@ -1,0 +1,2 @@
+"""repro.models — unified LM stack for all assigned architectures."""
+from repro.models.config import ModelConfig  # noqa: F401

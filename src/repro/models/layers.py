@@ -1,0 +1,136 @@
+"""Shared layers: norms, RoPE, gated MLP, embedding + sharded-vocab loss."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import api
+from repro.dist import ops
+from repro.dist.axes import AXES, axis_size_or_1, has_axis
+from repro.models.params import ParamSpec
+
+
+def rms_norm(x, scale, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def rope(x, positions, theta: float = 10_000.0):
+    """Rotary embedding; x: [..., S, H, hd], positions: [..., S]."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None].astype(jnp.float32) * freq  # [..., S, half]
+    cos = jnp.cos(ang)[..., :, None, :]                        # [..., S, 1, half]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+def sincos_positions(positions, d_model: int):
+    """Whisper-style absolute sinusoidal embeddings; positions [..., S]."""
+    half = d_model // 2
+    freq = 10_000.0 ** (-jnp.arange(half, dtype=jnp.float32) / max(half - 1, 1))
+    ang = positions[..., None].astype(jnp.float32) * freq
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# gated MLP (column -> row parallel)
+# ---------------------------------------------------------------------------
+
+
+def mlp_specs(d_model: int, d_ff: int, dtype: str):
+    return {
+        "w_in": ParamSpec((d_model, d_ff), ("data", "model"), dtype=dtype),
+        "w_gate": ParamSpec((d_model, d_ff), ("data", "model"), dtype=dtype),
+        "w_out": ParamSpec((d_ff, d_model), ("model", "data"), dtype=dtype),
+    }
+
+
+def mlp(params, x, *, act=jax.nn.silu):
+    w_in = ops.fsdp_gather(params["w_in"], 0)
+    w_gate = ops.fsdp_gather(params["w_gate"], 0)
+    w_out = ops.fsdp_gather(params["w_out"], 1)
+    h = ops.col_matmul(x, w_in)
+    g = ops.col_matmul(x, w_gate)
+    return ops.row_matmul(act(g) * h, w_out)
+
+
+# ---------------------------------------------------------------------------
+# embedding (vocab sharded over TP, feature over FSDP) + sharded-vocab loss
+# ---------------------------------------------------------------------------
+
+
+def embed_specs(vocab_padded: int, d_model: int, dtype: str):
+    return {"table": ParamSpec((vocab_padded, d_model), ("model", "data"),
+                               scale=d_model ** -0.5, dtype=dtype)}
+
+
+def embed_lookup(params, tokens, *, scale: float | None = None):
+    """tokens: [B, S] global ids; table vocab-sharded over TP."""
+    table = ops.fsdp_gather(params["table"], 1)       # [V_t, D]
+    v_t = table.shape[0]
+    t_idx = lax.axis_index(AXES.model) if has_axis(AXES.model) else 0
+    local = tokens - t_idx * v_t
+    ok = (local >= 0) & (local < v_t)
+    emb = jnp.take(table, jnp.clip(local, 0, v_t - 1), axis=0)
+    emb = jnp.where(ok[..., None], emb, jnp.zeros_like(emb))
+    emb = ops.tp_allreduce(emb)
+    if scale is not None:
+        emb = emb * jnp.asarray(scale, emb.dtype)
+    return emb
+
+
+def lm_logits(params, x, head_params=None, *, final_softcap=None):
+    """x: [B, S, D] -> logits [B, S, V_t] (vocab-sharded, fp32)."""
+    if head_params is not None:
+        w = ops.fsdp_gather(head_params["w"], 0)      # [D, V_t]
+        logits = ops.col_matmul(x, w)
+    else:
+        table = ops.fsdp_gather(params["table"], 1)   # [V_t, D]
+        logits = ops.col_matmul(x, table.T)
+    logits = logits.astype(jnp.float32)
+    if final_softcap:
+        logits = jnp.tanh(logits / final_softcap) * final_softcap
+    return logits
+
+
+def head_specs(d_model: int, vocab_padded: int, dtype: str):
+    return {"w": ParamSpec((d_model, vocab_padded), ("data", "model"),
+                           dtype=dtype)}
+
+
+def sharded_xent(logits, labels, mask=None):
+    """Cross-entropy with the vocab dim sharded over TP.
+
+    logits: [B, S, V_t] fp32; labels: [B, S] global ids; mask: [B, S].
+    Returns mean NLL over unmasked tokens of the local batch shard (caller
+    averages over data/pod axes).
+    """
+    v_t = logits.shape[-1]
+    t_idx = lax.axis_index(AXES.model) if has_axis(AXES.model) else 0
+    # stop-grad BEFORE pmax: logsumexp is m-invariant and pmax has no AD rule
+    m_loc = lax.stop_gradient(jnp.max(logits, axis=-1))
+    m = lax.pmax(m_loc, AXES.model) if has_axis(AXES.model) else m_loc
+    se = jnp.sum(jnp.exp(logits - m[..., None]), axis=-1)
+    se = ops.tp_allreduce(se)
+    logz = jnp.log(se) + m
+    local = labels - t_idx * v_t
+    ok = (local >= 0) & (local < v_t)
+    tgt = jnp.take_along_axis(
+        logits, jnp.clip(local, 0, v_t - 1)[..., None], axis=-1)[..., 0]
+    tgt = jnp.where(ok, tgt, 0.0)
+    tgt = ops.tp_allreduce(tgt)
+    nll = logz - tgt
+    if mask is not None:
+        nll = nll * mask
+        denom = jnp.maximum(jnp.sum(mask), 1.0)
+    else:
+        denom = float(nll.size)
+    return jnp.sum(nll) / denom

@@ -1,0 +1,4 @@
+"""Sharded functional optimizers (state trees mirror the param sharding)."""
+from repro.optim.optimizers import (adafactor_init, adafactor_update,  # noqa: F401
+                                    adamw_init, adamw_update,
+                                    get_optimizer, lr_schedule)

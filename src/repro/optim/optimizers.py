@@ -1,0 +1,121 @@
+"""AdamW and Adafactor, written directly on pytrees.
+
+State leaves inherit the parameter's sharding (the trainer passes matching
+PartitionSpecs), so optimizer memory is fully ZeRO-sharded.  Adafactor
+(factored second moment, no first moment) is the memory-lean option used by
+deepseek-v3 (see its config docstring).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lr_schedule(step, *, base_lr=3e-4, warmup=100, total=10_000):
+    step = jnp.asarray(step, jnp.float32)
+    warm = step / jnp.maximum(warmup, 1)
+    prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return base_lr * jnp.minimum(warm, 1.0) * jnp.maximum(cos, 0.1)
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(grads, state, params, *, lr, b1=0.9, b2=0.95, eps=1e-8,
+                 weight_decay=0.1):
+    c = state["count"] + 1
+    cf = c.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mh = m / (1 - b1 ** cf)
+        vh = v / (1 - b2 ** cf)
+        step = mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(
+            jnp.float32)
+        return (p.astype(jnp.float32) - lr * step).astype(p.dtype), m, v
+
+    out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+    new_p = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x:
+                         isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x:
+                         isinstance(x, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x:
+                         isinstance(x, tuple))
+    return new_p, {"m": new_m, "v": new_v, "count": c}
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment; no first moment)
+# ---------------------------------------------------------------------------
+
+
+def _factored(p) -> bool:
+    return p.ndim >= 2
+
+
+def adafactor_init(params):
+    def mk(p):
+        if _factored(p):
+            return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                    jnp.float32)}
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+    return {"f": jax.tree.map(mk, params), "count": jnp.zeros((), jnp.int32)}
+
+
+def adafactor_update(grads, state, params, *, lr, b2=0.999, eps=1e-30,
+                     clip=1.0, weight_decay=0.0):
+    c = state["count"] + 1
+
+    def upd(g, s, p):
+        g = g.astype(jnp.float32)
+        g2 = g * g + eps
+        if _factored(p):
+            vr = b2 * s["vr"] + (1 - b2) * jnp.mean(g2, axis=-1)
+            vc = b2 * s["vc"] + (1 - b2) * jnp.mean(g2, axis=-2)
+            r = vr / jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), eps)
+            u = g / jnp.sqrt(r[..., None] * vc[..., None, :] /
+                             jnp.maximum(jnp.mean(vc, axis=-1,
+                                                  keepdims=True)[..., None, :],
+                                         eps) + eps)
+            ns = {"vr": vr, "vc": vc}
+        else:
+            v = b2 * s["v"] + (1 - b2) * g2
+            u = g / jnp.sqrt(v + eps)
+            ns = {"v": v}
+        rms = jnp.sqrt(jnp.mean(u * u) + eps)
+        u = u / jnp.maximum(1.0, rms / clip)
+        pf = p.astype(jnp.float32)
+        new_p = pf - lr * (u + weight_decay * pf)
+        return new_p.astype(p.dtype), ns
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_s = tdef.flatten_up_to(state["f"])
+    flat_p = tdef.flatten_up_to(params)
+    new_p, new_s = [], []
+    for g, s, p in zip(flat_g, flat_s, flat_p):
+        np_, ns_ = upd(g, s, p)
+        new_p.append(np_)
+        new_s.append(ns_)
+    return (jax.tree.unflatten(tdef, new_p),
+            {"f": jax.tree.unflatten(tdef, new_s), "count": c})
+
+
+def get_optimizer(name: str):
+    if name == "adamw":
+        return adamw_init, adamw_update
+    if name == "adafactor":
+        return adafactor_init, adafactor_update
+    raise ValueError(f"unknown optimizer {name!r}")

@@ -1,0 +1,1 @@
+from repro.train.trainer import Trainer, make_step_fns  # noqa: F401

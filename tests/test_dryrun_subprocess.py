@@ -1,0 +1,63 @@
+"""Multi-pod dry-run smoke (subprocess: 512 host devices stay isolated).
+
+Full 80-cell results live in results/dryrun/ (see EXPERIMENTS.md §Dry-run);
+this test pins the machinery: lower+compile on the production meshes, the
+roofline fields, collective-bytes parsing, and the skip logic.
+"""
+import json
+import os
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+SRC = str(ROOT / "src")
+
+
+def _run_cells(args, timeout=900):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", *args],
+        capture_output=True, text=True, timeout=timeout, env=env)
+    rows = [json.loads(l) for l in r.stdout.splitlines()
+            if l.startswith("{")]
+    return r, rows
+
+
+@pytest.mark.slow
+def test_dryrun_single_and_multi_pod_cell():
+    r, rows = _run_cells(["--arch", "gemma3-1b", "--shape", "decode_32k",
+                          "--multi-pod", "both"])
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert [x["mesh"] for x in rows] == ["16x16", "2x16x16"]
+    for d in rows:
+        assert d["status"] == "ok"
+        assert d["devices"] in (256, 512)
+        assert d["collectives"]["total_bytes"] > 0
+        assert d["roofline"]["bottleneck"] in ("compute", "memory",
+                                               "collective")
+        assert float(d["roofline"]["useful_flops_ratio"]) > 0
+        mem = d["memory"]
+        assert mem["argument_bytes"] > 0
+
+
+@pytest.mark.slow
+def test_dryrun_skip_rule_and_force():
+    r, rows = _run_cells(["--arch", "llama3.2-3b", "--shape", "long_500k"])
+    assert rows[0]["status"] == "skip"
+    # forcing a mock-up changes the lowered collective schedule
+    r1, base = _run_cells(["--arch", "rwkv6-3b", "--shape", "decode_32k"])
+    r2, forced = _run_cells(
+        ["--arch", "rwkv6-3b", "--shape", "decode_32k", "--force",
+         "allreduce:alg=allreduce_as_rsb_allgather"])
+    assert base[0]["status"] == forced[0]["status"] == "ok"
+    assert "allreduce_as_rsb_allgather" in forced[0]["pgmpi_footer"]
+    b0 = base[0]["collectives"]
+    b1 = forced[0]["collectives"]
+    # GL6 replaces all-reduces with reduce-scatter + all-gather pairs
+    assert b1.get("reduce-scatter", {}).get("count", 0) > \
+        b0.get("reduce-scatter", {}).get("count", 0)

@@ -1,0 +1,208 @@
+"""Guideline catalog, Table-1 memory model, profiles (incl. the paper's
+Listing-1 verbatim), NREP estimator (Alg. 1 / Eq. 1), and dispatch."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import api, nrep
+from repro.core.collectives import REGISTRY
+from repro.core.guidelines import (GUIDELINES, PAPER_GUIDELINES, by_id,
+                                   paper_coverage)
+from repro.core.profiles import Profile, ProfileStore, Range
+
+LISTING1 = """# pgtune profile
+MPI_Scatter
+1024 # nb. of. processes
+2 # nb. of mock-up impl.
+2 scatter_as_bcast
+3 scatter_as_scatterv
+8 # nb. of ranges
+1 1 2
+8 8 2
+32 32 2
+64 64 2
+100 100 2
+512 512 2
+1024 1024 2
+10000 10000 3
+"""
+
+
+def test_all_22_guidelines_present():
+    cov = paper_coverage()
+    assert len(cov) == 22
+    assert cov["GL1"] == "allgather_as_gather_bcast"
+    assert cov["GL7"] == "allreduce_as_rs_allgatherv"
+    assert cov["GL20"] == "scan_as_exscan_reducelocal"
+    assert cov["GL22"] == "scatter_as_scatterv"
+
+
+def test_guideline_memory_model_table1():
+    # GL2/GL3: p-times larger send buffer
+    assert by_id("GL2").extra_bytes(1000, 8) == 8000
+    assert by_id("GL3").extra_bytes(1000, 8) == 8000
+    # GL4: 2p ints for displs+recvcounts
+    assert by_id("GL4").extra_bytes(1000, 8) == 2 * 8 * 4
+    # GL1 / GL5 / GL20: none
+    for gl in ("GL1", "GL5", "GL20"):
+        assert by_id(gl).extra_bytes(1000, 8) == 0
+    # every guideline has a finite, non-negative cost
+    for g in GUIDELINES:
+        assert g.extra_bytes(4096, 16) >= 0
+
+
+def test_every_mockup_is_a_guideline():
+    for op, impls in REGISTRY.items():
+        for name, impl in impls.items():
+            if name == "default":
+                continue
+            assert impl.guideline is not None, (op, name)
+
+
+# ---------------------------------------------------------------------------
+# profiles
+# ---------------------------------------------------------------------------
+
+
+def test_listing1_roundtrip_verbatim():
+    prof = Profile.from_text(LISTING1)
+    assert prof.op == "scatter"
+    assert prof.axis_size == 1024
+    assert prof.lookup(8) == "scatter_as_bcast"
+    assert prof.lookup(10_000) == "scatter_as_scatterv"
+    assert prof.lookup(9_999) is None
+    assert prof.lookup(2) is None
+    back = Profile.from_text(prof.to_text())
+    assert back.ranges == prof.ranges and back.axis_size == 1024
+
+
+def test_profile_overlap_rejected():
+    with pytest.raises(ValueError):
+        Profile(op="bcast", axis_size=4,
+                ranges=[Range(1, 100, "a"), Range(50, 200, "b")])
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.lists(st.integers(min_value=1, max_value=10**7), min_size=1,
+                max_size=20, unique=True),
+       st.integers(min_value=0, max_value=10**7))
+def test_profile_lookup_matches_linear_scan(bounds, query):
+    """Property: the O(log M) bisect lookup == a linear scan."""
+    bounds = sorted(bounds)
+    ranges = []
+    for i in range(0, len(bounds) - 1, 2):
+        ranges.append(Range(bounds[i], bounds[i + 1] - 1,
+                            f"impl{i}"))
+    if not ranges:
+        return
+    prof = Profile(op="allgather", axis_size=8, ranges=ranges)
+    linear = None
+    for r in ranges:
+        if r.lo <= query <= r.hi:
+            linear = r.impl
+    assert prof.lookup(query) == linear
+
+
+def test_store_save_load(tmp_path):
+    store = ProfileStore([
+        Profile(op="allreduce", axis_size=16,
+                ranges=[Range(1, 1024, "allreduce_as_doubling")]),
+        Profile(op="scatter", axis_size=1024,
+                ranges=[Range(1, 64, "scatter_as_bcast")]),
+    ])
+    store.save(tmp_path, fmt="text")
+    back = ProfileStore.load(tmp_path)
+    assert len(back) == 2
+    assert back.lookup("allreduce", 16, 512) == "allreduce_as_doubling"
+    assert back.lookup("allreduce", 8, 512) is None   # wrong axis size
+
+
+# ---------------------------------------------------------------------------
+# NREP (Alg. 1 / Eq. 1)
+# ---------------------------------------------------------------------------
+
+
+def test_nrep_rse_converges():
+    rng = np.random.default_rng(0)
+
+    def sampler(msize, count):
+        return list(10e-6 + rng.normal(0, 1e-6, count).clip(0))
+
+    ob = nrep.estimate_1byte(sampler, rse_threshold=0.01, batch0=10)
+    assert ob.final_rse < 0.01
+    assert ob.nrep >= 10
+
+
+def test_nrep_eq1_scaling():
+    """Eq. (1): nrep_m = max(ceil(t1_nrep / t_m_min), K)."""
+    ob = nrep.OneByteEstimate(nrep=100, total_time=1.0, final_rse=0.005,
+                              batches=3)
+
+    def sampler(msize, count):
+        return [1e-3 * msize] * count          # deterministic latency
+
+    n = nrep.estimate_nrep(sampler, 10, ob, K=5)
+    assert n == math.ceil(1.0 / 1e-2) == 100
+    n_big = nrep.estimate_nrep(sampler, 10_000, ob, K=5)
+    assert n_big == 5                          # K floor kicks in
+
+
+# ---------------------------------------------------------------------------
+# dispatch (api)
+# ---------------------------------------------------------------------------
+
+
+def _run_ar(impl_ctx_kwargs, x):
+    with api.tuned(**impl_ctx_kwargs) as ctx:
+        y = jax.vmap(lambda a: api.allreduce(a, "x"), axis_name="x")(x)
+    return y, ctx
+
+
+def test_dispatch_profile_and_record():
+    store = ProfileStore([Profile(op="allreduce", axis_size=8,
+                                  ranges=[Range(1, 10**6,
+                                                "allreduce_as_rsb_allgather")])])
+    x = jnp.ones((8, 4, 2), jnp.float32)
+    y, ctx = _run_ar(dict(profiles=store), x)
+    assert np.allclose(np.asarray(y), 8.0)
+    assert ctx.record == [("allreduce", 8, 32, "allreduce_as_rsb_allgather")]
+    footer = api.format_footer(ctx)
+    assert "#@pgpmi" not in footer
+    assert "#@pgmpi alg MPI_Allreduce 32 allreduce_as_rsb_allgather" in footer
+
+
+def test_dispatch_force_module_syntax():
+    force = api.parse_module_spec(
+        "allreduce:alg=allreduce_as_reduce_bcast;bcast:alg=bcast_as_tree")
+    x = jnp.ones((8, 4, 2), jnp.float32)
+    y, ctx = _run_ar(dict(force=force), x)
+    assert ctx.record[-1][3] == "allreduce_as_reduce_bcast"
+
+
+def test_dispatch_pow2_guard():
+    """Non-power-of-two axis must fall back from doubling to default."""
+    force = {"allreduce": "allreduce_as_doubling"}
+    x = jnp.ones((6, 4, 2), jnp.float32)      # p=6: not a power of two
+    y, ctx = _run_ar(dict(force=force), x)
+    assert np.allclose(np.asarray(y), 6.0)
+    assert ctx.record[-1][3] == "default"
+
+
+def test_dispatch_scratch_budget():
+    """Table-1 memory larger than the budget -> default (the paper's
+    size_msg_buffer_bytes behaviour)."""
+    store = ProfileStore([Profile(op="allgather", axis_size=8,
+                                  ranges=[Range(1, 10**6,
+                                                "allgather_as_alltoall")])])
+    x = jnp.ones((8, 64, 4), jnp.float32)     # 1 KiB payload, extra = 8 KiB
+    with api.tuned(profiles=store, scratch_budget_bytes=100) as ctx:
+        jax.vmap(lambda a: api.allgather(a, "x"), axis_name="x")(x)
+    assert ctx.record[-1][3] == "default"
+    with api.tuned(profiles=store, scratch_budget_bytes=10**6) as ctx2:
+        jax.vmap(lambda a: api.allgather(a, "x"), axis_name="x")(x)
+    assert ctx2.record[-1][3] == "allgather_as_alltoall"

@@ -1,0 +1,46 @@
+"""HLO collective-bytes parser: synthetic fixtures + a real lowered module."""
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.hlo import _shape_bytes, collective_bytes
+
+FIXTURE = """
+HloModule test
+
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %r = f32[] add(%a, %b)
+}
+
+ENTRY %main (x: f32[128,4]) -> f32[1024,4] {
+  %x = f32[128,4]{1,0} parameter(0)
+  %ag = f32[1024,4]{1,0} all-gather(%x), dimensions={0}
+  %ar = f32[1024,4]{1,0} all-reduce(%ag), to_apply=%add
+  ROOT %out = f32[1024,4]{1,0} add(%ar, %ar)
+}
+"""
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[128,4]{1,0}") == 128 * 4 * 4
+    assert _shape_bytes("bf16[16]") == 32
+    assert _shape_bytes("(f32[8], bf16[8])") == 32 + 16
+    assert _shape_bytes("f32[]") == 4
+
+
+def test_fixture_collective_bytes():
+    out = collective_bytes(FIXTURE)
+    assert out["all-gather"]["bytes"] == 128 * 4 * 4
+    assert out["all-reduce"]["bytes"] == 1024 * 4 * 4
+    assert out["total_bytes"] == 128 * 16 + 1024 * 16
+
+
+def test_real_lowered_module_has_collectives():
+    """vmap-free single-device modules have zero collectives; a psum under
+    jit with one device lowers away -- use a fixture-free sanity check that
+    the parser tolerates real compiler output."""
+    f = jax.jit(lambda x: (x @ x.T).sum())
+    hlo = f.lower(jnp.ones((8, 8))).compile().as_text()
+    out = collective_bytes(hlo)
+    assert out["total_bytes"] == 0

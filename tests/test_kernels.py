@@ -1,0 +1,167 @@
+"""Per-kernel validation: shape/dtype sweeps + hypothesis properties, all
+against the pure-jnp oracles in kernels/ref.py (interpret mode on CPU)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.pack import guideline_pack
+from repro.kernels.rwkv6_scan import rwkv6_scan
+from repro.kernels.ssd_mamba2 import ssd_scan
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype,atol", [(jnp.float32, 3e-5),
+                                        (jnp.bfloat16, 3e-2)])
+@pytest.mark.parametrize("b,hq,hkv,s,d,bq,bkv", [
+    (1, 2, 2, 128, 64, 64, 64),        # MHA
+    (2, 4, 2, 256, 64, 128, 64),       # GQA 2:1
+    (1, 8, 1, 128, 128, 64, 128),      # MQA, wide head
+    (1, 2, 2, 192, 32, 64, 64),        # ragged-ish seq (192 = 3 blocks)
+])
+def test_flash_shapes_dtypes(rng, dtype, atol, b, hq, hkv, s, d, bq, bkv):
+    q = jnp.asarray(rng.normal(size=(b, hq, s, d)), dtype)
+    k = jnp.asarray(rng.normal(size=(b, hkv, s, d)), dtype)
+    v = jnp.asarray(rng.normal(size=(b, hkv, s, d)), dtype)
+    o = flash_attention(q, k, v, bq=bq, bkv=bkv, interpret=True)
+    r = ref.flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(r, np.float32), atol=atol)
+
+
+@pytest.mark.parametrize("window", [32, 64, 100])
+def test_flash_window(rng, window):
+    q = jnp.asarray(rng.normal(size=(1, 2, 256, 64)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 2, 256, 64)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 2, 256, 64)), jnp.float32)
+    o = flash_attention(q, k, v, window=window, bq=64, bkv=64,
+                        interpret=True)
+    r = ref.flash_attention_ref(q, k, v, window=window)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(r), atol=3e-5)
+
+
+def test_flash_softcap(rng):
+    q = jnp.asarray(rng.normal(size=(1, 2, 128, 64)) * 4, jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 2, 128, 64)) * 4, jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 2, 128, 64)), jnp.float32)
+    o = flash_attention(q, k, v, softcap=30.0, bq=64, bkv=64, interpret=True)
+    r = ref.flash_attention_ref(q, k, v, softcap=30.0)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(r), atol=3e-5)
+
+
+def test_flash_causality_property(rng):
+    """Changing future K/V must not change past outputs."""
+    q = jnp.asarray(rng.normal(size=(1, 2, 128, 32)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 2, 128, 32)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 2, 128, 32)), jnp.float32)
+    o1 = flash_attention(q, k, v, bq=64, bkv=64, interpret=True)
+    k2 = k.at[:, :, 100:].set(9.9)
+    v2 = v.at[:, :, 100:].set(-9.9)
+    o2 = flash_attention(q, k2, v2, bq=64, bkv=64, interpret=True)
+    np.testing.assert_allclose(np.asarray(o1[:, :, :100]),
+                               np.asarray(o2[:, :, :100]), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# rwkv6
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("bh,s,hd,chunk", [
+    (2, 64, 16, 16), (1, 128, 32, 32), (3, 96, 64, 16), (1, 32, 8, 32),
+])
+def test_rwkv6_sweep(rng, bh, s, hd, chunk):
+    r = jnp.asarray(rng.normal(size=(bh, s, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(bh, s, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(bh, s, hd)), jnp.float32)
+    w = jnp.asarray(1 / (1 + np.exp(-rng.normal(size=(bh, s, hd)))) * 0.55
+                    + 0.4, jnp.float32)
+    u = jnp.asarray(rng.normal(size=(bh, hd)), jnp.float32)
+    y, sf = rwkv6_scan(r, k, v, w, u, chunk=chunk, interpret=True)
+    yr, sr = ref.rwkv6_ref(r, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=2e-4)
+    np.testing.assert_allclose(np.asarray(sf), np.asarray(sr), atol=2e-4)
+
+
+def test_rwkv6_strong_decay_stability(rng):
+    """Near-zero decays (the overflow hazard for naive chunking) stay exact."""
+    bh, s, hd = 1, 64, 16
+    r = jnp.asarray(rng.normal(size=(bh, s, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(bh, s, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(bh, s, hd)), jnp.float32)
+    w = jnp.full((bh, s, hd), 1e-3, jnp.float32)     # brutal decay
+    u = jnp.asarray(rng.normal(size=(bh, hd)), jnp.float32)
+    y, sf = rwkv6_scan(r, k, v, w, u, chunk=16, interpret=True)
+    yr, sr = ref.rwkv6_ref(r, k, v, w, u)
+    assert bool(jnp.all(jnp.isfinite(y)))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# mamba2 ssd
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("bh,s,p,n,chunk", [
+    (2, 64, 32, 16, 16), (1, 128, 64, 64, 64), (4, 96, 16, 8, 32),
+])
+def test_ssd_sweep(rng, bh, s, p, n, chunk):
+    x = jnp.asarray(rng.normal(size=(bh, s, p)), jnp.float32)
+    dt = jnp.asarray(np.abs(rng.normal(size=(bh, s))) * 0.4 + 0.05,
+                     jnp.float32)
+    a = jnp.asarray(np.abs(rng.normal(size=(bh,))) + 0.3, jnp.float32)
+    B = jnp.asarray(rng.normal(size=(bh, s, n)), jnp.float32)
+    C = jnp.asarray(rng.normal(size=(bh, s, n)), jnp.float32)
+    y, sf = ssd_scan(x, dt, a, B, C, chunk=chunk, interpret=True)
+    yr, sr = ref.ssd_ref(x, dt, a, B, C)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=3e-4)
+    np.testing.assert_allclose(np.asarray(sf), np.asarray(sr), atol=3e-4)
+
+
+def test_ssd_state_carry_across_chunks(rng):
+    """Chunked result must be invariant to the chunk size."""
+    bh, s, p, n = 1, 128, 16, 8
+    x = jnp.asarray(rng.normal(size=(bh, s, p)), jnp.float32)
+    dt = jnp.asarray(np.abs(rng.normal(size=(bh, s))) * 0.3 + 0.1,
+                     jnp.float32)
+    a = jnp.asarray([0.7], jnp.float32)
+    B = jnp.asarray(rng.normal(size=(bh, s, n)), jnp.float32)
+    C = jnp.asarray(rng.normal(size=(bh, s, n)), jnp.float32)
+    y16, _ = ssd_scan(x, dt, a, B, C, chunk=16, interpret=True)
+    y64, _ = ssd_scan(x, dt, a, B, C, chunk=64, interpret=True)
+    np.testing.assert_allclose(np.asarray(y16), np.asarray(y64), atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# guideline pack
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 16), st.integers(1, 8), st.integers(0, 15))
+def test_pack_property(n, p, idx):
+    if idx >= p:
+        idx = idx % p
+    x = jnp.arange(n * 4, dtype=jnp.float32).reshape(n, 4) + 1
+    o = guideline_pack(x, idx, p, interpret=True)
+    r = ref.pack_ref(x, idx, p)
+    assert o.shape == (p * n, 4)
+    np.testing.assert_array_equal(np.asarray(o), np.asarray(r))
+    # one-hot support property: total mass equals x's mass
+    assert float(jnp.sum(o)) == pytest.approx(float(jnp.sum(x)), rel=1e-6)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.int32])
+def test_pack_dtypes(dtype):
+    x = jnp.ones((8, 16), dtype)
+    o = guideline_pack(x, 2, 4, interpret=True)
+    np.testing.assert_array_equal(np.asarray(o),
+                                  np.asarray(ref.pack_ref(x, 2, 4)))

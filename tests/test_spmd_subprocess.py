@@ -1,0 +1,93 @@
+"""Multi-device SPMD validation (subprocess — keeps this process at 1 dev).
+
+1. core selfcheck: every mock-up through real shard_map on 8 host devices.
+2. SPMD equivalence: identical params + batch on 1 device vs a (data=2,
+   model=4) mesh produce the same loss and updated params.
+"""
+import json
+import os
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+SRC = str(ROOT / "src")
+
+EQUIV_SCRIPT = r"""
+import os, sys
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np, jax, jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.configs import get_config
+from repro.models import lm
+from repro.models.params import tree_pspecs
+from repro.train.trainer import make_step_fns, opt_state_pspecs
+from repro.data import make_batch
+from repro.launch.mesh import make_host_mesh
+
+arch = sys.argv[1]
+cfg = get_config(arch).smoke()
+init_fn, train_fn = make_step_fns(cfg, n_micro=1)
+params1, opt1 = jax.jit(init_fn)(jax.random.key(7))
+batch1 = {k: jnp.asarray(v) for k, v in make_batch(cfg, 8, 16, 0).items()}
+p1, o1, m1 = jax.jit(train_fn)(params1, opt1, batch1, jnp.int32(50))
+
+mesh = make_host_mesh((2, 4), ("data", "model"))
+specs = lm.model_specs(cfg, tp=4)
+pspecs = tree_pspecs(specs)
+opt_ps = opt_state_pspecs(cfg.optimizer, specs)
+put = lambda t, ps: jax.tree.map(
+    lambda x, p: jax.device_put(np.asarray(x), NamedSharding(mesh, p)), t, ps)
+params8, opt8 = put(params1, pspecs), put(opt1, opt_ps)
+batch8 = jax.tree.map(lambda x: jax.device_put(
+    np.asarray(x), NamedSharding(mesh, P("data"))), batch1)
+sm = shard_map(train_fn, mesh=mesh,
+               in_specs=(pspecs, opt_ps,
+                         jax.tree.map(lambda _: P("data"), batch1), P()),
+               out_specs=(pspecs, opt_ps,
+                          {"loss": P(), "grad_norm": P(), "lr": P()}),
+               check_vma=False)
+p8, o8, m8 = jax.jit(sm)(params8, opt8, batch8, jnp.int32(50))
+dl = abs(float(m1["loss"]) - float(m8["loss"]))
+dp = max(float(np.max(np.abs(np.asarray(a, np.float32)
+                             - np.asarray(b, np.float32))))
+         for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p8)))
+import json
+print(json.dumps({"dl": dl, "dp": dp}))
+"""
+
+
+def _run(code, *args, timeout=600):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env.pop("XLA_FLAGS", None)
+    return subprocess.run([sys.executable, "-c", code, *args],
+                          capture_output=True, text=True, timeout=timeout,
+                          env=env)
+
+
+def test_selfcheck_all_mockups_spmd_8dev():
+    r = _run("import sys; from repro.core.selfcheck import main; "
+             "sys.exit(main(['--devices', '8', '--json']))")
+    assert r.returncode == 0, r.stdout + r.stderr
+    out = json.loads(r.stdout.strip().splitlines()[-1])
+    assert out["failures"] == []
+    assert out["total"] >= 40
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", ["llama3.2-3b", "phi3.5-moe-42b-a6.6b",
+                                  "rwkv6-3b", "zamba2-1.2b"])
+def test_spmd_equivalence(arch):
+    r = _run(EQUIV_SCRIPT, arch)
+    assert r.returncode == 0, r.stderr[-2000:]
+    out = json.loads(r.stdout.strip().splitlines()[-1])
+    # updated params (live LR at step 50) are the strict criterion for
+    # dense archs; the loss metric is bf16-reduction-order noisy, and MoE
+    # archs legitimately differ through capacity drops per batch split
+    moe = "moe" in arch or "deepseek" in arch
+    assert out["dl"] < (5e-2 if moe else 1e-2), out
+    assert out["dp"] < (2e-1 if moe else 5e-2), out
