@@ -1,0 +1,84 @@
+"""Version shims for the jax surface this repo is written against.
+
+The codebase targets the current jax API (``jax.shard_map`` with
+``check_vma=``, ``jax.tree.flatten_with_path``, ``jax.make_mesh`` with
+``axis_types=``).  The container ships an older jax where shard_map lives in
+``jax.experimental`` with the flag spelled ``check_rep``, path-aware tree
+flattening lives in ``jax.tree_util``, and meshes have no axis types.  All
+call sites import from here so the rest of the code stays written against
+the modern names.
+"""
+from __future__ import annotations
+
+import jax
+
+try:  # jax >= 0.6: top-level export, replication check named check_vma
+    from jax import shard_map as _shard_map
+    _VMA_KW = "check_vma"
+except ImportError:
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _VMA_KW = "check_rep"
+
+
+def _ensure_optimization_barrier_batchable():
+    """Old jax ships no vmap rule for ``lax.optimization_barrier`` (the
+    mock-ups' anti-DCE attach point); the barrier is elementwise-transparent
+    so batching is the identity on batch dims."""
+    try:
+        from jax._src.lax.lax import optimization_barrier_p
+        from jax.interpreters import batching
+    except ImportError:
+        return
+    if optimization_barrier_p not in batching.primitive_batchers:
+        batching.primitive_batchers[optimization_barrier_p] = \
+            lambda args, dims: (optimization_barrier_p.bind(*args), dims)
+
+
+_ensure_optimization_barrier_batchable()
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True, **kw):
+    """``jax.shard_map`` accepting ``check_vma=`` on every jax version."""
+    kw[_VMA_KW] = check_vma
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kw)
+
+
+def tree_flatten_with_path(tree, is_leaf=None):
+    """``jax.tree.flatten_with_path`` with a ``jax.tree_util`` fallback."""
+    if hasattr(jax.tree, "flatten_with_path"):
+        return jax.tree.flatten_with_path(tree, is_leaf=is_leaf)
+    return jax.tree_util.tree_flatten_with_path(tree, is_leaf=is_leaf)
+
+
+def auto_axis_types(n: int):
+    """``(AxisType.Auto,) * n`` where supported, else None (old meshes are
+    untyped — equivalent to all-Auto)."""
+    at = getattr(jax.sharding, "AxisType", None)
+    return (at.Auto,) * n if at is not None else None
+
+
+def make_mesh(axis_shapes, axis_names, *, axis_types=None, devices=None):
+    """``jax.make_mesh`` tolerating the missing ``axis_types`` kwarg."""
+    kw = {}
+    if devices is not None:
+        kw["devices"] = devices
+    if axis_types is not None:
+        try:
+            return jax.make_mesh(axis_shapes, axis_names,
+                                 axis_types=axis_types, **kw)
+        except TypeError:
+            pass
+    return jax.make_mesh(axis_shapes, axis_names, **kw)
+
+
+def mesh_with_axis_types(devices_array, axis_names):
+    """``jax.sharding.Mesh`` with all-Auto axis types where supported."""
+    types = auto_axis_types(len(axis_names))
+    if types is not None:
+        try:
+            return jax.sharding.Mesh(devices_array, axis_names,
+                                     axis_types=types)
+        except TypeError:
+            pass
+    return jax.sharding.Mesh(devices_array, axis_names)

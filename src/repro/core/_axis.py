@@ -65,6 +65,18 @@ def pshift(x, axis_name: str, pairs: list[tuple[int, int]]):
     return jnp.where(mask, y, jnp.zeros_like(y))
 
 
+def tie_to_axis(x, axis_name: str):
+    """Make ``x`` a *mapped* operand of ``axis_name``.
+
+    Old jax's ``all_to_all`` batching rule miscomputes when an operand is
+    unmapped over the vmap axis (e.g. a constant cotangent entering a
+    custom-VJP bwd).  A no-op select against ``axis_index`` ties the value
+    to the axis; under shard_map/SPMD it compiles to the identity.
+    """
+    idx = axis_index(axis_name)
+    return jnp.where(idx >= 0, x, jnp.zeros_like(x))
+
+
 def tree_rounds(p: int) -> int:
     """Number of rounds of a binomial tree over p ranks."""
     r = 0

@@ -46,6 +46,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+import repro._compat  # noqa: F401  (vmap rule for optimization_barrier)
 from repro.core._axis import (axis_index, axis_size, pshift, ring_perm,
                               shift_perm)
 

@@ -30,7 +30,7 @@ def main(argv=None) -> int:
     import jax.numpy as jnp
     import numpy as np
     from jax.sharding import Mesh, PartitionSpec as P
-    from jax import shard_map
+    from repro._compat import shard_map
 
     from repro.core import collectives as C
 

@@ -1,0 +1,228 @@
+"""Sharded model-parallel primitives — the "MPI application code" layer.
+
+These are the ops the model stack (models/, train/) calls.  Every forward
+AND backward collective is issued through ``repro.core.api``, never raw
+``jax.lax`` — so an active ``api.tuned(profiles=..., force=...)`` context or
+a ``PGTUNE_MODULE`` env spec transparently redirects training and serving
+traffic to guideline mock-ups, exactly as PGMPITuneLib intercepts ``MPI_*``
+into tuned ``PMPI_*`` compositions.  Because the custom VJPs below route the
+backward collective through the same dispatcher, the tuner's per-(op, p,
+message-size) choices apply to the backward pass too.
+
+Gradient pairing (per-shard semantics; axis size ``p``):
+
+=================  ======================  ==========================
+op                 forward collective      backward collective
+=================  ======================  ==========================
+fsdp_gather        api.allgather (data)    api.reducescatter (data)
+tp_allgather       api.allgather (model)   api.reducescatter (model)
+tp_reducescatter   api.reducescatter       api.allgather
+tp_allreduce       api.allreduce           identity (Megatron "g")
+tp_copy            identity                api.allreduce (Megatron "f")
+tp_psum_grad       identity                api.allreduce (weight marker)
+ep_alltoall        api.alltoall            api.alltoall (self-transpose)
+row_matmul         api.allreduce           identity
+col_matmul         identity                api.allreduce (input grad)
+=================  ======================  ==========================
+
+``tp_copy`` marks a replicated ACTIVATION entering a model-sharded region
+(its cotangents arrive partial per shard and must be summed);
+``tp_psum_grad`` marks a replicated WEIGHT used by every shard (partial
+weight grads must be summed before the optimizer).  Identical math, distinct
+ops so dispatch records and profiles stay attributable.
+
+When the named axis is NOT bound in the current trace every op degrades to
+identity / a local matmul: single-device ``jit`` runs the exact same model
+code unsharded.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import api
+from repro.core._axis import tie_to_axis
+from repro.dist.axes import AXES, has_axis
+
+
+def _moved(fn, x, dim: int):
+    """Apply a leading-dim collective along ``dim``."""
+    if dim in (0, -x.ndim):
+        return fn(x)
+    return jnp.moveaxis(fn(jnp.moveaxis(x, dim, 0)), 0, dim)
+
+
+# ---------------------------------------------------------------------------
+# allgather <-> reducescatter pair
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _gather(dim: int, axis: str, x):
+    return _moved(lambda a: api.allgather(a, axis), x, dim)
+
+
+def _gather_fwd(dim, axis, x):
+    return _gather(dim, axis, x), None
+
+
+def _gather_bwd(dim, axis, _, g):
+    return (_moved(lambda a: api.reducescatter(a, axis), g, dim),)
+
+
+_gather.defvjp(_gather_fwd, _gather_bwd)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _scatter(dim: int, axis: str, x):
+    return _moved(lambda a: api.reducescatter(a, axis), x, dim)
+
+
+def _scatter_fwd(dim, axis, x):
+    return _scatter(dim, axis, x), None
+
+
+def _scatter_bwd(dim, axis, _, g):
+    return (_moved(lambda a: api.allgather(a, axis), g, dim),)
+
+
+_scatter.defvjp(_scatter_fwd, _scatter_bwd)
+
+
+def fsdp_gather(x, dim: int = 0, axis: str = AXES.data):
+    """All-gather a ZeRO-3-sharded param along ``dim`` over the data axis;
+    the backward reduce-scatters the grad back to the owner shard (summed
+    over the axis — see train/trainer.py for the /d normalization)."""
+    if not has_axis(axis):
+        return x
+    return _gather(dim, axis, x)
+
+
+def tp_allgather(x, dim: int, axis: str = AXES.model):
+    """All-gather a model-sharded activation along ``dim``."""
+    if not has_axis(axis):
+        return x
+    return _gather(dim, axis, x)
+
+
+def tp_reducescatter(x, dim: int = 0, axis: str = AXES.model):
+    """Reduce-scatter along ``dim`` over the model axis (sum + keep own
+    block); backward all-gathers the cotangent."""
+    if not has_axis(axis):
+        return x
+    return _scatter(dim, axis, x)
+
+
+# ---------------------------------------------------------------------------
+# allreduce <-> identity pair (Megatron f/g)
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _allreduce(axis: str, x):
+    return api.allreduce(x, axis)
+
+
+def _allreduce_fwd(axis, x):
+    return _allreduce(axis, x), None
+
+
+def _allreduce_bwd(axis, _, g):
+    # the reduced value is ONE logical tensor replicated over the axis; its
+    # (replicated) cotangent passes through untouched
+    return (g,)
+
+
+_allreduce.defvjp(_allreduce_fwd, _allreduce_bwd)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _psum_grad(axis: str, x):
+    return x
+
+
+def _psum_grad_fwd(axis, x):
+    return x, None
+
+
+def _psum_grad_bwd(axis, _, g):
+    return (api.allreduce(g, axis),)
+
+
+_psum_grad.defvjp(_psum_grad_fwd, _psum_grad_bwd)
+
+
+def tp_allreduce(x, axis: str = AXES.model):
+    """Sum partial activations over the model axis (row-parallel output)."""
+    if not has_axis(axis):
+        return x
+    return _allreduce(axis, x)
+
+
+def tp_copy(x, axis: str = AXES.model):
+    """Mark a replicated activation entering a model-sharded region: fwd is
+    identity, bwd sums the per-shard partial cotangents."""
+    if not has_axis(axis):
+        return x
+    return _psum_grad(axis, x)
+
+
+def tp_psum_grad(x, axis: str = AXES.model):
+    """Mark a replicated weight used on every model shard: fwd identity,
+    bwd sums the partial weight grads over the axis."""
+    if not has_axis(axis):
+        return x
+    return _psum_grad(axis, x)
+
+
+# ---------------------------------------------------------------------------
+# alltoall (expert parallelism)
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _alltoall(axis: str, x):
+    return api.alltoall(x, axis)
+
+
+def _alltoall_fwd(axis, x):
+    return _alltoall(axis, x), None
+
+
+def _alltoall_bwd(axis, _, g):
+    # y_i[j] = x_j[i] is its own transpose: route the cotangent back through
+    # the (tuned) alltoall; tie_to_axis keeps old-jax vmap batching honest
+    return (api.alltoall(tie_to_axis(g, axis), axis),)
+
+
+_alltoall.defvjp(_alltoall_fwd, _alltoall_bwd)
+
+
+def ep_alltoall(x, axis: str = AXES.model):
+    """Expert dispatch/combine shuffle: rows [p*n, ...] exchanged so shard i
+    receives block i of every peer.  Self-inverse; backward is the same
+    (tuned) alltoall."""
+    if not has_axis(axis):
+        return x
+    return _alltoall(axis, x)
+
+
+# ---------------------------------------------------------------------------
+# Megatron matmuls
+# ---------------------------------------------------------------------------
+
+
+def col_matmul(x, w, axis: str = AXES.model):
+    """Column-parallel matmul: ``x`` replicated, ``w`` sharded on its output
+    dim -> output sharded on the last dim.  No forward collective; the input
+    grad is summed over the axis (via ``tp_copy``)."""
+    return jnp.matmul(tp_copy(x, axis), w)
+
+
+def row_matmul(x, w, axis: str = AXES.model):
+    """Row-parallel matmul: ``x`` sharded on the last dim, ``w`` sharded on
+    its input dim -> partial products summed with a tuned all-reduce.  The
+    backward needs no collective (cotangent is replicated)."""
+    return tp_allreduce(jnp.matmul(x, w), axis)

@@ -9,9 +9,7 @@ from __future__ import annotations
 
 import jax
 
-
-def _auto(n: int):
-    return (jax.sharding.AxisType.Auto,) * n
+from repro._compat import auto_axis_types, make_mesh, mesh_with_axis_types
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -22,10 +20,9 @@ def make_production_mesh(*, multi_pod: bool = False):
     n = 1
     for s in shape:
         n *= s
-    return jax.sharding.Mesh(
-        np.asarray(devs[:n]).reshape(shape), axes, axis_types=_auto(len(axes)))
+    return mesh_with_axis_types(np.asarray(devs[:n]).reshape(shape), axes)
 
 
 def make_host_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
     """Small mesh over host devices (tests / measured tuning)."""
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return make_mesh(shape, axes, axis_types=auto_axis_types(len(axes)))

@@ -3,7 +3,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
+from repro._compat import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.core import api

@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro._compat import tree_flatten_with_path
 from repro.dist.axes import axis_size_or_1
 
 Tree = dict[str, Any]   # nested dict of ParamSpec
@@ -99,7 +100,7 @@ def init_tree(tree: Tree, key, *, fold: int = 0):
     index)."""
     sizes = {"model": axis_size_or_1("model"),
              "data": axis_size_or_1("data")}
-    flat, treedef = jax.tree.flatten_with_path(
+    flat, treedef = tree_flatten_with_path(
         tree, is_leaf=lambda x: isinstance(x, ParamSpec))
     leaves = []
     for i, (path, spec) in enumerate(flat):

@@ -194,7 +194,7 @@ class Trainer:
     warmup: int = 100
 
     def __post_init__(self):
-        from jax import shard_map
+        from repro._compat import shard_map
         self.tp = (self.mesh.shape.get("model", 1) if self.mesh else 1)
         self.specs = lm.model_specs(self.cfg, self.tp)
         self.pspecs = tree_pspecs(self.specs)

