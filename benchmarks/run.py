@@ -9,14 +9,16 @@ from benchmarks.common import header
 def main() -> None:
     header()
     from benchmarks import (bench_case_allreduce, bench_case_reduce,
-                            bench_guidelines, bench_measured,
-                            bench_nrep_lookup, bench_roofline)
+                            bench_decode_profile, bench_guidelines,
+                            bench_measured, bench_nrep_lookup,
+                            bench_roofline)
     for mod in (bench_guidelines,       # Figs. 3/4/5 violation tables
                 bench_case_reduce,      # Fig. 6 Reduce<=Allreduce case
                 bench_case_allreduce,   # Fig. 7 rs+agv beats everything
                 bench_nrep_lookup,      # Alg.1/Eq.1 + O(log M) lookup
                 bench_measured,         # ReproMPI-style measured pipeline
-                bench_roofline):        # §Roofline per dry-run cell
+                bench_roofline,         # §Roofline per dry-run cell
+                bench_decode_profile):  # trace-replay serving (smoke)
         try:
             mod.run()
         except Exception:

@@ -7,9 +7,11 @@ Public surface:
 * ``repro.core.guidelines``  — guideline registry / Table-1 memory model
 * ``repro.core.costmodel``   — α-β-γ fabric model (v5e ICI / DCN presets)
 * ``repro.core.profiles``    — performance profiles (Listing-1 format)
-* ``repro.core.tuner``       — offline tuning pass
+* ``repro.core.tuner``       — offline tuning pass + trace replay
 * ``repro.core.nrep``        — NREP estimation (Alg. 1 / Eq. 1)
+* ``repro.core.trace``       — workload traces (phase-tagged dispatch mix)
 """
 from repro.core import api  # noqa: F401
 from repro.core.api import tuned  # noqa: F401
 from repro.core.profiles import Profile, ProfileStore, Range  # noqa: F401
+from repro.core.trace import Trace, TraceEntry  # noqa: F401

@@ -6,8 +6,10 @@ of raw ``jax.lax`` collectives.  Selection order per call:
 1. explicit ``impl=`` argument              (unit tests, hillclimbing)
 2. context ``force`` table                  (PGMPITuneCLI ``--module=op:alg=x``)
 3. ``PGTUNE_MODULE`` environment variable   (same syntax as the paper's CLI)
-4. loaded performance profiles              (PGMPITuneD online redirection)
-5. the default implementation
+4. phase-specific performance profiles      (trace-replay tuning; the store
+   matching the active ``api.phase`` tag)
+5. loaded performance profiles              (PGMPITuneD online redirection)
+6. the default implementation
 
 Dispatch happens at TRACE time: JAX shapes are static, so the profile's
 O(log M) binary search runs while tracing and the compiled program contains
@@ -36,35 +38,72 @@ from repro.core.profiles import OP_TO_MPI, ProfileStore
 _TLS = threading.local()
 
 
+DEFAULT_PHASE = "fwd"
+
+
 @dataclasses.dataclass
 class TuneContext:
     profiles: ProfileStore | None = None
     force: dict[str, str] = dataclasses.field(default_factory=dict)
     scratch_budget_bytes: int | None = None
-    record: list[tuple[str, int, int, str]] = dataclasses.field(
-        default_factory=list)  # (op, axis_size, nbytes, impl)
+    record: list[tuple[str, int, int, str, str]] = dataclasses.field(
+        default_factory=list)  # (op, axis_size, nbytes, impl, phase)
     chunk_bytes: int = 0
+    phase_profiles: dict[str, ProfileStore] | None = None
 
 
 def _ctx() -> TuneContext | None:
     return getattr(_TLS, "ctx", None)
 
 
+def current_phase() -> str:
+    """The active workload phase tag (see ``phase``); default ``"fwd"``."""
+    return getattr(_TLS, "phase", DEFAULT_PHASE)
+
+
+@contextlib.contextmanager
+def phase(name: str):
+    """Tag every dispatch issued inside with workload phase ``name``.
+
+    Phases name the coarse callsite classes of an LM step — ``fwd`` (the
+    ambient default), ``bwd`` (custom-VJP backwards + grad sync; dist/ops
+    and train/trainer set this), ``prefill`` / ``decode`` (serving; set by
+    launch/serve).  The tag is captured at TRACE time into
+    ``TuneContext.record`` and selects the matching store from
+    ``tuned(phase_profiles=...)``.
+    """
+    prev = current_phase()
+    _TLS.phase = name
+    try:
+        yield
+    finally:
+        _TLS.phase = prev
+
+
 @contextlib.contextmanager
 def tuned(profiles: ProfileStore | None = None,
           force: dict[str, str] | None = None,
           scratch_budget_bytes: int | None = None,
-          chunk_bytes: int = 0):
+          chunk_bytes: int = 0,
+          phase_profiles: dict[str, ProfileStore] | None = None,
+          record: list | None = None):
     """Activate tuning for every ``repro.core.api`` collective issued inside.
 
     ``force`` maps op name -> impl name (the CLI library's static selection);
-    ``profiles`` is the PGMPITuneD mode.  Without either, defaults are used
-    but calls are still recorded.
+    ``profiles`` is the PGMPITuneD mode.  ``phase_profiles`` maps a phase
+    tag (see ``phase``) to a phase-specific ``ProfileStore`` consulted
+    before ``profiles`` — the trace-replay tuner (``tuner.tune_trace``)
+    emits these.  ``record`` lets the caller supply the list dispatches are
+    appended to (shared across nested builder contexts).  Without any of
+    these, defaults are used but calls are still recorded.
     """
     prev = _ctx()
     ctx = TuneContext(profiles=profiles, force=dict(force or {}),
                       scratch_budget_bytes=scratch_budget_bytes,
-                      chunk_bytes=chunk_bytes)
+                      chunk_bytes=chunk_bytes,
+                      phase_profiles=(dict(phase_profiles)
+                                      if phase_profiles else None),
+                      record=record if record is not None else [])
     _TLS.ctx = ctx
     try:
         yield ctx
@@ -88,9 +127,17 @@ def parse_module_spec(spec: str) -> dict[str, str]:
     return out
 
 
+_ENV_FORCE_CACHE: tuple[str, dict[str, str]] = ("", {})
+
+
 def _env_force() -> dict[str, str]:
+    """Parsed ``PGTUNE_MODULE``, memoized on the raw string — dispatch is a
+    trace-time hot path and the env var rarely changes mid-process."""
+    global _ENV_FORCE_CACHE
     spec = os.environ.get("PGTUNE_MODULE", "")
-    return parse_module_spec(spec) if spec else {}
+    if spec != _ENV_FORCE_CACHE[0]:
+        _ENV_FORCE_CACHE = (spec, parse_module_spec(spec) if spec else {})
+    return _ENV_FORCE_CACHE[1]
 
 
 def _payload_bytes(x) -> int:
@@ -101,6 +148,7 @@ def _select(op: str, x, axis: str, impl: str | None) -> str:
     ctx = _ctx()
     p = axis_size(axis)
     nbytes = _payload_bytes(x)
+    ph = current_phase()
     name = impl
     if name is None and ctx is not None and op in ctx.force:
         name = ctx.force[op]
@@ -108,8 +156,13 @@ def _select(op: str, x, axis: str, impl: str | None) -> str:
         env = _env_force()
         if op in env:
             name = env[op]
-    if name is None and ctx is not None and ctx.profiles is not None:
-        name = ctx.profiles.lookup(op, p, nbytes)
+    if name is None and ctx is not None:
+        if ctx.phase_profiles is not None:
+            store = ctx.phase_profiles.get(ph)
+            if store is not None:
+                name = store.lookup(op, p, nbytes)
+        if name is None and ctx.profiles is not None:
+            name = ctx.profiles.lookup(op, p, nbytes)
     if name is None:
         name = "default"
     cand = C.REGISTRY[op].get(name)
@@ -123,7 +176,7 @@ def _select(op: str, x, axis: str, impl: str | None) -> str:
             and cand.extra_bytes(nbytes, p) > ctx.scratch_budget_bytes):
         name, cand = "default", C.REGISTRY[op]["default"]
     if ctx is not None:
-        ctx.record.append((op, p, nbytes, name))
+        ctx.record.append((op, p, nbytes, name, ph))
     return name
 
 
@@ -183,7 +236,7 @@ def format_footer(ctx: TuneContext) -> str:
     """The paper's Listing-2 footer: which algorithm served each call."""
     lines = []
     seen = set()
-    for op, p, nbytes, name in ctx.record:
+    for op, p, nbytes, name, *_phase in ctx.record:
         key = (op, p, nbytes, name)
         if key in seen:
             continue

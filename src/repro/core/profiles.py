@@ -15,6 +15,7 @@ from __future__ import annotations
 import bisect
 import dataclasses
 import json
+import os
 import pathlib
 
 OP_TO_MPI = {
@@ -154,3 +155,54 @@ class ProfileStore:
         for f in sorted(d.glob("*.json")):
             store.add(Profile.from_json(f.read_text()))
         return store
+
+
+# ---------------------------------------------------------------------------
+# directory / environment resolution (serve + train consumers)
+# ---------------------------------------------------------------------------
+
+PROFILE_DIR_ENV = "PGTUNE_PROFILE_DIR"
+
+
+def load_stores(directory: str | pathlib.Path) \
+        -> tuple["ProfileStore | None", dict[str, "ProfileStore"]]:
+    """Load ``(base_store, phase_stores)`` from a profile directory.
+
+    Layout: profile files (``*.pgtune`` / ``*.json``) at the top level form
+    the phase-agnostic base store; each SUBDIRECTORY containing profile
+    files becomes a phase store keyed by the subdirectory name (the layout
+    ``tuner.TraceTuneReport.save`` writes).  Either part may be absent.
+    """
+    d = pathlib.Path(directory)
+    if not d.is_dir():
+        raise FileNotFoundError(f"profile directory {d} does not exist")
+    base = ProfileStore.load(d)
+    phases: dict[str, ProfileStore] = {}
+    for sub in sorted(p for p in d.iterdir() if p.is_dir()):
+        store = ProfileStore.load(sub)
+        if len(store):
+            phases[sub.name] = store
+    return (base if len(base) else None), phases
+
+
+def resolve_stores(directory: str | pathlib.Path | None = None) \
+        -> tuple["ProfileStore | None", dict[str, "ProfileStore"]]:
+    """Profile-loading precedence: explicit ``directory`` argument >
+    ``$PGTUNE_PROFILE_DIR`` > none (returns ``(None, {})``).
+
+    An explicit directory that does not exist raises (the caller asked for
+    it); a stale env var only warns and serves untuned — it must not crash
+    processes that never asked for profiles.
+    """
+    if directory:
+        return load_stores(directory)
+    d = os.environ.get(PROFILE_DIR_ENV, "")
+    if not d:
+        return None, {}
+    try:
+        return load_stores(d)
+    except FileNotFoundError:
+        import warnings
+        warnings.warn(f"${PROFILE_DIR_ENV}={d} does not exist; "
+                      "serving untuned defaults")
+        return None, {}

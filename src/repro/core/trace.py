@@ -1,0 +1,183 @@
+"""Workload traces: ``TuneContext.record`` as a first-class artifact.
+
+The paper's offline pass (§4.2) tunes each collective *in isolation* over a
+synthetic size sweep; its PGMPI predecessor (arXiv:1606.00215) instead tunes
+the op mix a real application issues per callsite.  A ``Trace`` captures that
+mix from live model traffic: every dispatch the api records — forward
+all-gathers, backward reduce-scatters, prefill vs decode serving steps — is
+aggregated into ``(op, axis_size, nbytes, phase, impl) -> count`` cells.
+
+Phases are the coarse callsite classes of an LM workload:
+
+=========  ===============================================================
+phase      traffic
+=========  ===============================================================
+fwd        forward-pass collectives (ambient default under training)
+bwd        custom-VJP backward collectives + gradient sync (dist/ops,
+           train/trainer tag these via ``api.phase("bwd")``)
+prefill    serving prompt ingestion (launch/serve tags these)
+decode     serving token-by-token steps (launch/serve tags these)
+=========  ===============================================================
+
+The on-disk form is JSONL — one aggregated cell per line, so traces from
+many hosts/steps concatenate and ``merge`` trivially:
+
+    {"op": "reducescatter", "p": 8, "nbytes": 4096, "phase": "bwd",
+     "impl": "default", "count": 24}
+
+``tuner.tune_trace`` consumes a ``Trace`` and emits per-phase
+``ProfileStore``s (see DESIGN_TRACE.md), which ``api.tuned(phase_profiles=
+...)`` applies at dispatch — the backward can pick a different mock-up than
+the forward for the same message size.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+from typing import Iterable, Iterator
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceEntry:
+    """One aggregated dispatch cell."""
+    op: str
+    axis_size: int
+    nbytes: int
+    phase: str = "fwd"
+    impl: str = "default"
+    count: int = 1
+
+    def key(self) -> tuple[str, int, int, str, str]:
+        return (self.op, self.axis_size, self.nbytes, self.phase, self.impl)
+
+    def to_json(self) -> str:
+        return json.dumps({"op": self.op, "p": self.axis_size,
+                           "nbytes": self.nbytes, "phase": self.phase,
+                           "impl": self.impl, "count": self.count})
+
+    @classmethod
+    def from_json(cls, line: str) -> "TraceEntry":
+        d = json.loads(line)
+        return cls(op=d["op"], axis_size=int(d["p"]),
+                   nbytes=int(d["nbytes"]), phase=d.get("phase", "fwd"),
+                   impl=d.get("impl", "default"),
+                   count=int(d.get("count", 1)))
+
+
+class Trace:
+    """An aggregated multiset of dispatch cells (order-independent)."""
+
+    def __init__(self, entries: Iterable[TraceEntry] | None = None):
+        self._cells: dict[tuple[str, int, int, str, str], int] = {}
+        for e in entries or ():
+            self._add(e.key(), e.count)
+
+    def _add(self, key: tuple[str, int, int, str, str], count: int) -> None:
+        if count <= 0:
+            raise ValueError(f"non-positive count {count} for {key}")
+        self._cells[key] = self._cells.get(key, 0) + count
+
+    # -- construction --------------------------------------------------------
+    @classmethod
+    def from_record(cls, record) -> "Trace":
+        """Build from ``TuneContext.record`` 5-tuples
+        ``(op, axis_size, nbytes, impl, phase)``."""
+        t = cls()
+        for op, p, nbytes, impl, phase in record:
+            t._add((op, p, nbytes, phase, impl), 1)
+        return t
+
+    @classmethod
+    def from_context(cls, ctx) -> "Trace":
+        return cls.from_record(ctx.record)
+
+    # -- views ---------------------------------------------------------------
+    @property
+    def entries(self) -> list[TraceEntry]:
+        return [TraceEntry(op, p, nbytes, phase, impl, count)
+                for (op, p, nbytes, phase, impl), count
+                in sorted(self._cells.items())]
+
+    def __len__(self) -> int:
+        return len(self._cells)
+
+    def __iter__(self) -> Iterator[TraceEntry]:
+        return iter(self.entries)
+
+    def __eq__(self, other) -> bool:
+        return isinstance(other, Trace) and self._cells == other._cells
+
+    def total(self) -> int:
+        """Total dispatch count across all cells."""
+        return sum(self._cells.values())
+
+    def phases(self) -> list[str]:
+        return sorted({k[3] for k in self._cells})
+
+    def ops(self) -> list[str]:
+        return sorted({k[0] for k in self._cells})
+
+    def histogram(self) -> dict[tuple[str, int, int, str], int]:
+        """``(op, axis_size, nbytes, phase) -> count`` (summed over impls —
+        the tuner re-decides the impl, so the recorded one is provenance)."""
+        out: dict[tuple[str, int, int, str], int] = {}
+        for (op, p, nbytes, phase, _impl), count in self._cells.items():
+            k = (op, p, nbytes, phase)
+            out[k] = out.get(k, 0) + count
+        return out
+
+    def cells(self, phase: str | None = None) \
+            -> dict[tuple[str, int, int], int]:
+        """``(op, axis_size, nbytes) -> count`` for one phase (or all)."""
+        out: dict[tuple[str, int, int], int] = {}
+        for (op, p, nbytes, ph, _impl), count in self._cells.items():
+            if phase is not None and ph != phase:
+                continue
+            k = (op, p, nbytes)
+            out[k] = out.get(k, 0) + count
+        return out
+
+    def filter(self, *, phase: str | None = None,
+               op: str | None = None) -> "Trace":
+        keep = [e for e in self.entries
+                if (phase is None or e.phase == phase)
+                and (op is None or e.op == op)]
+        return Trace(keep)
+
+    def merge(self, *others: "Trace") -> "Trace":
+        """Sum counts cell-wise (traces from many steps/hosts)."""
+        out = Trace(self.entries)
+        for o in others:
+            for e in o.entries:
+                out._add(e.key(), e.count)
+        return out
+
+    def summary(self) -> str:
+        lines = [f"trace: {len(self)} cells, {self.total()} dispatches"]
+        for ph in self.phases():
+            cells = self.cells(phase=ph)
+            n = sum(cells.values())
+            ops = sorted({op for op, _, _ in cells})
+            lines.append(f"  {ph}: {n} dispatches over {len(cells)} cells "
+                         f"({', '.join(ops)})")
+        return "\n".join(lines)
+
+    # -- disk ----------------------------------------------------------------
+    def to_jsonl(self) -> str:
+        return "".join(e.to_json() + "\n" for e in self.entries)
+
+    @classmethod
+    def from_jsonl(cls, text: str) -> "Trace":
+        entries = [TraceEntry.from_json(ln) for ln in text.splitlines()
+                   if ln.strip() and not ln.lstrip().startswith("#")]
+        return cls(entries)
+
+    def save(self, path: str | pathlib.Path) -> None:
+        p = pathlib.Path(path)
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(self.to_jsonl())
+
+    @classmethod
+    def load(cls, path: str | pathlib.Path) -> "Trace":
+        return cls.from_jsonl(pathlib.Path(path).read_text())

@@ -60,6 +60,7 @@ class TuneReport:
     measurements: list[Measurement]
     violations: list[Violation]
     profiles: ProfileStore
+    notes: list[str] = dataclasses.field(default_factory=list)
 
     def summary(self) -> str:
         pat = [v for v in self.violations if v.gl_kind == "pattern"]
@@ -67,6 +68,7 @@ class TuneReport:
                  f"pattern violations: {len(pat)}",
                  f"other violations: {len(self.violations) - len(pat)}",
                  f"profiles written: {len(self.profiles)}"]
+        lines += [f"note: {n}" for n in self.notes]
         return "\n".join(lines)
 
 
@@ -140,28 +142,24 @@ def tune(ops: Sequence[str] | None = None,
     p = axis_size
     ms: list[Measurement] = []
     vios: list[Violation] = []
+    notes: list[str] = []
     store = ProfileStore()
 
     for op in ops:
         picks: list[tuple[int, str]] = []   # (nbytes, winning impl)
         lat_by_size: dict[int, dict[str, float]] = {}
         for nbytes in sizes:
-            lats: dict[str, float] = {}
-            for impl_name, impl in REGISTRY[op].items():
-                if impl.requires_pow2 and (p & (p - 1)) != 0:
-                    continue
-                if (scratch_budget_bytes is not None
-                        and impl_name != "default"
-                        and impl.extra_bytes(nbytes, p) > scratch_budget_bytes):
-                    continue
-                t = backend.latency(op, impl_name, p, nbytes)
-                if math.isinf(t):
-                    continue
-                lats[impl_name] = t
-                ms.append(Measurement(op, impl_name, p, nbytes, t,
-                                      backend.nrep_for(op, impl_name, nbytes)))
+            lats = _measure_cell(op, p, nbytes, backend,
+                                 scratch_budget_bytes, ms)
+            t_def = lats.get("default")
+            if t_def is None:
+                # default unmeasurable (inf latency / skipped by the
+                # backend): nothing to compare mock-ups against — skip the
+                # size rather than crash, and record why.
+                notes.append(f"{op} p={p} {nbytes}B: default impl "
+                             "unmeasurable; size skipped")
+                continue
             lat_by_size[nbytes] = lats
-            t_def = lats["default"]
             cands = {k: v for k, v in lats.items() if k != "default"}
             if not cands:
                 continue
@@ -205,7 +203,145 @@ def tune(ops: Sequence[str] | None = None,
                               meta={"backend": backend.name,
                                     "min_win": min_win}))
 
-    return TuneReport(measurements=ms, violations=vios, profiles=store)
+    return TuneReport(measurements=ms, violations=vios, profiles=store,
+                      notes=notes)
+
+
+def _measure_cell(op: str, p: int, nbytes: int, backend,
+                  scratch_budget_bytes: int | None,
+                  ms: list[Measurement]) -> dict[str, float]:
+    """Benchmark every admissible impl of one (op, p, nbytes) cell — the
+    §4.2 admission rules (pow2 guard, Table-1 scratch budget, inf filter)
+    shared by the sweep tuner and the trace-replay tuner.  Appends to
+    ``ms`` and returns ``{impl: latency}``."""
+    lats: dict[str, float] = {}
+    for impl_name, impl in REGISTRY[op].items():
+        if impl.requires_pow2 and (p & (p - 1)) != 0:
+            continue
+        if (scratch_budget_bytes is not None
+                and impl_name != "default"
+                and impl.extra_bytes(nbytes, p) > scratch_budget_bytes):
+            continue
+        t = backend.latency(op, impl_name, p, nbytes)
+        if math.isinf(t):
+            continue
+        lats[impl_name] = t
+        ms.append(Measurement(op, impl_name, p, nbytes, t,
+                              backend.nrep_for(op, impl_name, nbytes)))
+    return lats
+
+
+# ---------------------------------------------------------------------------
+# trace replay (PGMPI-style per-callsite tuning, arXiv:1606.00215)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class TraceTuneReport:
+    """Result of tuning against a recorded workload trace.
+
+    ``phase_profiles`` maps each phase tag found in the trace to a
+    ``ProfileStore`` built from the (op, axis_size, nbytes) cells that phase
+    actually issued — feed it to ``api.tuned(phase_profiles=...)``.
+    ``est_default_s`` / ``est_tuned_s`` are the backend's frequency-weighted
+    total collective latency per phase (each cell weighted by its trace
+    count), i.e. the modeled communication time of replaying the trace with
+    defaults vs with the emitted profiles.
+    """
+    phase_profiles: dict[str, ProfileStore]
+    measurements: list[Measurement]
+    est_default_s: dict[str, float]
+    est_tuned_s: dict[str, float]
+    notes: list[str] = dataclasses.field(default_factory=list)
+
+    def store(self, phase: str) -> ProfileStore | None:
+        return self.phase_profiles.get(phase)
+
+    def summary(self) -> str:
+        lines = []
+        for ph in sorted(self.est_default_s):
+            d, t = self.est_default_s[ph], self.est_tuned_s[ph]
+            n = len(self.phase_profiles.get(ph, ()))
+            sp = d / t if t > 0 else 1.0
+            lines.append(f"{ph}: {n} profiles, modeled {d*1e6:.1f}us -> "
+                         f"{t*1e6:.1f}us ({sp:.2f}x)")
+        lines += [f"note: {n}" for n in self.notes]
+        return "\n".join(lines) or "empty trace"
+
+    def save(self, directory, *, fmt: str = "text") -> None:
+        """One subdirectory per phase (``<dir>/<phase>/<op>_p<P>.pgtune``) —
+        the layout ``profiles.load_stores`` / ``PGTUNE_PROFILE_DIR``
+        consumers read back."""
+        import pathlib
+        d = pathlib.Path(directory)
+        for ph, store in sorted(self.phase_profiles.items()):
+            store.save(d / ph, fmt=fmt)
+
+
+def tune_trace(trace, backend=None, *, min_win: float = 0.10,
+               scratch_budget_bytes: int | None = None,
+               coalesce: bool = True) -> TraceTuneReport:
+    """Tune against a recorded op mix instead of a synthetic size sweep.
+
+    For every phase in ``trace`` and every (op, axis_size, nbytes) cell that
+    phase recorded, benchmark the default and every admissible mock-up on
+    ``backend`` and select the fastest mock-up that beats the default by at
+    least ``min_win`` — exactly the §4.2 violation rule, but evaluated only
+    at the message sizes / axis sizes the workload actually issued and
+    weighted by how often it issued them.  Emits one ``ProfileStore`` per
+    phase, so e.g. the backward's reduce-scatters can select a different
+    mock-up than the forward's all-gathers.
+    """
+    backend = backend or CostModelBackend(costmodel.V5E_ICI)
+    ms: list[Measurement] = []
+    notes: list[str] = []
+    phase_profiles: dict[str, ProfileStore] = {}
+    est_default: dict[str, float] = {}
+    est_tuned: dict[str, float] = {}
+    # fwd and bwd often share cells; measure each (op, p, nbytes) once —
+    # this matters for a future measured backend doing real timed runs
+    lat_cache: dict[tuple[str, int, int], dict[str, float]] = {}
+
+    for ph in trace.phases():
+        picks: dict[tuple[str, int], list[tuple[int, str]]] = {}
+        t_d = t_t = 0.0
+        for (op, p, nbytes), weight in sorted(trace.cells(phase=ph).items()):
+            if op not in REGISTRY:
+                notes.append(f"{ph}: unknown op {op!r}; cell skipped")
+                continue
+            cell = (op, p, nbytes)
+            if cell not in lat_cache:
+                lat_cache[cell] = _measure_cell(op, p, nbytes, backend,
+                                                scratch_budget_bytes, ms)
+            lats = lat_cache[cell]
+            t_def = lats.get("default")
+            if t_def is None:
+                notes.append(f"{ph}: {op} p={p} {nbytes}B: default impl "
+                             "unmeasurable; cell skipped")
+                continue
+            t_d += weight * t_def
+            cands = {k: v for k, v in lats.items() if k != "default"}
+            best = min(cands, key=cands.get) if cands else None
+            if best is not None and cands[best] < t_def * (1.0 - min_win):
+                picks.setdefault((op, p), []).append((nbytes, best))
+                t_t += weight * cands[best]
+            else:
+                t_t += weight * t_def
+
+        for (op, p), pk in sorted(picks.items()):
+            ranges = [Range(nb, nb, impl) for nb, impl in sorted(pk)]
+            if coalesce:
+                ranges = _coalesce(ranges)
+            phase_profiles.setdefault(ph, ProfileStore()).add(
+                Profile(op=op, axis_size=p, ranges=ranges,
+                        meta={"backend": backend.name, "min_win": min_win,
+                              "phase": ph, "source": "trace"}))
+        est_default[ph] = t_d
+        est_tuned[ph] = t_t
+
+    return TraceTuneReport(phase_profiles=phase_profiles, measurements=ms,
+                           est_default_s=est_default, est_tuned_s=est_tuned,
+                           notes=notes)
 
 
 def _coalesce(ranges: list[Range]) -> list[Range]:

@@ -34,6 +34,10 @@ ops so dispatch records and profiles stay attributable.
 When the named axis is NOT bound in the current trace every op degrades to
 identity / a local matmul: single-device ``jit`` runs the exact same model
 code unsharded.
+
+Every backward collective is issued under ``api.phase("bwd")``, so dispatch
+records (and the trace-replay tuner's per-phase profiles — see
+DESIGN_TRACE.md) distinguish forward from backward traffic.
 """
 from __future__ import annotations
 
@@ -69,7 +73,8 @@ def _gather_fwd(dim, axis, x):
 
 
 def _gather_bwd(dim, axis, _, g):
-    return (_moved(lambda a: api.reducescatter(a, axis), g, dim),)
+    with api.phase("bwd"):
+        return (_moved(lambda a: api.reducescatter(a, axis), g, dim),)
 
 
 _gather.defvjp(_gather_fwd, _gather_bwd)
@@ -85,7 +90,8 @@ def _scatter_fwd(dim, axis, x):
 
 
 def _scatter_bwd(dim, axis, _, g):
-    return (_moved(lambda a: api.allgather(a, axis), g, dim),)
+    with api.phase("bwd"):
+        return (_moved(lambda a: api.allgather(a, axis), g, dim),)
 
 
 _scatter.defvjp(_scatter_fwd, _scatter_bwd)
@@ -148,7 +154,8 @@ def _psum_grad_fwd(axis, x):
 
 
 def _psum_grad_bwd(axis, _, g):
-    return (api.allreduce(g, axis),)
+    with api.phase("bwd"):
+        return (api.allreduce(g, axis),)
 
 
 _psum_grad.defvjp(_psum_grad_fwd, _psum_grad_bwd)
@@ -194,7 +201,8 @@ def _alltoall_fwd(axis, x):
 def _alltoall_bwd(axis, _, g):
     # y_i[j] = x_j[i] is its own transpose: route the cotangent back through
     # the (tuned) alltoall; tie_to_axis keeps old-jax vmap batching honest
-    return (api.alltoall(tie_to_axis(g, axis), axis),)
+    with api.phase("bwd"):
+        return (api.alltoall(tie_to_axis(g, axis), axis),)
 
 
 _alltoall.defvjp(_alltoall_fwd, _alltoall_bwd)

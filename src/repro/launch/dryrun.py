@@ -152,7 +152,7 @@ def _modeled_latency(ctx) -> dict:
     from repro.core import costmodel as cm
     t_sel = 0.0
     t_def = 0.0
-    for op, p, nbytes, impl in ctx.record:
+    for op, p, nbytes, impl, *_phase in ctx.record:
         try:
             t_sel += cm.latency(op, impl, p, nbytes, cm.V5E_ICI)
             t_def += cm.latency(op, "default", p, nbytes, cm.V5E_ICI)

@@ -32,7 +32,10 @@ def main(argv=None) -> int:
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--warmup", type=int, default=20)
     ap.add_argument("--compress", choices=("none", "bf16"), default="none")
-    ap.add_argument("--profile-dir", default="")
+    ap.add_argument("--profile-dir", default="",
+                    help="tuned-profile directory (flat files = base store,"
+                         " per-phase subdirs from tuner.tune_trace);"
+                         " default: $PGTUNE_PROFILE_DIR")
     ap.add_argument("--force", default="", help="op:alg=...;... override")
     ap.add_argument("--ckpt-dir", default="results/train_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=100)
@@ -44,7 +47,7 @@ def main(argv=None) -> int:
     from repro.ckpt import AsyncCheckpointer, checkpoint as ck
     from repro.configs import get_config
     from repro.core.api import parse_module_spec
-    from repro.core.profiles import ProfileStore
+    from repro.core.profiles import resolve_stores
     from repro.data import make_batch
     from repro.ft import StepWatchdog
     from repro.launch.mesh import make_host_mesh, make_production_mesh
@@ -63,12 +66,16 @@ def main(argv=None) -> int:
         d, t = (int(x) for x in args.mesh.split("x"))
         mesh = make_host_mesh((d, t), ("data", "model"))
 
-    profiles = (ProfileStore.load(args.profile_dir)
-                if args.profile_dir else None)
+    # precedence: --profile-dir > $PGTUNE_PROFILE_DIR > none
+    profiles, phase_stores = resolve_stores(args.profile_dir or None)
+    if profiles is not None or phase_stores:
+        print(f"profiles: base={len(profiles) if profiles else 0} "
+              f"phases={sorted(phase_stores)}")
     force = parse_module_spec(args.force) if args.force else None
 
     tr = Trainer(cfg, mesh=mesh, n_micro=args.n_micro,
-                 compress=args.compress, profiles=profiles, force=force,
+                 compress=args.compress, profiles=profiles,
+                 phase_profiles=phase_stores or None, force=force,
                  base_lr=args.lr, warmup=args.warmup)
     params, opt = tr.init(0)
     start = ck.latest_step(args.ckpt_dir) or 0

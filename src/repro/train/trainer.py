@@ -153,8 +153,11 @@ def make_step_fns(cfg: ModelConfig, *, n_micro: int = 1,
         else:
             loss, grads = jax.value_and_grad(loss_of)(params, batch)
 
-        grads = _fsdp_mean(grads, specs)
-        grads = finalize_grads(grads, specs, compress=compress)
+        # grad sync is backward-phase traffic: the trace-replay tuner may
+        # give these allreduces a different profile than fwd collectives
+        with api.phase("bwd"):
+            grads = _fsdp_mean(grads, specs)
+            grads = finalize_grads(grads, specs, compress=compress)
         lr = lr_schedule(step_idx, base_lr=base_lr, warmup=warmup,
                          total=total_steps)
         params, opt_state = opt_update(grads, opt_state, params, lr=lr)
@@ -189,9 +192,16 @@ class Trainer:
     n_micro: int = 1
     compress: str = "none"
     profiles: Any = None
+    phase_profiles: dict | None = None   # phase tag -> ProfileStore
     force: dict | None = None
     base_lr: float = 3e-4
     warmup: int = 100
+    record: list | None = None           # shared dispatch-record sink
+
+    def _tuned(self):
+        return api.tuned(profiles=self.profiles,
+                         phase_profiles=self.phase_profiles,
+                         force=self.force, record=self.record)
 
     def __post_init__(self):
         from repro._compat import shard_map
@@ -211,7 +221,7 @@ class Trainer:
             self._step = jax.jit(train_fn, donate_argnums=(0, 1))
             return
 
-        with api.tuned(profiles=self.profiles, force=self.force):
+        with self._tuned():
             sm_init = shard_map(
                 init_fn, mesh=self.mesh, in_specs=P(),
                 out_specs=(self.pspecs, opt_ps), check_vma=False)
@@ -239,11 +249,11 @@ class Trainer:
         return tuple(axes) if axes else None
 
     def init(self, seed: int = 0):
-        with api.tuned(profiles=self.profiles, force=self.force):
+        with self._tuned():
             return self._init(jax.random.key(seed))
 
     def step(self, params, opt_state, batch, i):
-        with api.tuned(profiles=self.profiles, force=self.force):
+        with self._tuned():
             return self._step(params, opt_state, batch,
                               jnp.asarray(i, jnp.int32))
 

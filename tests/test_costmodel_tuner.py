@@ -120,6 +120,31 @@ def test_tuner_coalesces_ranges():
         assert a.impl != b.impl or a.hi < b.lo - 1
 
 
+def test_tuner_survives_unmeasurable_default():
+    """Regression: a size where the default's latency is inf (or the
+    backend skips it) used to crash with KeyError: 'default'; it must be
+    skipped with a note instead."""
+    class InfDefaultBackend:
+        name = "stub"
+
+        def latency(self, op, impl, p, nbytes):
+            if impl == "default" and nbytes == 8:
+                return math.inf
+            return 1.0 if impl == "default" else 0.5
+
+        def nrep_for(self, op, impl, nbytes):
+            return 1
+
+    rep = tuner.tune(ops=["allreduce"], sizes=(8, 64), axis_size=16,
+                     backend=InfDefaultBackend())
+    assert any("unmeasurable" in n for n in rep.notes)
+    assert "note:" in rep.summary()
+    # the measurable size still tunes normally
+    prof = rep.profiles.get("allreduce", 16)
+    assert prof is not None and prof.lookup(64) is not None
+    assert prof.lookup(8) is None
+
+
 @pytest.mark.slow
 def test_tuner_measured_backend_smoke():
     """Full measured pipeline on host devices (tiny sizes, single device is

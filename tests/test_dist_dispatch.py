@@ -25,7 +25,7 @@ def _gather_loss(ws):
 
 
 def _impls(record, op):
-    return {impl for o, _, _, impl in record if o == op}
+    return {impl for o, _, _, impl, _ph in record if o == op}
 
 
 # ---------------------------------------------------------------------------

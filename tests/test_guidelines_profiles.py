@@ -108,6 +108,68 @@ def test_profile_lookup_matches_linear_scan(bounds, query):
     assert prof.lookup(query) == linear
 
 
+_IMPL_POOL = ("scatter_as_bcast", "scatter_as_scatterv", "scatter_as_tree")
+
+
+def _ranges_from_bounds(bounds):
+    """Random sorted unique ints -> non-overlapping closed ranges with
+    impls drawn deterministically from a pool."""
+    bounds = sorted(bounds)
+    ranges = []
+    for i in range(0, len(bounds) - 1, 2):
+        ranges.append(Range(bounds[i], bounds[i + 1] - 1,
+                            _IMPL_POOL[i % len(_IMPL_POOL)]))
+    return ranges
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.lists(st.integers(min_value=1, max_value=10 ** 8), min_size=2,
+                max_size=24, unique=True),
+       st.integers(min_value=2, max_value=4096))
+def test_profile_text_and_json_roundtrip_property(bounds, axis_size):
+    """Property: random non-overlapping ranges survive Listing-1 text ->
+    parse -> text AND JSON -> parse."""
+    ranges = _ranges_from_bounds(bounds)
+    if not ranges:
+        return
+    prof = Profile(op="scatter", axis_size=axis_size, ranges=ranges)
+    t1 = Profile.from_text(prof.to_text())
+    assert t1.ranges == prof.ranges
+    assert t1.axis_size == axis_size and t1.op == "scatter"
+    assert prof.to_text() == t1.to_text()          # fixpoint
+    j1 = Profile.from_json(prof.to_json())
+    assert j1.ranges == prof.ranges and j1.axis_size == axis_size
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(min_value=1, max_value=10 ** 6), min_size=2,
+                max_size=12, unique=True),
+       st.lists(st.integers(min_value=1, max_value=10 ** 6), min_size=2,
+                max_size=12, unique=True))
+def test_store_save_load_mixed_formats_property(bounds_a, bounds_b):
+    """ProfileStore.load must merge .pgtune and .json files from one
+    directory and reproduce every lookup.  (tempfile, not the tmp_path
+    fixture: ``given`` wrappers take no fixture args.)"""
+    import tempfile
+
+    ra, rb = _ranges_from_bounds(bounds_a), _ranges_from_bounds(bounds_b)
+    if not ra or not rb:
+        return
+    with tempfile.TemporaryDirectory() as d:
+        ProfileStore([Profile(op="scatter", axis_size=8, ranges=ra)]).save(
+            d, fmt="text")
+        ProfileStore([Profile(op="allgather", axis_size=16,
+                              ranges=rb)]).save(d, fmt="json")
+        back = ProfileStore.load(d)
+    assert len(back) == 2
+    for r in ra:
+        assert back.lookup("scatter", 8, r.lo) == r.impl
+        assert back.lookup("scatter", 8, r.hi) == r.impl
+    for r in rb:
+        assert back.lookup("allgather", 16, r.hi) == r.impl
+        assert back.lookup("allgather", 8, r.hi) is None
+
+
 def test_store_save_load(tmp_path):
     store = ProfileStore([
         Profile(op="allreduce", axis_size=16,
@@ -170,7 +232,8 @@ def test_dispatch_profile_and_record():
     x = jnp.ones((8, 4, 2), jnp.float32)
     y, ctx = _run_ar(dict(profiles=store), x)
     assert np.allclose(np.asarray(y), 8.0)
-    assert ctx.record == [("allreduce", 8, 32, "allreduce_as_rsb_allgather")]
+    assert ctx.record == [("allreduce", 8, 32, "allreduce_as_rsb_allgather",
+                           "fwd")]
     footer = api.format_footer(ctx)
     assert "#@pgpmi" not in footer
     assert "#@pgmpi alg MPI_Allreduce 32 allreduce_as_rsb_allgather" in footer

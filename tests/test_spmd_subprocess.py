@@ -3,6 +3,8 @@
 1. core selfcheck: every mock-up through real shard_map on 8 host devices.
 2. SPMD equivalence: identical params + batch on 1 device vs a (data=2,
    model=4) mesh produce the same loss and updated params.
+3. Pod-axis equivalence: the same check on a (pod, data, model) = (2, 2, 2)
+   mesh, exercising the hierarchical RS(data)→AR(pod) gradient sync.
 """
 import json
 import os
@@ -29,24 +31,31 @@ from repro.data import make_batch
 from repro.launch.mesh import make_host_mesh
 
 arch = sys.argv[1]
+# mesh spec "2x4" -> (data, model); "2x2x2" -> (pod, data, model)
+shape = tuple(int(x) for x in (sys.argv[2] if len(sys.argv) > 2
+                               else "2x4").split("x"))
+axes = ("pod", "data", "model")[-len(shape):]
+tp = shape[-1]
+dp_axes = axes[:-1]
+
 cfg = get_config(arch).smoke()
 init_fn, train_fn = make_step_fns(cfg, n_micro=1)
 params1, opt1 = jax.jit(init_fn)(jax.random.key(7))
 batch1 = {k: jnp.asarray(v) for k, v in make_batch(cfg, 8, 16, 0).items()}
 p1, o1, m1 = jax.jit(train_fn)(params1, opt1, batch1, jnp.int32(50))
 
-mesh = make_host_mesh((2, 4), ("data", "model"))
-specs = lm.model_specs(cfg, tp=4)
+mesh = make_host_mesh(shape, axes)
+specs = lm.model_specs(cfg, tp=tp)
 pspecs = tree_pspecs(specs)
 opt_ps = opt_state_pspecs(cfg.optimizer, specs)
 put = lambda t, ps: jax.tree.map(
     lambda x, p: jax.device_put(np.asarray(x), NamedSharding(mesh, p)), t, ps)
 params8, opt8 = put(params1, pspecs), put(opt1, opt_ps)
 batch8 = jax.tree.map(lambda x: jax.device_put(
-    np.asarray(x), NamedSharding(mesh, P("data"))), batch1)
+    np.asarray(x), NamedSharding(mesh, P(dp_axes))), batch1)
 sm = shard_map(train_fn, mesh=mesh,
                in_specs=(pspecs, opt_ps,
-                         jax.tree.map(lambda _: P("data"), batch1), P()),
+                         jax.tree.map(lambda _: P(dp_axes), batch1), P()),
                out_specs=(pspecs, opt_ps,
                           {"loss": P(), "grad_norm": P(), "lr": P()}),
                check_vma=False)
@@ -95,4 +104,17 @@ def test_spmd_equivalence(arch):
     # (observed ~5e-4 on this seed) so a real collective regression still
     # trips even with the looser loss tolerance.
     assert out["dl"] < (1e-1 if moe else 1e-2), out
+    assert out["dp"] < 5e-2, out
+
+
+@pytest.mark.slow
+def test_spmd_equivalence_pod_axis():
+    """ROADMAP's real-`pod`-axis coverage: an 8-device (pod, data, model)
+    = (2, 2, 2) mesh — batch split over pod AND data, params FSDP-sharded
+    over data only, grads synced via the hierarchical RS(data)→AR(pod)
+    schedule — must match the unsharded 1-device step."""
+    r = _run(EQUIV_SCRIPT, "llama3.2-3b", "2x2x2")
+    assert r.returncode == 0, r.stderr[-2000:]
+    out = json.loads(r.stdout.strip().splitlines()[-1])
+    assert out["dl"] < 1e-2, out
     assert out["dp"] < 5e-2, out
