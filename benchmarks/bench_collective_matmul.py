@@ -1,0 +1,89 @@
+"""Fused-vs-unfused collective-matmul latency per shape (modeled) + the
+must-win consistency check.
+
+For a grid of (op, p, nbytes) cells, price the unfused composition and the
+``fused_ring`` overlap schedule on the v5e ICI model, then run the tuner on
+the same grid and verify its selections agree: every cell where the overlap
+model says fusion wins by at least ``MIN_WIN`` must select ``fused_ring``,
+and at least one small cell must keep the default (fusion's per-step
+overhead must not be modeled away).  Emits ``BENCH_collective_matmul.json``
+for the CI artifact; exits non-zero (via ``run()`` raising) when the tuner
+never selects the fused impl on a must-win shape.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from benchmarks.common import emit
+from repro.core import costmodel as cm
+from repro.core import tuner
+
+OPS = ("allgather_matmul", "matmul_reducescatter")
+AXIS_SIZES = (4, 8, 16, 64)
+SIZES = (64, 1024, 32768, 262_144, 1_048_576, 4_194_304, 16_777_216)
+MIN_WIN = 0.10
+OUT = pathlib.Path(__file__).resolve().parents[1] / "results" / \
+    "BENCH_collective_matmul.json"
+
+
+def sweep_cells(topo=cm.V5E_ICI):
+    cells = []
+    for op in OPS:
+        for p in AXIS_SIZES:
+            rep = tuner.tune(ops=[op], sizes=SIZES, axis_size=p,
+                             backend=tuner.CostModelBackend(topo),
+                             min_win=MIN_WIN)
+            for nbytes in SIZES:
+                t_def = cm.latency(op, "default", p, nbytes, topo)
+                t_fus = cm.latency(op, "fused_ring", p, nbytes, topo)
+                pick = rep.profiles.lookup(op, p, nbytes) or "default"
+                cells.append({"op": op, "p": p, "nbytes": nbytes,
+                              "t_default_s": t_def, "t_fused_s": t_fus,
+                              "model_win": t_def / t_fus,
+                              "tuner_pick": pick})
+    return cells
+
+
+def run():
+    cells = sweep_cells()
+    must_win = [c for c in cells if c["t_fused_s"]
+                < c["t_default_s"] * (1.0 - MIN_WIN)]
+    missed = [c for c in must_win if c["tuner_pick"] != "fused_ring"]
+    n_fused = sum(1 for c in cells if c["tuner_pick"] == "fused_ring")
+    n_default_small = sum(1 for c in cells
+                          if c["nbytes"] <= 1024
+                          and c["tuner_pick"] == "default")
+    OUT.parent.mkdir(parents=True, exist_ok=True)
+    OUT.write_text(json.dumps({
+        "min_win": MIN_WIN, "cells": cells,
+        "must_win_cells": len(must_win), "missed": missed,
+    }, indent=1))
+    for op in OPS:
+        best = max((c["model_win"] for c in cells if c["op"] == op),
+                   default=0.0)
+        emit(f"collective_matmul/{op}", 0.0,
+             f"fused_selected={sum(1 for c in cells if c['op'] == op and c['tuner_pick'] == 'fused_ring')}"
+             f"/{sum(1 for c in cells if c['op'] == op)}"
+             f" best_model_win=x{best:.2f}")
+    if missed:
+        raise AssertionError(
+            f"tuner missed {len(missed)} must-win fused cells, e.g. "
+            f"{missed[0]}")
+    if not must_win or n_fused == 0:
+        raise AssertionError("overlap model never favors fused_ring — "
+                             "cost model regression")
+    if n_default_small == 0:
+        raise AssertionError("fused_ring selected even on tiny messages — "
+                             "per-step overhead lost from the model")
+    emit("collective_matmul/consistency", 0.0,
+         f"must_win={len(must_win)} missed=0 json={OUT.name}")
+
+
+def main():
+    run()
+    print(f"wrote {OUT}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Dispatch hot-path micro-benchmark (the ``api._select`` fast path).
+
+Dispatch runs at trace time, so the cost that matters is Python overhead
+per collective call while jit-tracing a model.  Trace a chain of ``N``
+``api.allreduce`` calls under three regimes and report µs per dispatch:
+
+* ``no_ctx``        — bare (no ``api.tuned`` active): fast path, no record
+* ``tuned_empty``   — ``api.tuned()`` with no force/profiles: fast path
+                      with recording (the common training configuration)
+* ``tuned_profiles``— a populated ``ProfileStore``: full lookup machinery
+
+The fast path must keep ``tuned_empty`` within ~2x of ``no_ctx`` and well
+under the profile-lookup path.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.core import api
+from repro.core.profiles import Profile, ProfileStore, Range
+
+N = 200          # dispatches per trace
+REPS = 5
+
+
+def _chain(x):
+    for _ in range(N):
+        x = api.allreduce(x, "x")
+    return x
+
+
+def _trace_time():
+    f = jax.vmap(_chain, axis_name="x")
+    best = float("inf")
+    for _ in range(REPS):
+        t0 = time.perf_counter()
+        jax.make_jaxpr(f)(jnp.ones((4, 8), jnp.float32))
+        best = min(best, time.perf_counter() - t0)
+    return best / N * 1e6          # us per dispatch
+
+
+def run():
+    base = _trace_time()
+    emit("dispatch/no_ctx", base, "fast path, no record")
+
+    with api.tuned():
+        fast = _trace_time()
+    emit("dispatch/tuned_empty", fast, "fast path + record")
+
+    store = ProfileStore([Profile(op="allreduce", axis_size=4,
+                                  ranges=[Range(1, 10 ** 9,
+                                                "allreduce_as_doubling")])])
+    with api.tuned(profiles=store):
+        slow = _trace_time()
+    emit("dispatch/tuned_profiles", slow,
+         f"full lookup; fast-path speedup x{slow / max(fast, 1e-9):.2f}")
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -9,12 +9,14 @@ from benchmarks.common import header
 def main() -> None:
     header()
     from benchmarks import (bench_case_allreduce, bench_case_reduce,
-                            bench_decode_profile, bench_guidelines,
-                            bench_measured, bench_nrep_lookup,
-                            bench_roofline)
+                            bench_collective_matmul, bench_decode_profile,
+                            bench_dispatch, bench_guidelines, bench_measured,
+                            bench_nrep_lookup, bench_roofline)
     for mod in (bench_guidelines,       # Figs. 3/4/5 violation tables
                 bench_case_reduce,      # Fig. 6 Reduce<=Allreduce case
                 bench_case_allreduce,   # Fig. 7 rs+agv beats everything
+                bench_collective_matmul,  # fused-vs-unfused overlap model
+                bench_dispatch,         # api._select fast-path overhead
                 bench_nrep_lookup,      # Alg.1/Eq.1 + O(log M) lookup
                 bench_measured,         # ReproMPI-style measured pipeline
                 bench_roofline,         # §Roofline per dry-run cell

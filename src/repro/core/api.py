@@ -146,6 +146,19 @@ def _payload_bytes(x) -> int:
 
 def _select(op: str, x, axis: str, impl: str | None) -> str:
     ctx = _ctx()
+    # hot-path short-circuit: with no explicit impl, no force table, no
+    # profiles and no phase profiles, the answer is "default" — skip the
+    # payload/phase/profile machinery entirely (dispatch runs at trace time
+    # but sits on every collective of every jit trace; see
+    # benchmarks/bench_dispatch.py for the win).  The pow2 and scratch
+    # guards never demote "default", so skipping them is exact.
+    if impl is None and (ctx is None or (not ctx.force and ctx.profiles is
+                                         None and ctx.phase_profiles is
+                                         None)) and not _env_force():
+        if ctx is not None:
+            ctx.record.append((op, axis_size(axis), _payload_bytes(x),
+                               "default", current_phase()))
+        return "default"
     p = axis_size(axis)
     nbytes = _payload_bytes(x)
     ph = current_phase()
@@ -230,6 +243,27 @@ def scan(x, axis: str, *, op: str = "add", impl: str | None = None):
 
 def exscan(x, axis: str, *, op: str = "add", impl: str | None = None):
     return _dispatch("exscan", x, axis, impl, op=op)
+
+
+def allgather_matmul(x, w, axis: str, *, impl: str | None = None,
+                     return_gathered: bool = False):
+    """``all_gather(x, rows) @ w`` — fused-vs-unfused is a tuner decision.
+
+    ``x`` per-shard ``[n, K]`` (the dispatch key is its payload, i.e. the
+    bytes the collective moves), ``w`` ``[K, M]`` shard-local.  With
+    ``return_gathered=True`` also returns ``all_gather(x)`` (the ring
+    materializes it for free; custom VJPs reuse it instead of re-gathering).
+    """
+    return _dispatch("allgather_matmul", x, axis, impl, w=w,
+                     return_gathered=return_gathered)
+
+
+def matmul_reducescatter(x, w, axis: str, *, impl: str | None = None):
+    """``reduce_scatter(x @ w, rows)`` — the mirror of ``allgather_matmul``
+    (and its backward pairing).  ``x`` per-shard ``[p*n, K]``, ``w``
+    ``[K, M]``; partial products are summed over ``axis`` and row-block i
+    lands on shard i."""
+    return _dispatch("matmul_reducescatter", x, axis, impl, w=w)
 
 
 def format_footer(ctx: TuneContext) -> str:

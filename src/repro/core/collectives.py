@@ -552,6 +552,53 @@ def scatter_as_tree(x, axis: str, *, root: int = 0, **_):
 
 
 # ---------------------------------------------------------------------------
+# fused collective-matmul ops (latency-hiding mock-ups, kernels/)
+# ---------------------------------------------------------------------------
+#
+# Two extra ops extend the vocabulary beyond MPI's: a matmul fused to the
+# collective feeding (or consuming) it.  Semantics (second operand ``w``
+# passed by keyword; per-shard shapes, axis size ``p``):
+#
+#   allgather_matmul       x [n, K], w [K, M]   -> all_gather(x) @ w [p*n, M]
+#   matmul_reducescatter   x [p*n, K], w [K, M] -> reduce_scatter(x @ w) [n, M]
+#
+# ``default`` is the unfused composition today's dist/ops emit; ``fused_ring``
+# is the kernels/collective_matmul.py ring schedule that overlaps each chunk's
+# transfer with the previous chunk's matmul.  The tuner arbitrates the two via
+# the overlap-aware cost model (max(comm, compute) per step instead of sum).
+
+
+def allgather_matmul_default(x, axis: str, *, w, return_gathered: bool = False,
+                             **_):
+    """Unfused composition: all_gather then one dense matmul."""
+    g = lax.all_gather(x, axis, axis=0, tiled=True)
+    out = jnp.matmul(g, w)
+    return (out, g) if return_gathered else out
+
+
+def allgather_matmul_fused_ring(x, axis: str, *, w,
+                                return_gathered: bool = False, **_):
+    """(⊕) ring allgather-matmul: chunk s+1 in flight while chunk s is on
+    the MXU (kernels/collective_matmul.py)."""
+    from repro.kernels import collective_matmul as cmm
+    return cmm.ring_allgather_matmul(x, w, axis,
+                                     return_gathered=return_gathered)
+
+
+def matmul_reducescatter_default(x, axis: str, *, w, **_):
+    """Unfused composition: one dense matmul then reduce-scatter."""
+    return lax.psum_scatter(jnp.matmul(x, w), axis, scatter_dimension=0,
+                            tiled=True)
+
+
+def matmul_reducescatter_fused_ring(x, axis: str, *, w, **_):
+    """(⊕) ring matmul-reducescatter: the travelling accumulator is in
+    flight while the next block's contribution is computed."""
+    from repro.kernels import collective_matmul as cmm
+    return cmm.ring_matmul_reducescatter(x, w, axis)
+
+
+# ---------------------------------------------------------------------------
 # registry
 # ---------------------------------------------------------------------------
 
@@ -688,6 +735,23 @@ def _reg() -> dict[str, dict[str, Impl]]:
 
     r["exscan"] = {i.name: i for i in [
         mk("default", "exscan", exscan_default, None, _nb0),
+    ]}
+
+    r["allgather_matmul"] = {i.name: i for i in [
+        mk("default", "allgather_matmul", allgather_matmul_default, None,
+           lambda n, p: p * n, desc="all_gather then dense matmul (unfused)"),
+        mk("fused_ring", "allgather_matmul", allgather_matmul_fused_ring,
+           "EXT", lambda n, p: p * n + 2 * n,
+           desc="ring overlap: chunk matmul while next chunk in flight"),
+    ]}
+
+    r["matmul_reducescatter"] = {i.name: i for i in [
+        mk("default", "matmul_reducescatter", matmul_reducescatter_default,
+           None, lambda n, p: n, desc="dense matmul then psum_scatter"),
+        mk("fused_ring", "matmul_reducescatter",
+           matmul_reducescatter_fused_ring, "EXT",
+           lambda n, p: 2 * max(n // p, 1),
+           desc="ring overlap: travelling accumulator hides matmul"),
     ]}
 
     r["scatter"] = {i.name: i for i in [

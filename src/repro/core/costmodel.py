@@ -52,6 +52,15 @@ class Topo:
     default_pricing: str = "optimal"   # "optimal" | "naive"
     hw_bcast: bool = False
     hw_bcast_speedup: float = 5.0
+    # fused collective-matmul terms (allgather_matmul / matmul_reducescatter):
+    # peak matmul throughput, the assumed output width M of the fused matmul
+    # (the dispatch key only carries the collective payload, so the model
+    # prices a canonical TP-width matmul), and the per-ring-step overhead of
+    # the fused kernel (RDMA issue + semaphore wait + small-tile MXU
+    # inefficiency) — the term that makes fusion LOSE on small messages.
+    matmul_flops: float = 2.0e14
+    fused_mm_cols: int = 8192
+    fused_step_overhead: float = 1.5e-6
 
     @property
     def beta(self) -> float:
@@ -129,6 +138,23 @@ def t_ring_alltoall(p, Bt, t: Topo):
     ring: byte-hops ≈ Bt·p/4, 2 links per node ⇒ Bt·p·β/8."""
     div = 8.0 if t.bidir else 4.0
     return (p - 1) * t.alpha + p * Bt * t.beta / div
+
+
+def t_fused_matmul(elems: float, t: Topo):
+    """MXU time of a fused matmul whose gathered/reduced operand has
+    ``elems`` elements: 2 MACs per element per output column."""
+    return 2.0 * elems * t.fused_mm_cols / t.matmul_flops
+
+
+def t_overlapped_ring(p, step_comm: float, mm_total: float, t: Topo):
+    """The overlap law of the fused collective-matmul rings: the first
+    chunk's matmul is exposed, every later step costs max(transfer,
+    chunk-matmul) instead of their sum.  ``fused_step_overhead`` is paid
+    per step (serial kernel issue), so fusion loses in the latency regime
+    and wins when both terms are material — the guideline the tuner
+    verifies per shape."""
+    chunk = mm_total / p + t.fused_step_overhead
+    return chunk + (p - 1) * max(chunk, step_comm)
 
 
 def t_meta(p, t: Topo):
@@ -284,6 +310,25 @@ def latency(op: str, impl: str, p: int, nbytes: int, topo: Topo,
         ("scan", "scan_as_exscan_reducelocal"):
             lambda: scan_cost(B) + topo.alpha + B * (topo.beta + topo.gamma),
         ("exscan", "default"): lambda: scan_cost(B) + topo.alpha + B * topo.beta,
+        # ---- fused collective-matmul ops ----
+        # allgather_matmul: B = per-shard contribution bytes of x; the
+        # matmul touches p·B/4 gathered elements.  Unfused = collective
+        # PLUS matmul; fused = per-step max (see t_overlapped_ring).
+        ("allgather_matmul", "default"):
+            lambda: ag(B) + t_fused_matmul(p * B / 4.0, topo),
+        ("allgather_matmul", "fused_ring"):
+            lambda: t_overlapped_ring(
+                p, topo.alpha + B * topo.beta,
+                t_fused_matmul(p * B / 4.0, topo), topo),
+        # matmul_reducescatter: B = total input-buffer bytes of x (p row
+        # blocks); each ring step moves one reduced output block (~B/p with
+        # the canonical square-ish K≈M assumption) and reduces it (γ).
+        ("matmul_reducescatter", "default"):
+            lambda: t_fused_matmul(B / 4.0, topo) + rs(B),
+        ("matmul_reducescatter", "fused_ring"):
+            lambda: t_overlapped_ring(
+                p, topo.alpha + (B / p) * (topo.beta + topo.gamma),
+                t_fused_matmul(B / 4.0, topo), topo),
         # ---- scatter (B = total buffer bytes, p chunks) ----
         ("scatter", "default"): lambda: dflt_scatter(B),
         ("scatter", "scatter_as_bcast"): lambda: dflt_bcast(B),

@@ -45,10 +45,18 @@ def _collect() -> list[Guideline]:
                 continue
             gl_id = impl.guideline
             if gl_id == "EXT":
-                gl_id = f"EXT:{name}"
-            gls.append(Guideline(
-                gl_id=gl_id, op=op, mockup=name,
-                statement=f"{op}(n) <= {name.replace('_as_', ' -> ')}(n)"))
+                # qualify with the op when the mock-up name alone is not
+                # unique (e.g. "fused_ring" exists for both fused
+                # collective-matmul ops)
+                gl_id = (f"EXT:{name}" if "_as_" in name
+                         else f"EXT:{op}.{name}")
+            if name == "fused_ring":
+                stmt = (f"{op}(n) <= fused_ring(n)  "
+                        "[fused overlap must not lose to collective+matmul]")
+            else:
+                stmt = f"{op}(n) <= {name.replace('_as_', ' -> ')}(n)"
+            gls.append(Guideline(gl_id=gl_id, op=op, mockup=name,
+                                 statement=stmt))
 
     def key(g: Guideline):
         if g.gl_id.startswith("GL"):

@@ -25,6 +25,12 @@ from repro.core import collectives as C
 
 AXIS = "bench"
 
+# ops that carry a second (shard-local) matmul operand; measured with a
+# square [MM_WIDTH, MM_WIDTH] weight so wall-clock includes the fused (or
+# trailing/leading) MXU work the cost model prices via ``fused_mm_cols``
+MATMUL_OPS = ("allgather_matmul", "matmul_reducescatter")
+MM_WIDTH = 64
+
 
 @lru_cache(maxsize=1)
 def _mesh() -> Mesh:
@@ -37,9 +43,15 @@ def axis_size() -> int:
 
 
 def _input_rows(op: str, n_rows: int, p: int) -> int:
-    """Rows of the per-shard input for a per-chunk payload of ``n_rows``."""
+    """Rows of the per-shard input for a payload of ``n_rows`` rows."""
     if op in ("alltoall", "reducescatter", "scatter"):
+        # v-style ops: n_rows is the per-chunk payload, input is p chunks
         return n_rows * p
+    if op == "matmul_reducescatter":
+        # the dispatch key (and hence the replayed nbytes) is the FULL
+        # [p*n, K] input payload — build exactly that many rows, rounded
+        # to a multiple of p so psum_scatter divides
+        return max(p, (n_rows // p) * p)
     return n_rows
 
 
@@ -50,8 +62,14 @@ def _compiled(op: str, impl: str, n_rows: int, width: int, dtype_name: str):
     fn = C.REGISTRY[op][impl].fn
     rows = _input_rows(op, n_rows, p)
 
-    def body(x):
-        return fn(x, AXIS)
+    if op in MATMUL_OPS:
+        w = jnp.ones((width, width), jnp.dtype(dtype_name))
+
+        def body(x):
+            return fn(x, AXIS, w=w)
+    else:
+        def body(x):
+            return fn(x, AXIS)
 
     sm = shard_map(body, mesh=mesh, in_specs=P(AXIS), out_specs=P(AXIS),
                    check_vma=False)
@@ -79,6 +97,8 @@ def sample_latency(op: str, impl: str, nbytes: int, count: int,
                    *, width: int = 1, dtype=jnp.float32,
                    barrier: bool = True) -> list[float]:
     """``count`` barrier-synced wall-clock samples of one collective (s)."""
+    if op in MATMUL_OPS:
+        width = MM_WIDTH
     itemsize = jnp.dtype(dtype).itemsize
     n_rows = max(1, nbytes // (itemsize * width))
     fn, x = _compiled(op, impl, n_rows, width, jnp.dtype(dtype).name)

@@ -29,6 +29,10 @@ OP_TO_MPI = {
     "scan": "MPI_Scan",
     "exscan": "MPI_Exscan",
     "scatter": "MPI_Scatter",
+    # fused collective-matmul extension ops (no MPI counterpart; MPIX_ names
+    # keep the Listing-1 text profiles round-trippable)
+    "allgather_matmul": "MPIX_Allgather_matmul",
+    "matmul_reducescatter": "MPIX_Matmul_reduce_scatter",
 }
 MPI_TO_OP = {v: k for k, v in OP_TO_MPI.items()}
 

@@ -93,6 +93,26 @@ def main(argv=None) -> int:
     check("exscan/default", run(C.REGISTRY["exscan"]["default"].fn, xf),
           wantscan - x)
 
+    # fused collective-matmul ops: w is a shard-local (replicated) closure
+    # operand; output width differs from the input so run() can't reshape
+    wm = rng.normal(size=(w, 4)).astype(np.float32)
+
+    def run_mm(fn, xin, out_shape):
+        sm = shard_map(lambda a: fn(a, "x", w=jnp.asarray(wm)), mesh=mesh,
+                       in_specs=P("x"), out_specs=P("x"), check_vma=False)
+        return np.asarray(jax.jit(sm)(xin)).reshape((P_,) + out_shape)
+
+    want_agmm = full @ wm
+    for nm in C.impl_names("allgather_matmul"):
+        y = run_mm(C.REGISTRY["allgather_matmul"][nm].fn, xf,
+                   want_agmm.shape)
+        check(f"allgather_matmul/{nm}", y,
+              np.broadcast_to(want_agmm, (P_,) + want_agmm.shape))
+    want_mmrs = (xb @ wm).sum(0).reshape(P_, n, 4)
+    for nm in C.impl_names("matmul_reducescatter"):
+        y = run_mm(C.REGISTRY["matmul_reducescatter"][nm].fn, xbf, (n, 4))
+        check(f"matmul_reducescatter/{nm}", y, want_mmrs)
+
     fails = [k for k, v in results.items() if not v]
     if args.json:
         print(json.dumps({"devices": P_, "total": len(results),

@@ -76,6 +76,7 @@ class CostModelBackend:
     """Latency = analytic model; deterministic, any axis size."""
 
     name = "costmodel"
+    supported_axis_size: int | None = None      # any p
 
     def __init__(self, topo: costmodel.Topo, *, chunk_bytes: int = 0):
         self.topo = topo
@@ -101,6 +102,13 @@ class MeasuredBackend:
         self.K = K
         self.max_nrep = max_nrep
         self._one_byte: dict[tuple[str, str], nrep.OneByteEstimate] = {}
+        self._nrep: dict[tuple[str, str, int], int] = {}
+
+    @property
+    def supported_axis_size(self) -> int:
+        """Wall clock only exists at the axis size the host devices form;
+        the trace-replay tuner skips (and notes) every other cell."""
+        return measure.axis_size()
 
     def _ob(self, op: str, impl: str) -> nrep.OneByteEstimate:
         key = (op, impl)
@@ -111,10 +119,15 @@ class MeasuredBackend:
         return self._one_byte[key]
 
     def nrep_for(self, op: str, impl: str, nbytes: int) -> int:
-        n = nrep.estimate_nrep(measure.make_sampler(op, impl), nbytes,
-                               self._ob(op, impl),
-                               rse_threshold=self.rse_large, K=self.K)
-        return min(n, self.max_nrep)
+        # memoized: latency() and the Measurement record both ask, and each
+        # estimate costs real barrier-synced timed samples
+        key = (op, impl, nbytes)
+        if key not in self._nrep:
+            n = nrep.estimate_nrep(measure.make_sampler(op, impl), nbytes,
+                                   self._ob(op, impl),
+                                   rse_threshold=self.rse_large, K=self.K)
+            self._nrep[key] = min(n, self.max_nrep)
+        return self._nrep[key]
 
     def latency(self, op: str, impl: str, p: int, nbytes: int) -> float:
         if p != measure.axis_size():
@@ -144,6 +157,14 @@ def tune(ops: Sequence[str] | None = None,
     vios: list[Violation] = []
     notes: list[str] = []
     store = ProfileStore()
+
+    sup = getattr(backend, "supported_axis_size", None)
+    if sup is not None and p != sup:
+        notes.append(f"axis_size {p} != backend's host axis size {sup}; "
+                     "nothing measured (run on a mesh of that size or use "
+                     "the cost-model backend)")
+        return TuneReport(measurements=ms, violations=vios, profiles=store,
+                          notes=notes)
 
     for op in ops:
         picks: list[tuple[int, str]] = []   # (nbytes, winning impl)
@@ -291,8 +312,15 @@ def tune_trace(trace, backend=None, *, min_win: float = 0.10,
     weighted by how often it issued them.  Emits one ``ProfileStore`` per
     phase, so e.g. the backward's reduce-scatters can select a different
     mock-up than the forward's all-gathers.
+
+    With a ``MeasuredBackend`` this is the ROADMAP "measured-backend trace
+    replay": each recorded (op, p, nbytes) cell is re-executed on the host
+    devices and timed (serving profiles from wall clock, not the model).
+    Cells whose ``p`` differs from ``measure.axis_size()`` cannot be
+    replayed and are skipped with a note.
     """
     backend = backend or CostModelBackend(costmodel.V5E_ICI)
+    sup = getattr(backend, "supported_axis_size", None)
     ms: list[Measurement] = []
     notes: list[str] = []
     phase_profiles: dict[str, ProfileStore] = {}
@@ -308,6 +336,10 @@ def tune_trace(trace, backend=None, *, min_win: float = 0.10,
         for (op, p, nbytes), weight in sorted(trace.cells(phase=ph).items()):
             if op not in REGISTRY:
                 notes.append(f"{ph}: unknown op {op!r}; cell skipped")
+                continue
+            if sup is not None and p != sup:
+                notes.append(f"{ph}: {op} p={p} {nbytes}B: p != host axis "
+                             f"size {sup}; cell skipped")
                 continue
             cell = (op, p, nbytes)
             if cell not in lat_cache:

@@ -11,19 +11,38 @@ message-size) choices apply to the backward pass too.
 
 Gradient pairing (per-shard semantics; axis size ``p``):
 
-=================  ======================  ==========================
-op                 forward collective      backward collective
-=================  ======================  ==========================
-fsdp_gather        api.allgather (data)    api.reducescatter (data)
-tp_allgather       api.allgather (model)   api.reducescatter (model)
-tp_reducescatter   api.reducescatter       api.allgather
-tp_allreduce       api.allreduce           identity (Megatron "g")
-tp_copy            identity                api.allreduce (Megatron "f")
-tp_psum_grad       identity                api.allreduce (weight marker)
-ep_alltoall        api.alltoall            api.alltoall (self-transpose)
-row_matmul         api.allreduce           identity
-col_matmul         identity                api.allreduce (input grad)
-=================  ======================  ==========================
+===================  =========================  ==========================
+op                   forward collective         backward collective
+===================  =========================  ==========================
+fsdp_gather          api.allgather (data)       api.reducescatter (data)
+tp_allgather         api.allgather (model)      api.reducescatter (model)
+tp_reducescatter     api.reducescatter          api.allgather
+tp_allreduce         api.allreduce              identity (Megatron "g")
+tp_copy              identity                   api.allreduce (Megatron "f")
+tp_psum_grad         identity                   api.allreduce (weight marker)
+ep_alltoall          api.alltoall               api.alltoall (self-transpose)
+row_matmul           api.allreduce              identity
+col_matmul           identity                   api.matmul_reducescatter +
+                                                api.allgather (input grad)
+allgather_matmul     api.allgather_matmul       api.matmul_reducescatter (dx)
+                                                + api.allgather (dw remat)
+matmul_reducescatter api.matmul_reducescatter   api.allgather_matmul (dx; the
+                                                gathered cotangent is reused
+                                                for dw)
+fsdp_matmul          api.allgather_matmul       api.matmul_reducescatter (dw)
+                     (data — weight gather      — the FSDP grad
+                     fused into the matmul)     reduce-scatter, fused
+===================  =========================  ==========================
+
+The fused pair (``allgather_matmul`` / ``matmul_reducescatter``) exposes the
+collective-matmul overlap to the tuner: the dispatcher chooses between the
+unfused composition and the ring ``fused_ring`` kernel per (op, p, nbytes).
+``col_matmul``'s input-grad all-reduce is decomposed as reduce-scatter +
+all-gather so its matmul-reduce-scatter half is fused-selectable (falls back
+to the single all-reduce when the row count does not divide the axis);
+``row_matmul(..., fsdp_dim=1)`` fuses the DATA-axis weight gather of a
+row-parallel weight into the matmul itself (the fsdp_gather→matmul sites in
+models/), keeping the model-axis reduction a classic tunable all-reduce.
 
 ``tp_copy`` marks a replicated ACTIVATION entering a model-sharded region
 (its cotangents arrive partial per shard and must be summed);
@@ -41,13 +60,14 @@ DESIGN_TRACE.md) distinguish forward from backward traffic.
 """
 from __future__ import annotations
 
+import math
 from functools import partial
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import api
-from repro.core._axis import tie_to_axis
+from repro.core._axis import axis_size, tie_to_axis
 from repro.dist.axes import AXES, has_axis
 
 
@@ -218,19 +238,213 @@ def ep_alltoall(x, axis: str = AXES.model):
 
 
 # ---------------------------------------------------------------------------
+# fused collective-matmul pair (tuner arbitrates fused_ring vs unfused)
+# ---------------------------------------------------------------------------
+
+
+def _flat2(x):
+    """Collapse leading dims: [..., K] -> ([T, K], T)."""
+    t = math.prod(x.shape[:-1])
+    return x.reshape(t, x.shape[-1]), t
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _agmm(axis: str, x, w):
+    return api.allgather_matmul(x, w, axis)
+
+
+def _agmm_fwd(axis, x, w):
+    return _agmm(axis, x, w), (x, w)
+
+
+def _agmm_bwd(axis, res, g):
+    # out = all_gather(x) @ w.  dx reduces+scatters the per-shard partials
+    # g @ w.T (the mirror fused op); dw re-gathers x (rematerialization —
+    # the unfused composition would have kept the gathered copy alive).
+    x, w = res
+    with api.phase("bwd"):
+        dx = api.matmul_reducescatter(g, w.T, axis)
+        dw = jnp.matmul(api.allgather(x, axis).T, g)
+    return dx, dw
+
+
+_agmm.defvjp(_agmm_fwd, _agmm_bwd)
+
+
+def allgather_matmul(x, w, axis: str = AXES.model):
+    """``all_gather(x, rows) @ w`` — x per-shard ``[n, K]``, w shard-local
+    ``[K, M]`` -> ``[p*n, M]``.  Fused-vs-unfused is a dispatcher decision;
+    the backward pairs ``matmul_reducescatter`` for the input grad."""
+    if not has_axis(axis):
+        return jnp.matmul(x, w)
+    return _agmm(axis, x, w)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _mmrs(axis: str, x, w):
+    return api.matmul_reducescatter(x, w, axis)
+
+
+def _mmrs_fwd(axis, x, w):
+    return _mmrs(axis, x, w), (x, w)
+
+
+def _mmrs_bwd(axis, res, g):
+    # out = reduce_scatter(x @ w).  The cotangent must be gathered anyway
+    # (transpose of reduce-scatter); the fused op hands the assembled
+    # all_gather(g) back so dw reuses it instead of gathering twice.
+    x, w = res
+    with api.phase("bwd"):
+        dx, gg = api.allgather_matmul(g, w.T, axis, return_gathered=True)
+        dw = jnp.matmul(x.T, gg)
+    return dx, dw
+
+
+_mmrs.defvjp(_mmrs_fwd, _mmrs_bwd)
+
+
+def matmul_reducescatter(x, w, axis: str = AXES.model):
+    """``reduce_scatter(x @ w, rows)`` — x per-shard ``[p*n, K]`` (partial
+    contraction), w ``[K, M]`` -> ``[n, M]`` summed over ``axis``.  The
+    backward pairs ``allgather_matmul`` (fused fwd <-> fused bwd)."""
+    if not has_axis(axis):
+        return jnp.matmul(x, w)
+    return _mmrs(axis, x, w)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _fsdp_mm(axis: str, x, w):
+    x2, _ = _flat2(x)
+    zt = api.allgather_matmul(jnp.swapaxes(w, 0, 1), x2.T, axis)
+    return zt.T.reshape(*x.shape[:-1], zt.shape[0])
+
+
+def _fsdp_mm_fwd(axis, x, w):
+    # x @ AG(w, dim 1) == (AG(w.T, dim 0) @ x.T).T — the canonical
+    # allgather-matmul with the WEIGHT as the gathered operand.  The ring
+    # materializes the gathered weight anyway; keep it as the residual
+    # (memory parity with the unfused fsdp_gather path, whose autodiff
+    # saves the gathered weight too).
+    x2, _ = _flat2(x)
+    zt, wft = api.allgather_matmul(jnp.swapaxes(w, 0, 1), x2.T, axis,
+                                   return_gathered=True)
+    return zt.T.reshape(*x.shape[:-1], zt.shape[0]), (x, wft)
+
+
+def _fsdp_mm_bwd(axis, res, g):
+    # dw is the FSDP gradient reduce-scatter, fused with its matmul:
+    # dw.T = reduce_scatter(g.T @ x, rows over data).  dx reuses the
+    # gathered weight saved by the forward.
+    x, wft = res
+    g2, _ = _flat2(g)
+    x2, _ = _flat2(x)
+    with api.phase("bwd"):
+        dwt = api.matmul_reducescatter(g2.T, x2, axis)
+    dx = jnp.matmul(g2, wft).reshape(x.shape)
+    return dx, jnp.swapaxes(dwt, 0, 1)
+
+
+_fsdp_mm.defvjp(_fsdp_mm_fwd, _fsdp_mm_bwd)
+
+
+def fsdp_matmul(x, w, axis: str = AXES.data):
+    """``x @ all_gather(w, dim 1)`` with the ZeRO-3 weight gather fused into
+    the matmul — the fsdp_gather→matmul sites of row-parallel weights.  The
+    backward fuses the FSDP grad reduce-scatter the same way."""
+    if not has_axis(axis):
+        return jnp.matmul(x, w)
+    return _fsdp_mm(axis, x, w)
+
+
+# ---------------------------------------------------------------------------
 # Megatron matmuls
 # ---------------------------------------------------------------------------
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _col_mm(axis: str, x, w):
+    return jnp.matmul(x, w)
+
+
+def _col_mm_fwd(axis, x, w):
+    return jnp.matmul(x, w), (x, w)
+
+
+def _col_mm_bwd(axis, res, g):
+    # dx = allreduce(g @ w.T) decomposed as reduce-scatter + all-gather so
+    # the matmul half is fused-selectable; single all-reduce when the row
+    # count does not divide the axis.
+    x, w = res
+    g2, t = _flat2(g)
+    x2, _ = _flat2(x)
+    with api.phase("bwd"):
+        if t % axis_size(axis) == 0:
+            ds = api.matmul_reducescatter(g2, w.T, axis)
+            dx = api.allgather(ds, axis).reshape(x.shape)
+        else:
+            dx = api.allreduce(jnp.matmul(g2, w.T), axis).reshape(x.shape)
+    dw = jnp.matmul(x2.T, g2)
+    return dx, dw
+
+
+_col_mm.defvjp(_col_mm_fwd, _col_mm_bwd)
 
 
 def col_matmul(x, w, axis: str = AXES.model):
     """Column-parallel matmul: ``x`` replicated, ``w`` sharded on its output
     dim -> output sharded on the last dim.  No forward collective; the input
-    grad is summed over the axis (via ``tp_copy``)."""
-    return jnp.matmul(tp_copy(x, axis), w)
+    grad is summed over the axis — via the fused-selectable
+    ``matmul_reducescatter`` + all-gather decomposition."""
+    if not has_axis(axis):
+        return jnp.matmul(x, w)
+    return _col_mm(axis, x, w)
 
 
-def row_matmul(x, w, axis: str = AXES.model):
+@partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _row_mm(axis: str, x, w):
+    x2, _ = _flat2(x)
+    ys = api.matmul_reducescatter(x2, w, axis)
+    return api.allgather(ys, axis).reshape(*x.shape[:-1], w.shape[-1])
+
+
+def _row_mm_fwd(axis, x, w):
+    return _row_mm(axis, x, w), (x, w)
+
+
+def _row_mm_bwd(axis, res, g):
+    # the reduced output is ONE logical replicated tensor (Megatron "g");
+    # its replicated cotangent needs no collective — identical to the
+    # monolithic all-reduce formulation's identity backward
+    x, w = res
+    g2, _ = _flat2(g)
+    x2, _ = _flat2(x)
+    dx = jnp.matmul(g2, w.T).reshape(x.shape)
+    dw = jnp.matmul(x2.T, g2)
+    return dx, dw
+
+
+_row_mm.defvjp(_row_mm_fwd, _row_mm_bwd)
+
+
+def row_matmul(x, w, axis: str = AXES.model, *, fsdp_dim: int | None = None,
+               fsdp_axis: str = AXES.data):
     """Row-parallel matmul: ``x`` sharded on the last dim, ``w`` sharded on
-    its input dim -> partial products summed with a tuned all-reduce.  The
-    backward needs no collective (cotangent is replicated)."""
+    its input dim -> partial products summed over the model axis.  The sum
+    is issued as reduce-scatter + all-gather so the matmul half is the
+    fused-selectable ``matmul_reducescatter`` (single tuned all-reduce when
+    the row count does not divide the axis).  The backward needs no
+    collective (cotangent is replicated).
+
+    ``fsdp_dim=1`` declares that ``w`` is additionally FSDP-sharded on its
+    OUTPUT dim over ``fsdp_axis`` and fuses that gather into the matmul
+    (``fsdp_matmul``), keeping the model-axis sum a classic tuned
+    all-reduce; other ``fsdp_dim`` values gather unfused first."""
+    if fsdp_dim == 1:
+        return tp_allreduce(fsdp_matmul(x, w, fsdp_axis), axis)
+    if fsdp_dim is not None:
+        w = fsdp_gather(w, fsdp_dim, fsdp_axis)
+    if not has_axis(axis):
+        return jnp.matmul(x, w)
+    if math.prod(x.shape[:-1]) % axis_size(axis) == 0:
+        return _row_mm(axis, x, w)
     return tp_allreduce(jnp.matmul(x, w), axis)

@@ -1,0 +1,318 @@
+"""Latency-hiding collective-matmul kernels (ring schedules, Pallas + ref).
+
+Two fused primitives, each semantically equal to an unfused collective
+followed (or preceded) by a dense matmul:
+
+* ``ring_allgather_matmul``      out = all_gather(x, rows) @ w
+* ``ring_matmul_reducescatter``  out = reduce_scatter(x @ w, rows)
+
+Both run the classic (p-1)-step neighbour ring, but matmul the chunk they
+already hold while the next chunk is in flight — the "collective matmul" of
+Wang et al. (overlap of ICI transfers with MXU work), applied here as a
+tunable mock-up: the dispatcher's ``fused_ring`` impl of the
+``allgather_matmul`` / ``matmul_reducescatter`` ops (core/collectives.py)
+calls these, and the tuner arbitrates fused vs unfused per (op, p, nbytes)
+exactly like any other guideline.
+
+Three execution tiers:
+
+1. **Reference ring** (any backend, incl. CPU CI): ``lax.ppermute`` steps
+   with a per-chunk local matmul.  The permute for chunk s+1 is issued
+   *before* chunk s is consumed, so the dataflow graph exposes the overlap
+   to XLA's latency-hiding scheduler; per-row contraction order matches the
+   unfused composition, so the all-gather direction is bit-exact.
+2. **Pallas block matmul** (``pallas_matmul``): the per-chunk matmul as a
+   tiled MXU kernel with an fp32 VMEM accumulator; used inside the ring on
+   TPU and exercised on CPU via ``interpret=True``.
+3. **RDMA ring kernel** (``ring_allgather_matmul_rdma``): a single Pallas
+   kernel that drives ``make_async_remote_copy`` sends itself (double-
+   buffered comm scratch, per-slot DMA semaphores, neighbour barrier) —
+   the full latency-hiding schedule with no XLA scheduling dependence.
+   TPU-only; the public entry points fall back to tier 1/2 elsewhere.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core._axis import axis_index, axis_size, ring_perm
+
+__all__ = ["pallas_matmul", "ring_allgather_matmul",
+           "ring_matmul_reducescatter", "ring_allgather_matmul_rdma"]
+
+# jax 0.4.x names this TPUCompilerParams; new jax uses CompilerParams
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    getattr(pltpu, "TPUCompilerParams")
+
+
+def _cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.default_backend() == "tpu"
+    except Exception:  # pragma: no cover - backend probing never fatal
+        return False
+
+
+# ---------------------------------------------------------------------------
+# tier 2: tiled local matmul (the per-chunk compute of the ring)
+# ---------------------------------------------------------------------------
+
+
+def _mm_kernel(x_ref, w_ref, o_ref, acc_scr, *, nk: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    acc_scr[...] += jax.lax.dot_general(
+        x_ref[...], w_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _finish():
+        o_ref[...] = acc_scr[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def pallas_matmul(x, w, *, bm: int = 128, bn: int = 128, bk: int = 128,
+                  interpret: bool = False):
+    """``x @ w`` as a tiled Pallas kernel (fp32 accumulation).
+
+    Non-divisible shapes are zero-padded up to the block grid and the
+    result sliced back — rows/cols of the pad contribute nothing.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    out_dtype = jnp.result_type(x.dtype, w.dtype)
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    mp, np_, kp = _cdiv(m, bm) * bm, _cdiv(n, bn) * bn, _cdiv(k, bk) * bk
+    xp = jnp.pad(x, ((0, mp - m), (0, kp - k))) if (mp, kp) != (m, k) else x
+    wp = jnp.pad(w, ((0, kp - k), (0, np_ - n))) if (kp, np_) != (k, n) else w
+    nk = kp // bk
+    out = pl.pallas_call(
+        functools.partial(_mm_kernel, nk=nk),
+        grid=(mp // bm, np_ // bn, nk),
+        in_specs=[pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+                  pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j))],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(xp, wp)
+    return out[:m, :n]
+
+
+def _local_mm(x, w, mm: str):
+    """The per-chunk matmul: 'jnp' reference, 'pallas' MXU kernel, or
+    'auto' (pallas on TPU, jnp elsewhere — CPU CI stays on the exact
+    jnp contraction so the fused ring is bit-comparable to unfused)."""
+    if mm == "auto":
+        mm = "pallas" if _on_tpu() else "jnp"
+    if mm == "pallas":
+        return pallas_matmul(x, w, interpret=not _on_tpu())
+    return jnp.matmul(x, w)
+
+
+# ---------------------------------------------------------------------------
+# tier 1: reference rings (ppermute chunks + per-chunk matmul)
+# ---------------------------------------------------------------------------
+
+
+def ring_allgather_matmul(x, w, axis: str, *, return_gathered: bool = False,
+                          mm: str = "auto"):
+    """``all_gather(x, rows) @ w`` with per-chunk overlap.
+
+    x: per-shard ``[n, K]`` (rows gathered over ``axis``), w: ``[K, M]``
+    (shard-local) -> ``[p*n, M]``.  Step s matmuls the chunk originated by
+    rank ``idx - s`` while the ppermute moving chunk s+1 is already in
+    flight.  Row results use the exact same K-contraction as the unfused
+    ``matmul(all_gather(x), w)`` — bit-identical per row for ``mm='jnp'``.
+
+    ``return_gathered=True`` additionally returns the assembled
+    ``all_gather(x)`` — the ring materializes it for free, and custom VJPs
+    reuse it instead of re-gathering.
+    """
+    p = axis_size(axis)
+    n = x.shape[0]
+    out_dtype = jnp.result_type(x.dtype, w.dtype)
+    if p == 1:
+        out = _local_mm(x, w, mm).astype(out_dtype)
+        return (out, x) if return_gathered else out
+    idx = axis_index(axis)
+    zeros = (0,) * (x.ndim - 1)
+    out = jnp.zeros((p * n, w.shape[-1]), out_dtype)
+    gath = jnp.zeros((p * n,) + x.shape[1:], x.dtype) if return_gathered \
+        else None
+    cur = x
+    for s in range(p):
+        # issue the transfer of the NEXT chunk before consuming this one:
+        # the matmul below has no data dependence on it, so the scheduler
+        # (or the RDMA kernel on TPU) can run both concurrently.
+        nxt = lax.ppermute(cur, axis, ring_perm(p, 1)) if s < p - 1 else None
+        src = (idx - s) % p                # originating rank of `cur`
+        blk = _local_mm(cur, w, mm).astype(out_dtype)
+        out = lax.dynamic_update_slice(out, blk, (src * n, 0))
+        if return_gathered:
+            gath = lax.dynamic_update_slice(gath, cur, (src * n,) + zeros)
+        cur = nxt
+    return (out, gath) if return_gathered else out
+
+
+def ring_matmul_reducescatter(x, w, axis: str, *, mm: str = "auto"):
+    """``reduce_scatter(x @ w, rows)`` with per-chunk overlap.
+
+    x: per-shard ``[p*n, K]`` (partial contraction — different shards hold
+    different K-slices of the logical operand), w: ``[K, M]`` ->
+    ``[n, M]`` summed over ``axis``.  The travelling accumulator picks up
+    rank j's contribution to row-block b at step ``b = (j + p-1-s) % p``;
+    while it is in flight the next step's local contribution (a pure
+    function of resident x, w) can already be computed.
+    """
+    p = axis_size(axis)
+    out_dtype = jnp.result_type(x.dtype, w.dtype)
+    if p == 1:
+        return _local_mm(x, w, mm).astype(out_dtype)
+    rows = x.shape[0]
+    assert rows % p == 0, f"rows {rows} not divisible by axis size {p}"
+    n = rows // p
+    idx = axis_index(axis)
+    acc = None
+    for s in range(p):
+        blk_id = (idx + (p - 1 - s)) % p
+        blk = lax.dynamic_slice(x, (blk_id * n,) + (0,) * (x.ndim - 1),
+                                (n,) + x.shape[1:])
+        contrib = _local_mm(blk, w, mm).astype(out_dtype)
+        acc = contrib if acc is None else acc + contrib
+        if s < p - 1:
+            acc = lax.ppermute(acc, axis, ring_perm(p, 1))
+    return acc
+
+
+# ---------------------------------------------------------------------------
+# tier 3: single-kernel RDMA ring (TPU only — drives its own transfers)
+# ---------------------------------------------------------------------------
+
+
+def _agmm_rdma_kernel(x_ref, w_ref, o_ref, gath_ref, comm_buf, send_sem,
+                      recv_sem, credit_sem, acc_scr, *, p: int, axis: str):
+    """One grid step per ring hop: RDMA-send the resident chunk to the right
+    neighbour, matmul it into its output rows, then wait on the transfers —
+    compute and ICI traffic overlap inside a single kernel invocation.
+
+    Buffer-reuse flow control: the send at step s lands in the right
+    neighbour's slot ``(s+1) % 2`` — the buffer that neighbour last read at
+    its step s-1.  Each device therefore grants one CREDIT to its left
+    neighbour when it finishes consuming a slot, and a sender must burn one
+    credit (from the right neighbour) before re-targeting that slot; the
+    step-0 send needs none (both slots start free)."""
+    s = pl.program_id(0)
+    my = lax.axis_index(axis)
+    right = lax.rem(my + 1, p)
+    left = lax.rem(my + p - 1, p)
+
+    @pl.when(s == 0)
+    def _seed():
+        # neighbour barrier so nobody RDMAs into a peer still setting up
+        bar = pltpu.get_barrier_semaphore()
+        pltpu.semaphore_signal(bar, inc=1, device_id=(left,),
+                               device_id_type=pltpu.DeviceIdType.LOGICAL)
+        pltpu.semaphore_signal(bar, inc=1, device_id=(right,),
+                               device_id_type=pltpu.DeviceIdType.LOGICAL)
+        pltpu.semaphore_wait(bar, 2)
+        comm_buf[0] = x_ref[...]
+
+    slot = lax.rem(s, 2)
+    nxt = lax.rem(s + 1, 2)
+
+    @pl.when(jnp.logical_and(s >= 1, s < p - 1))
+    def _flow_control():
+        # right neighbour finished reading its slot `nxt` at its step s-1
+        pltpu.semaphore_wait(credit_sem, 1)
+
+    @pl.when(s < p - 1)
+    def _send():
+        rdma = pltpu.make_async_remote_copy(
+            src_ref=comm_buf.at[slot],
+            dst_ref=comm_buf.at[nxt],
+            send_sem=send_sem.at[slot],
+            recv_sem=recv_sem.at[nxt],
+            device_id=(right,),
+            device_id_type=pltpu.DeviceIdType.LOGICAL,
+        )
+        rdma.start()
+
+    # matmul the chunk we hold while the RDMA is in flight
+    src = lax.rem(my - s + p, p)
+    n = x_ref.shape[0]
+    blk = comm_buf[slot]
+    acc_scr[...] = jax.lax.dot_general(
+        blk, w_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    o_ref[pl.ds(src * n, n), :] = acc_scr[...].astype(o_ref.dtype)
+    gath_ref[pl.ds(src * n, n), :] = blk
+
+    @pl.when(s < p - 1)
+    def _wait():
+        pltpu.semaphore_wait(send_sem.at[slot], 1)
+        pltpu.semaphore_wait(recv_sem.at[nxt], 1)
+
+    @pl.when(s < p - 2)
+    def _grant():
+        # slot `slot` is fully consumed (matmul done AND our outgoing DMA
+        # from it delivered): the left neighbour may target it again with
+        # its step-s+1 send.  Credits exactly balance the waits above, so
+        # the semaphore drains to zero by kernel exit.
+        pltpu.semaphore_signal(credit_sem, inc=1, device_id=(left,),
+                               device_id_type=pltpu.DeviceIdType.LOGICAL)
+
+
+def ring_allgather_matmul_rdma(x, w, axis: str, *,
+                               return_gathered: bool = False,
+                               collective_id: int = 7):
+    """The tier-3 Pallas kernel: ring allgather-matmul with in-kernel RDMA.
+
+    TPU-only (``make_async_remote_copy`` has no host interpret path across
+    shard_map devices); callers gate on backend and fall back to
+    ``ring_allgather_matmul`` elsewhere.
+    """
+    p = axis_size(axis)
+    n, k = x.shape
+    m = w.shape[-1]
+    out_dtype = jnp.result_type(x.dtype, w.dtype)
+    if p == 1:
+        out = jnp.matmul(x, w)
+        return (out, x) if return_gathered else out
+    out, gath = pl.pallas_call(
+        functools.partial(_agmm_rdma_kernel, p=p, axis=axis),
+        grid=(p,),
+        in_specs=[pl.BlockSpec((n, k), lambda s: (0, 0),
+                               memory_space=pltpu.VMEM),
+                  pl.BlockSpec((k, m), lambda s: (0, 0),
+                               memory_space=pltpu.VMEM)],
+        out_specs=(pl.BlockSpec((p * n, m), lambda s: (0, 0),
+                                memory_space=pltpu.VMEM),
+                   pl.BlockSpec((p * n, k), lambda s: (0, 0),
+                                memory_space=pltpu.VMEM)),
+        out_shape=(jax.ShapeDtypeStruct((p * n, m), out_dtype),
+                   jax.ShapeDtypeStruct((p * n, k), x.dtype)),
+        scratch_shapes=[
+            pltpu.VMEM((2, n, k), x.dtype),        # double-buffered chunks
+            pltpu.SemaphoreType.DMA((2,)),         # send slots
+            pltpu.SemaphoreType.DMA((2,)),         # recv slots
+            pltpu.SemaphoreType.REGULAR,           # buffer-reuse credits
+            pltpu.VMEM((n, m), jnp.float32),
+        ],
+        compiler_params=_CompilerParams(
+            has_side_effects=True, collective_id=collective_id),
+    )(x, w)
+    return (out, gath) if return_gathered else out

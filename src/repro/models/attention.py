@@ -345,8 +345,8 @@ def attention(p: dict, cfg: ModelConfig, x, *, pos, kind: str = "causal",
         if seq_sharded:
             o, new_cache = _decode_seq_sharded(cfg, q, k, v, cache, pos,
                                                kind=kind)
-            w_o = ops.fsdp_gather(p["w_o"], 1)
-            return AttnOut(y=ops.row_matmul(o, w_o), cache=new_cache)
+            return AttnOut(y=ops.row_matmul(o, p["w_o"], fsdp_dim=1),
+                           cache=new_cache)
         t = cache["len"]
         kc = _cache_write(cache["k"], k, t)
         vc = _cache_write(cache["v"], v, t)
@@ -389,8 +389,8 @@ def attention(p: dict, cfg: ModelConfig, x, *, pos, kind: str = "causal",
                          kv_len_valid=kv_valid)
         o = _sdpa(q, k_use, v_use, mask, softcap=cfg.attn_softcap)
         o = o.reshape(*x.shape[:-1], hq_loc * hd)
-    w_o = ops.fsdp_gather(p["w_o"], 1)
-    y = ops.row_matmul(o, w_o)
+    # fsdp_dim=1 fuses the data-axis w_o gather into the o-projection
+    y = ops.row_matmul(o, p["w_o"], fsdp_dim=1)
     return AttnOut(y=y, cache=new_cache)
 
 
@@ -541,6 +541,5 @@ def _attention_mla(p, cfg: ModelConfig, x, *, pos, kind, cache, mode):
         o = _sdpa(qf, k, v, mask, softcap=cfg.attn_softcap,
                   scale=1.0 / math.sqrt(qk_hd))
         o = o.reshape(*x.shape[:-1], hq_loc * m.v_head_dim)
-    w_o = ops.fsdp_gather(p["w_o"], 1)
-    y = ops.row_matmul(o, w_o)
+    y = ops.row_matmul(o, p["w_o"], fsdp_dim=1)
     return AttnOut(y=y, cache=new_cache)

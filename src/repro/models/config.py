@@ -22,6 +22,12 @@ class MoEConfig:
     n_shared: int = 0               # always-on shared experts (DeepSeek)
     capacity_factor: float = 1.25
     router_dtype: str = "float32"
+    # capacity from the GLOBAL token count: per-expert keep decisions use a
+    # data-axis-wide position (one extra tunable allreduce on router
+    # stats), so data-sharded runs drop exactly the tokens a single-device
+    # run would — at the cost of a dp-times-larger worst-case dispatch
+    # buffer.  Off by default (the classic local-capacity GShard behavior).
+    global_capacity: bool = False
 
 
 @dataclasses.dataclass(frozen=True)

@@ -56,10 +56,11 @@ def mlp_specs(d_model: int, d_ff: int, dtype: str):
 def mlp(params, x, *, act=jax.nn.silu):
     w_in = ops.fsdp_gather(params["w_in"], 0)
     w_gate = ops.fsdp_gather(params["w_gate"], 0)
-    w_out = ops.fsdp_gather(params["w_out"], 1)
     h = ops.col_matmul(x, w_in)
     g = ops.col_matmul(x, w_gate)
-    return ops.row_matmul(act(g) * h, w_out)
+    # fsdp_dim=1: the data-axis gather of w_out is fused into the matmul
+    # (allgather_matmul — tuner picks ring overlap vs unfused per shape)
+    return ops.row_matmul(act(g) * h, params["w_out"], fsdp_dim=1)
 
 
 # ---------------------------------------------------------------------------

@@ -3,7 +3,11 @@
 GShard-style capacity dispatch, but position-in-expert is computed with
 cumsum over flattened (token, slot) choices — no [T, E, C] one-hot tensor is
 ever materialized (T·E·C would be terabytes at DeepSeek scale).  Tokens over
-capacity are dropped (standard capacity-factor routing).
+capacity are dropped (standard capacity-factor routing).  With
+``cfg.moe.global_capacity`` the keep decision uses the token's position in
+the GLOBAL per-expert order (one extra tunable ``api.allreduce`` of router
+stats over the data axis), making data-sharded drops identical to a
+single-device run.
 
 The expert shuffle is TWO all-to-alls over the model axis through
 ``ops.ep_alltoall`` — i.e. GL8 territory for the tuner, and the single
@@ -17,8 +21,10 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core import api
+from repro.core._axis import axis_index
 from repro.dist import ops
-from repro.dist.axes import AXES, axis_size_or_1
+from repro.dist.axes import AXES, axis_size_or_1, has_axis
 from repro.models.config import ModelConfig
 from repro.models.layers import mlp, mlp_specs
 from repro.models.params import ParamSpec
@@ -78,19 +84,47 @@ def moe_block(p: dict, cfg: ModelConfig, x) -> tuple[jax.Array, jax.Array]:
     onehot = jax.nn.one_hot(flat_e, m.n_experts, dtype=jnp.int32)
     pos = jnp.cumsum(onehot, axis=0) - 1                         # [T*k, E]
     pos_in_e = jnp.sum(pos * onehot, axis=-1)                    # [T*k]
-    keep = pos_in_e < cap
-    slot = jnp.where(keep, flat_e * cap + pos_in_e, m.n_experts * cap)
+    if m.global_capacity and has_axis(AXES.data):
+        # global-capacity mode: keep decisions use the token's position in
+        # the GLOBAL per-expert order.  The batch is split contiguously
+        # over the data axis, so global position = local cumsum + the
+        # preceding shards' per-expert counts — one tiny tunable allreduce
+        # of one-hot-placed router stats (dp x E int32).  Kept-token sets
+        # then match the single-device run exactly.
+        dp = axis_size_or_1(AXES.data)
+        cap = _capacity(t * dp, cfg)
+        counts = jnp.sum(onehot, axis=0, dtype=jnp.int32)        # [E] local
+        placed = lax.dynamic_update_slice(
+            jnp.zeros((dp, m.n_experts), jnp.int32), counts[None],
+            (axis_index(AXES.data), 0))
+        # one-hot-placed allreduce (the GL3 allgather-as-allreduce shape):
+        # an allgather of the [E] counts would move dp x less, but the
+        # ROADMAP item specifies the stats exchange as a tunable allreduce
+        # and the payload is tiny (dp*E ints, latency-regime territory —
+        # exactly where the tuner's doubling mock-up earns its keep)
+        all_counts = api.allreduce(placed, AXES.data)            # [dp, E]
+        before = jnp.arange(dp)[:, None] < axis_index(AXES.data)
+        offset = jnp.sum(jnp.where(before, all_counts, 0), axis=0)
+        pos_keep = pos_in_e + offset[flat_e]                     # global pos
+        # local buffer only ever holds this shard's kept tokens
+        cap_buf = min(cap, max(4, -(-(t * m.top_k) // 4) * 4))
+    else:
+        pos_keep = pos_in_e
+        cap_buf = cap
+    keep = pos_keep < cap
+    slot = jnp.where(keep, flat_e * cap_buf + pos_in_e,
+                     m.n_experts * cap_buf)
 
-    # --- dispatch: scatter tokens into [E*cap, D] ----------------------------
+    # --- dispatch: scatter tokens into [E*cap_buf, D] ------------------------
     xk = jnp.repeat(xt, m.top_k, axis=0)                         # [T*k, D]
-    buf = jnp.zeros((m.n_experts * cap + 1, d), x.dtype)
+    buf = jnp.zeros((m.n_experts * cap_buf + 1, d), x.dtype)
     buf = buf.at[slot].add(xk * keep[:, None].astype(x.dtype))
     buf = buf[:-1]                                               # drop bin
 
     # --- EP all-to-all: expert-major buffer is already shard-tiled ----------
     buf = ops.ep_alltoall(buf)                                   # [tp*Eloc*cap, D]
-    buf = buf.reshape(tp, e_loc, cap, d).transpose(1, 0, 2, 3)
-    buf = buf.reshape(e_loc, tp * cap, d)
+    buf = buf.reshape(tp, e_loc, cap_buf, d).transpose(1, 0, 2, 3)
+    buf = buf.reshape(e_loc, tp * cap_buf, d)
 
     # --- expert FFN ----------------------------------------------------------
     w_in = ops.fsdp_gather(p["w_in"], 1)                         # [Eloc, D, F]
@@ -101,8 +135,8 @@ def moe_block(p: dict, cfg: ModelConfig, x) -> tuple[jax.Array, jax.Array]:
     y = jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * h, w_out)
 
     # --- reverse all-to-all + combine ---------------------------------------
-    y = y.reshape(e_loc, tp, cap, d).transpose(1, 0, 2, 3).reshape(
-        tp * e_loc * cap, d)
+    y = y.reshape(e_loc, tp, cap_buf, d).transpose(1, 0, 2, 3).reshape(
+        tp * e_loc * cap_buf, d)
     y = ops.ep_alltoall(y)                                       # [E*cap, D]
     y = jnp.concatenate([y, jnp.zeros((1, d), y.dtype)], axis=0)
     gathered = y[slot]                                           # [T*k, D]

@@ -144,7 +144,7 @@ def rwkv_block(p: dict, cfg: ModelConfig, x, *, state=None):
     yh = rms_norm(yh, scale, cfg.norm_eps)
     y = yh.reshape(b, s, h_loc * hd)
     y = y * jax.nn.silu(g)
-    att = ops.row_matmul(y, ops.fsdp_gather(p["w_o"], 1))
+    att = ops.row_matmul(y, p["w_o"], fsdp_dim=1)
 
     x_in_last = xn[:, -1:]         # time-mix shifts against the NORMED input
     x = x + att
@@ -157,7 +157,7 @@ def rwkv_block(p: dict, cfg: ModelConfig, x, *, state=None):
     xcr = _lerp(xn2, prevc, p["mu_cr"])
     kk = ops.col_matmul(xck, ops.fsdp_gather(p["w_ck"], 0))
     kk = jnp.square(jax.nn.relu(kk))
-    cv = ops.row_matmul(kk, ops.fsdp_gather(p["w_cv"], 1))
+    cv = ops.row_matmul(kk, p["w_cv"], fsdp_dim=1)
     r_loc = ops.col_matmul(xcr, ops.fsdp_gather(p["w_cr"], 0))
     r_full = ops.tp_allgather(r_loc, r_loc.ndim - 1)
     y = jax.nn.sigmoid(r_full) * cv
@@ -309,7 +309,7 @@ def mamba_block(p: dict, cfg: ModelConfig, x, *, state=None):
     scale = p["gate_norm"].reshape(h_loc, c.head_dim)
     yh = rms_norm(yh, scale, cfg.norm_eps)      # per-head (TP-invariant)
     y = yh.reshape(b, s, di_loc) * jax.nn.silu(z)
-    out = x + ops.row_matmul(y, ops.fsdp_gather(p["w_out"], 1))
+    out = x + ops.row_matmul(y, p["w_out"], fsdp_dim=1)
 
     new_state = None
     if state is not None:

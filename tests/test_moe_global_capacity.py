@@ -1,0 +1,139 @@
+"""MoE global-capacity mode: data-sharded keep decisions == single device.
+
+The local-capacity GShard dispatch derives capacity and position-in-expert
+from LOCAL token counts, so a data-sharded run drops different tokens than
+the same batch on one device (the tolerance note in
+tests/test_spmd_subprocess.py).  ``moe.global_capacity`` computes the keep
+decision from the token's position in the GLOBAL per-expert order via one
+extra tunable ``api.allreduce`` of router stats — the sharded run must then
+match the single-device run bit-for-bit.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import api
+from repro.models import moe
+from repro.models.config import ModelConfig, MoEConfig
+
+D, E, F, K = 8, 4, 16, 2
+B, S, DP = 4, 4, 2
+
+
+def _cfg(global_capacity):
+    return ModelConfig(
+        name="t", family="moe", n_layers=1, d_model=D, n_heads=2,
+        n_kv_heads=2, d_ff=F, vocab_size=32, dtype="float32",
+        moe=MoEConfig(n_experts=E, top_k=K, d_ff_expert=F,
+                      capacity_factor=0.75,        # force real drops
+                      global_capacity=global_capacity))
+
+
+@pytest.fixture()
+def data(rng):
+    x = rng.normal(size=(B, S, D)).astype(np.float32)
+    params = {
+        "router": rng.normal(size=(D, E)).astype(np.float32),
+        "w_in": rng.normal(size=(E, D, F)).astype(np.float32) * 0.1,
+        "w_gate": rng.normal(size=(E, D, F)).astype(np.float32) * 0.1,
+        "w_out": rng.normal(size=(E, F, D)).astype(np.float32) * 0.1,
+    }
+    return x, params
+
+
+def _shard(params):
+    """Split each param along its FSDP ("data") dim into DP stacked shards,
+    matching moe_specs' placement."""
+    return {
+        "router": jnp.asarray(params["router"].reshape(DP, D // DP, E)),
+        "w_in": jnp.asarray(params["w_in"].reshape(
+            E, DP, D // DP, F).transpose(1, 0, 2, 3)),
+        "w_gate": jnp.asarray(params["w_gate"].reshape(
+            E, DP, D // DP, F).transpose(1, 0, 2, 3)),
+        "w_out": jnp.asarray(params["w_out"].reshape(
+            E, F, DP, D // DP).transpose(2, 0, 1, 3)),
+    }
+
+
+def _run_sharded(cfg, params, x):
+    xs = jnp.asarray(x.reshape(DP, B // DP, S, D))
+    f = lambda p, xin: moe.moe_block(p, cfg, xin)[0]
+    y = jax.vmap(f, axis_name="data")(_shard(params), xs)
+    return np.asarray(y).reshape(B, S, D)
+
+
+def test_global_capacity_matches_single_device_exactly(data):
+    x, params = data
+    want = np.asarray(moe.moe_block(params, _cfg(True), jnp.asarray(x))[0])
+    got = _run_sharded(_cfg(True), params, x)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_local_capacity_diverges_on_this_batch(data):
+    """The divergence the mode removes must actually exist here, or the
+    exact-equality test above proves nothing."""
+    x, params = data
+    want = np.asarray(moe.moe_block(params, _cfg(False), jnp.asarray(x))[0])
+    got = _run_sharded(_cfg(False), params, x)
+    assert np.abs(got - want).max() > 1e-6
+
+
+def test_global_capacity_router_allreduce_is_tunable(data):
+    """The router-stats exchange is one extra dispatcher allreduce over the
+    data axis — visible in the record and redirectable like any mock-up."""
+    x, params = data
+    cfg = _cfg(True)
+    xs = jnp.asarray(x.reshape(DP, B // DP, S, D))
+    f = lambda p, xin: moe.moe_block(p, cfg, xin)[0]
+    with api.tuned(force={"allreduce": "allreduce_as_doubling"}) as ctx:
+        jax.vmap(f, axis_name="data")(_shard(params), xs)
+    stats_cells = [(op, p, nb, impl) for op, p, nb, impl, _ in ctx.record
+                   if op == "allreduce" and nb == DP * E * 4]
+    assert stats_cells, ctx.record
+    assert all(impl == "allreduce_as_doubling"
+               for *_, impl in stats_cells)
+
+
+def test_global_capacity_noop_without_data_axis(data):
+    """Outside any data binding the mode must be inert (single-device jit
+    runs identical code)."""
+    x, params = data
+    a = np.asarray(moe.moe_block(params, _cfg(True), jnp.asarray(x))[0])
+    b = np.asarray(moe.moe_block(params, _cfg(False), jnp.asarray(x))[0])
+    np.testing.assert_array_equal(a, b)
+
+
+def test_global_capacity_with_expert_parallelism(data):
+    """Global capacity composes with EP over the model axis: a (data=2,
+    model=2)-style nested vmap run still matches single device."""
+    x, params = data
+    cfg = _cfg(True)
+    tp = 2
+    want = np.asarray(moe.moe_block(params, cfg, jnp.asarray(x))[0])
+    sharded = _shard(params)
+    # additionally shard experts over the model axis (dim 0 of w_*, after
+    # the data stacking dim)
+    def ep_split(t, dim):
+        parts = jnp.split(t, tp, axis=dim)
+        return jnp.stack(parts, axis=0)            # [tp, DP, ...]
+    pp = {
+        "router": jnp.broadcast_to(sharded["router"],
+                                   (tp,) + sharded["router"].shape),
+        "w_in": ep_split(sharded["w_in"], 1),
+        "w_gate": ep_split(sharded["w_gate"], 1),
+        "w_out": ep_split(sharded["w_out"], 1),
+    }
+    xs = jnp.asarray(x.reshape(DP, B // DP, S, D))
+    xs2 = jnp.broadcast_to(xs, (tp,) + xs.shape)
+
+    f = lambda p, xin: moe.moe_block(p, cfg, xin)[0]
+    fd = jax.vmap(f, axis_name="data")
+    y = jax.vmap(fd, axis_name="model")(pp, xs2)   # [tp, DP, B/DP, S, D]
+    got = np.asarray(y)[0].reshape(B, S, D)
+    np.testing.assert_allclose(got, want, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(y)[1].reshape(B, S, D), got,
+                               atol=1e-5)
