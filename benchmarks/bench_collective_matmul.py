@@ -19,7 +19,7 @@ from benchmarks.common import emit
 from repro.core import costmodel as cm
 from repro.core import tuner
 
-OPS = ("allgather_matmul", "matmul_reducescatter")
+OPS = ("allgather_matmul", "matmul_reducescatter", "matmul_accumulate")
 AXIS_SIZES = (4, 8, 16, 64)
 SIZES = (64, 1024, 32768, 262_144, 1_048_576, 4_194_304, 16_777_216)
 MIN_WIN = 0.10

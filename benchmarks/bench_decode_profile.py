@@ -99,11 +99,11 @@ def modeled_step_latency(record, topo, phase):
     phase (the first traced step — jit caches mean each step dispatches
     once)."""
     total = 0.0
-    for op, p, nbytes, impl, ph in record:
-        if ph != phase:
+    for rec in record:
+        if rec.phase != phase:
             continue
         try:
-            total += cm.latency(op, impl, p, nbytes, topo)
+            total += cm.latency_cell(rec.cell, rec.impl, topo)
         except KeyError:
             pass
     return total
@@ -183,8 +183,8 @@ def main(argv=None) -> int:
     emit("decode_profile/modeled_decode_collectives_tuned_us", m_tun * 1e6,
          f"{m_def / m_tun:.2f}x" if m_tun > 0 else "")
 
-    tuned_decode = [r for r in ctx_t.record if r[4] == "decode"]
-    nondefault = sorted({r[3] for r in tuned_decode if r[3] != "default"})
+    tuned_decode = [r for r in ctx_t.record if r.phase == "decode"]
+    nondefault = sorted({r.impl for r in tuned_decode if r.impl != "default"})
     emit("decode_profile/tuned_nondefault_impls", float(len(nondefault)),
          ";".join(nondefault))
     print(footer)

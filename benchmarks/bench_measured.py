@@ -22,7 +22,8 @@ def run():
         ("reducescatter", ["default", "rsb_as_allreduce"]),
     ]:
         for impl in impls:
-            lat = measure.sample_latency(op, impl, 4096, 20)
+            lat = measure.sample_latency(measure.host_cell(op, 4096), impl,
+                                         20)
             med = statistics.median(lat) * 1e6
             emit(f"measured/p{p}/{op}/{impl}", med,
                  f"min={min(lat)*1e6:.1f}us")

@@ -16,7 +16,8 @@ from repro.core.profiles import Profile, ProfileStore, Range
 
 def run():
     # --- NREP on a real sampler (host-device collective wall clock) --------
-    sampler = measure.make_sampler("allreduce", "default")
+    sampler = measure.make_sampler(measure.host_cell("allreduce", 1),
+                                   "default")
     t0 = time.perf_counter()
     ob = nrep.estimate_1byte(sampler, rse_threshold=0.05, batch0=5,
                              max_samples=60)

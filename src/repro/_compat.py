@@ -2,28 +2,41 @@
 
 The codebase targets the current jax API (``jax.shard_map`` with
 ``check_vma=``, ``jax.tree.flatten_with_path``, ``jax.make_mesh`` with
-``axis_types=``).  The container ships an older jax where shard_map lives in
-``jax.experimental`` with the flag spelled ``check_rep``, path-aware tree
-flattening lives in ``jax.tree_util``, and meshes have no axis types.  All
-call sites import from here so the rest of the code stays written against
-the modern names.
+``axis_types=``).  Older jax (0.4.x) spells these differently; every call
+site imports from here so the rest of the code stays written against the
+modern names.
+
+Each shim PROBES for the native API at import time and self-disables —
+becoming a plain pass-through — when the native surface exists, so nothing
+here needs manual removal when the container's jax catches up.  One
+``warnings.warn`` at import summarizes which shims are still live (empty
+list -> no warning): the signal that this module can be deleted.
 """
 from __future__ import annotations
 
+import inspect
+import warnings
+
 import jax
 
+#: shims that had to activate on this jax version (empty on current jax)
+LIVE_SHIMS: list[str] = []
+
+# -- shard_map: top-level export + check_vma spelling ------------------------
 try:  # jax >= 0.6: top-level export, replication check named check_vma
     from jax import shard_map as _shard_map
     _VMA_KW = "check_vma"
 except ImportError:
     from jax.experimental.shard_map import shard_map as _shard_map
     _VMA_KW = "check_rep"
+    LIVE_SHIMS.append("shard_map (jax.experimental, check_rep= spelling)")
 
 
 def _ensure_optimization_barrier_batchable():
     """Old jax ships no vmap rule for ``lax.optimization_barrier`` (the
     mock-ups' anti-DCE attach point); the barrier is elementwise-transparent
-    so batching is the identity on batch dims."""
+    so batching is the identity on batch dims.  No-op (native) when the
+    rule already exists."""
     try:
         from jax._src.lax.lax import optimization_barrier_p
         from jax.interpreters import batching
@@ -32,6 +45,7 @@ def _ensure_optimization_barrier_batchable():
     if optimization_barrier_p not in batching.primitive_batchers:
         batching.primitive_batchers[optimization_barrier_p] = \
             lambda args, dims: (optimization_barrier_p.bind(*args), dims)
+        LIVE_SHIMS.append("optimization_barrier vmap batching rule")
 
 
 _ensure_optimization_barrier_batchable()
@@ -44,18 +58,44 @@ def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True, **kw):
                       **kw)
 
 
-def tree_flatten_with_path(tree, is_leaf=None):
-    """``jax.tree.flatten_with_path`` with a ``jax.tree_util`` fallback."""
-    if hasattr(jax.tree, "flatten_with_path"):
+# -- path-aware tree flatten -------------------------------------------------
+if hasattr(jax.tree, "flatten_with_path"):
+    def tree_flatten_with_path(tree, is_leaf=None):
         return jax.tree.flatten_with_path(tree, is_leaf=is_leaf)
-    return jax.tree_util.tree_flatten_with_path(tree, is_leaf=is_leaf)
+else:
+    LIVE_SHIMS.append("tree.flatten_with_path (jax.tree_util fallback)")
+
+    def tree_flatten_with_path(tree, is_leaf=None):
+        return jax.tree_util.tree_flatten_with_path(tree, is_leaf=is_leaf)
+
+
+# -- mesh axis types ---------------------------------------------------------
+_AXIS_TYPE = getattr(jax.sharding, "AxisType", None)
+if _AXIS_TYPE is None:
+    LIVE_SHIMS.append("sharding.AxisType missing (untyped meshes)")
+
+
+def _accepts_kwarg(fn, name: str) -> bool:
+    """Signature probe; VAR_KEYWORD (or an uninspectable C++ wrapper)
+    counts as accepting — the callers below keep a TypeError guard for
+    those, so optimism only costs one failed call on old jax."""
+    try:
+        params = inspect.signature(fn).parameters
+    except (TypeError, ValueError):  # pragma: no cover - exotic wrappers
+        return True
+    return name in params or any(
+        p.kind is inspect.Parameter.VAR_KEYWORD for p in params.values())
+
+
+_MAKE_MESH_AXIS_TYPES = _accepts_kwarg(jax.make_mesh, "axis_types")
+if not _MAKE_MESH_AXIS_TYPES:
+    LIVE_SHIMS.append("make_mesh(axis_types=) dropped")
 
 
 def auto_axis_types(n: int):
     """``(AxisType.Auto,) * n`` where supported, else None (old meshes are
     untyped — equivalent to all-Auto)."""
-    at = getattr(jax.sharding, "AxisType", None)
-    return (at.Auto,) * n if at is not None else None
+    return (_AXIS_TYPE.Auto,) * n if _AXIS_TYPE is not None else None
 
 
 def make_mesh(axis_shapes, axis_names, *, axis_types=None, devices=None):
@@ -63,17 +103,22 @@ def make_mesh(axis_shapes, axis_names, *, axis_types=None, devices=None):
     kw = {}
     if devices is not None:
         kw["devices"] = devices
-    if axis_types is not None:
+    if axis_types is not None and _MAKE_MESH_AXIS_TYPES:
         try:
             return jax.make_mesh(axis_shapes, axis_names,
                                  axis_types=axis_types, **kw)
-        except TypeError:
+        except TypeError:  # probe was optimistic (opaque wrapper)
             pass
     return jax.make_mesh(axis_shapes, axis_names, **kw)
 
 
 def mesh_with_axis_types(devices_array, axis_names):
-    """``jax.sharding.Mesh`` with all-Auto axis types where supported."""
+    """``jax.sharding.Mesh`` with all-Auto axis types where supported.
+
+    ``Mesh`` is a C++-wrapped class whose ``__init__`` signature is not
+    inspectable on ANY jax version, so the native probe here is the
+    presence of ``AxisType`` itself, with a TypeError guard for jax
+    versions that expose the enum before the ``Mesh`` kwarg."""
     types = auto_axis_types(len(axis_names))
     if types is not None:
         try:
@@ -82,3 +127,12 @@ def mesh_with_axis_types(devices_array, axis_names):
         except TypeError:
             pass
     return jax.sharding.Mesh(devices_array, axis_names)
+
+
+if LIVE_SHIMS:
+    warnings.warn(
+        f"repro._compat: {len(LIVE_SHIMS)} jax compatibility shim(s) live "
+        f"on jax {jax.__version__}: " + "; ".join(LIVE_SHIMS)
+        + ". Each self-disables once the native API exists; when this "
+        "warning disappears the module can be deleted.",
+        stacklevel=2)

@@ -33,6 +33,7 @@ import threading
 
 from repro.core import collectives as C
 from repro.core._axis import axis_size
+from repro.core.cell import OP_MM_ROLE, OpCell
 from repro.core.profiles import OP_TO_MPI, ProfileStore
 
 _TLS = threading.local()
@@ -41,13 +42,38 @@ _TLS = threading.local()
 DEFAULT_PHASE = "fwd"
 
 
+@dataclasses.dataclass(frozen=True)
+class DispatchRecord:
+    """One dispatched collective: the full problem cell, the impl the
+    dispatcher chose, and the workload phase tag.  Destructures as the
+    legacy ``(op, p, nbytes, impl, phase)`` 5-tuple."""
+    cell: OpCell
+    impl: str
+    phase: str
+
+    @property
+    def op(self) -> str:
+        return self.cell.op
+
+    @property
+    def p(self) -> int:
+        return self.cell.p
+
+    @property
+    def nbytes(self) -> int:
+        return self.cell.nbytes
+
+    def __iter__(self):
+        yield from (self.cell.op, self.cell.p, self.cell.nbytes, self.impl,
+                    self.phase)
+
+
 @dataclasses.dataclass
 class TuneContext:
     profiles: ProfileStore | None = None
     force: dict[str, str] = dataclasses.field(default_factory=dict)
     scratch_budget_bytes: int | None = None
-    record: list[tuple[str, int, int, str, str]] = dataclasses.field(
-        default_factory=list)  # (op, axis_size, nbytes, impl, phase)
+    record: list[DispatchRecord] = dataclasses.field(default_factory=list)
     chunk_bytes: int = 0
     phase_profiles: dict[str, ProfileStore] | None = None
 
@@ -144,11 +170,36 @@ def _payload_bytes(x) -> int:
     return int(x.size) * x.dtype.itemsize
 
 
-def _select(op: str, x, axis: str, impl: str | None) -> str:
+def _make_cell(op: str, payload, axis: str, kw) -> OpCell:
+    """The dispatch-time tuning cell: payload + full problem geometry.
+
+    ``payload`` is the operand the collective moves (its bytes are the
+    dispatch key); for fused ops the per-callsite GEMM dims are read off
+    the actual operands, so profiles/traces/measurement all see the true
+    matmul.
+    """
+    p = axis_size(axis)
+    nbytes = _payload_bytes(payload)
+    role = OP_MM_ROLE.get(op)
+    if role is None:
+        return OpCell(op, p, nbytes, str(payload.dtype))
+    if role == "gather":     # payload x [n, K] gathered over rows, w [K, M]
+        mm_k, mm_m = payload.shape[-1], p * payload.shape[0]
+        mm_n = kw["w"].shape[-1]
+    elif role == "scatter":  # payload x [p*n, K] rows scattered, w [K, M]
+        mm_k, mm_m = payload.shape[-1], payload.shape[0]
+        mm_n = kw["w"].shape[-1]
+    else:                    # contract: payload = streamed w block [K/p, M]
+        mm_k, mm_m = p * payload.shape[0], kw["x"].shape[0]
+        mm_n = payload.shape[-1]
+    return OpCell(op, p, nbytes, str(payload.dtype), mm_k, mm_m, mm_n, role)
+
+
+def _select(op: str, payload, axis: str, impl: str | None, kw) -> str:
     ctx = _ctx()
     # hot-path short-circuit: with no explicit impl, no force table, no
     # profiles and no phase profiles, the answer is "default" — skip the
-    # payload/phase/profile machinery entirely (dispatch runs at trace time
+    # cell/phase/profile machinery entirely (dispatch runs at trace time
     # but sits on every collective of every jit trace; see
     # benchmarks/bench_dispatch.py for the win).  The pow2 and scratch
     # guards never demote "default", so skipping them is exact.
@@ -156,11 +207,12 @@ def _select(op: str, x, axis: str, impl: str | None) -> str:
                                          None and ctx.phase_profiles is
                                          None)) and not _env_force():
         if ctx is not None:
-            ctx.record.append((op, axis_size(axis), _payload_bytes(x),
-                               "default", current_phase()))
+            ctx.record.append(DispatchRecord(_make_cell(op, payload, axis,
+                                                        kw),
+                                             "default", current_phase()))
         return "default"
-    p = axis_size(axis)
-    nbytes = _payload_bytes(x)
+    cell = _make_cell(op, payload, axis, kw)
+    p, nbytes = cell.p, cell.nbytes
     ph = current_phase()
     name = impl
     if name is None and ctx is not None and op in ctx.force:
@@ -173,9 +225,9 @@ def _select(op: str, x, axis: str, impl: str | None) -> str:
         if ctx.phase_profiles is not None:
             store = ctx.phase_profiles.get(ph)
             if store is not None:
-                name = store.lookup(op, p, nbytes)
+                name = store.lookup_cell(cell)
         if name is None and ctx.profiles is not None:
-            name = ctx.profiles.lookup(op, p, nbytes)
+            name = ctx.profiles.lookup_cell(cell)
     if name is None:
         name = "default"
     cand = C.REGISTRY[op].get(name)
@@ -189,18 +241,18 @@ def _select(op: str, x, axis: str, impl: str | None) -> str:
             and cand.extra_bytes(nbytes, p) > ctx.scratch_budget_bytes):
         name, cand = "default", C.REGISTRY[op]["default"]
     if ctx is not None:
-        ctx.record.append((op, p, nbytes, name, ph))
+        ctx.record.append(DispatchRecord(cell, name, ph))
     return name
 
 
-def _dispatch(op: str, x, axis: str, impl: str | None, **kw):
-    name = _select(op, x, axis, impl)
+def _dispatch(op: str, payload, axis: str, impl: str | None, /, **kw):
+    name = _select(op, payload, axis, impl, kw)
     fn = C.REGISTRY[op][name].fn
     ctx = _ctx()
     if ctx is not None and ctx.chunk_bytes and "chunk" not in kw:
-        itemsize = x.dtype.itemsize
+        itemsize = payload.dtype.itemsize
         kw["chunk"] = max(1, ctx.chunk_bytes // itemsize)
-    return fn(x, axis, **kw)
+    return fn(payload, axis, **kw)
 
 
 # -- public entry points -----------------------------------------------------
@@ -264,6 +316,22 @@ def matmul_reducescatter(x, w, axis: str, *, impl: str | None = None):
     ``[K, M]``; partial products are summed over ``axis`` and row-block i
     lands on shard i."""
     return _dispatch("matmul_reducescatter", x, axis, impl, w=w)
+
+
+def matmul_accumulate(x, w, axis: str, *, impl: str | None = None,
+                      return_gathered: bool = False):
+    """``x @ all_gather(w, rows)`` — the contraction-dim collective matmul.
+
+    ``w`` per-shard ``[K/p, M]`` (the K-dim FSDP weight shard; its payload
+    is the dispatch key — those are the bytes the collective streams), ``x``
+    ``[T, K]`` shard-local -> ``[T, M]``.  The gathered dim is CONTRACTED
+    away, so neither row-block ring applies; the ``fused_ring`` mock-up
+    streams weight blocks around the ring and accumulates partial products.
+    ``return_gathered=True`` additionally returns the assembled full weight
+    (the ring materializes it for free; custom VJPs reuse it for dx).
+    """
+    return _dispatch("matmul_accumulate", w, axis, impl, x=x,
+                     return_gathered=return_gathered)
 
 
 def format_footer(ctx: TuneContext) -> str:

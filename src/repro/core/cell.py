@@ -1,0 +1,147 @@
+"""The tuning cell: one communication problem, with its full geometry.
+
+The paper's method compares a collective against its mock-ups *on the actual
+communication problem* — "type of communication, message size, number of
+processes" (Hunold 2017; the PGMPI predecessor tunes per callsite).  A bare
+``(op, p, nbytes)`` tuple loses exactly the part of the problem the fused
+collective-matmul ops add: which GEMM rides on the collective.  ``OpCell``
+is the first-class record every layer keys on:
+
+* ``api`` captures one per dispatch (``DispatchRecord.cell``),
+* ``core.trace`` aggregates them (schema-v2 JSONL),
+* ``core.profiles`` keys geometry profiles on ``OpCell.geom()``,
+* ``core.measure`` replays the *recorded* GEMM on host devices,
+* ``core.costmodel.latency_cell`` prices the overlap from the true flops.
+
+Geometry convention for fused matmul ops (the full logical GEMM is always
+``[mm_m, mm_k] @ [mm_k, mm_n]``):
+
+====================  =========================  ==========================
+op                    collective operand         ``mm_role``
+====================  =========================  ==========================
+allgather_matmul      x ``[mm_m/p, mm_k]``       ``gather``  — the gathered
+                                                 dim is the output-ROW dim
+matmul_reducescatter  x ``[mm_m, mm_k]``         ``scatter`` — output rows
+                                                 are reduce-scattered
+matmul_accumulate     w ``[mm_k/p, mm_n]``       ``contract`` — the gathered
+                                                 dim is CONTRACTED away
+====================  =========================  ==========================
+
+Plain collectives carry ``mm_k == mm_m == mm_n == 0`` and ``mm_role == ""``
+(``fused`` is False); their dtype is still recorded.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+#: roles a fused matmul operand can play in its collective
+MM_ROLES = ("gather", "scatter", "contract")
+
+#: dispatcher op -> role of its fused matmul (None for plain collectives)
+OP_MM_ROLE = {
+    "allgather_matmul": "gather",
+    "matmul_reducescatter": "scatter",
+    "matmul_accumulate": "contract",
+}
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class Geom:
+    """The matmul geometry of a fused cell — the profile partition key."""
+    dtype: str
+    mm_k: int
+    mm_m: int
+    mm_n: int
+    mm_role: str
+
+    def distance(self, other: "Geom") -> float:
+        """Log-space shape distance for the nearest-cell profile fallback
+        (same role/dtype assumed; see ``ProfileStore.lookup_cell``)."""
+        d = 0.0
+        for a, b in ((self.mm_k, other.mm_k), (self.mm_m, other.mm_m),
+                     (self.mm_n, other.mm_n)):
+            d += abs(math.log2(max(a, 1)) - math.log2(max(b, 1)))
+        return d
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class OpCell:
+    """One tuning cell: collective type, scale, payload, and geometry."""
+    op: str
+    p: int                      # axis size ("number of processes")
+    nbytes: int                 # payload bytes of the collective operand
+    dtype: str = "float32"
+    mm_k: int = 0               # contraction dim of the fused GEMM
+    mm_m: int = 0               # output rows of the fused GEMM
+    mm_n: int = 0               # output cols of the fused GEMM
+    mm_role: str = ""           # "gather" | "scatter" | "contract" | ""
+
+    def __post_init__(self):
+        if self.mm_role and self.mm_role not in MM_ROLES:
+            raise ValueError(f"unknown mm_role {self.mm_role!r}")
+
+    # -- views ---------------------------------------------------------------
+    @property
+    def fused(self) -> bool:
+        """True when the cell carries a recorded GEMM geometry."""
+        return self.mm_k > 0
+
+    @property
+    def itemsize(self) -> int:
+        try:
+            return int(np.dtype(self.dtype).itemsize)
+        except TypeError:
+            return 4
+
+    def flops(self) -> int:
+        """MAC-pair flop count of the full logical GEMM (2 per element)."""
+        return 2 * self.mm_k * self.mm_m * self.mm_n
+
+    def geom(self) -> Geom | None:
+        """Geometry partition key, or None for plain / unknown-geometry
+        cells (v1 traces carry fused ops with no recorded dims)."""
+        if not self.fused:
+            return None
+        return Geom(self.dtype, self.mm_k, self.mm_m, self.mm_n,
+                    self.mm_role)
+
+    def key(self) -> tuple:
+        return dataclasses.astuple(self)
+
+    # -- derived cells -------------------------------------------------------
+    def scaled_to(self, nbytes: int) -> "OpCell":
+        """The same problem at a different payload size (NREP probes).
+
+        For fused cells the dimension tied to the collective operand is
+        rescaled so the replayed GEMM stays consistent with the payload:
+        ``gather``/``scatter`` scale the row dim ``mm_m``; ``contract``
+        scales the contraction dim ``mm_k``.  The returned nbytes is
+        re-derived from the integral dims — rounded to whole rows/blocks
+        and never below ONE row/block, so a fused cell's "1-byte" NREP
+        anchor is really its minimal-GEMM floor (one K-row / one weight
+        block), not a literal byte.
+        """
+        if not self.fused:
+            return dataclasses.replace(self, nbytes=max(int(nbytes), 1))
+        it = self.itemsize
+        if self.mm_role == "gather":
+            n = max(1, int(nbytes) // (self.mm_k * it))
+            return dataclasses.replace(self, nbytes=n * self.mm_k * it,
+                                       mm_m=self.p * n)
+        if self.mm_role == "scatter":
+            rows = max(self.p,
+                       (int(nbytes) // (self.mm_k * it) // self.p) * self.p)
+            return dataclasses.replace(self, nbytes=rows * self.mm_k * it,
+                                       mm_m=rows)
+        k_loc = max(1, int(nbytes) // (self.mm_n * it))
+        return dataclasses.replace(self, nbytes=k_loc * self.mm_n * it,
+                                   mm_k=self.p * k_loc)
+
+    # -- construction --------------------------------------------------------
+    @classmethod
+    def plain(cls, op: str, p: int, nbytes: int,
+              dtype: str = "float32") -> "OpCell":
+        return cls(op=op, p=p, nbytes=nbytes, dtype=dtype)

@@ -555,17 +555,20 @@ def scatter_as_tree(x, axis: str, *, root: int = 0, **_):
 # fused collective-matmul ops (latency-hiding mock-ups, kernels/)
 # ---------------------------------------------------------------------------
 #
-# Two extra ops extend the vocabulary beyond MPI's: a matmul fused to the
-# collective feeding (or consuming) it.  Semantics (second operand ``w``
+# Three extra ops extend the vocabulary beyond MPI's: a matmul fused to the
+# collective feeding (or consuming) it.  Semantics (the second operand is
 # passed by keyword; per-shard shapes, axis size ``p``):
 #
-#   allgather_matmul       x [n, K], w [K, M]   -> all_gather(x) @ w [p*n, M]
-#   matmul_reducescatter   x [p*n, K], w [K, M] -> reduce_scatter(x @ w) [n, M]
+#   allgather_matmul       x [n, K], w [K, M]     -> all_gather(x) @ w [p*n, M]
+#   matmul_reducescatter   x [p*n, K], w [K, M]   -> reduce_scatter(x @ w) [n, M]
+#   matmul_accumulate      w [K/p, M], x [T, K]   -> x @ all_gather(w) [T, M]
 #
 # ``default`` is the unfused composition today's dist/ops emit; ``fused_ring``
 # is the kernels/collective_matmul.py ring schedule that overlaps each chunk's
 # transfer with the previous chunk's matmul.  The tuner arbitrates the two via
 # the overlap-aware cost model (max(comm, compute) per step instead of sum).
+# Note ``matmul_accumulate`` takes the STREAMED operand (the K-dim weight
+# shard) first — the dispatcher keys on the bytes the collective moves.
 
 
 def allgather_matmul_default(x, axis: str, *, w, return_gathered: bool = False,
@@ -579,8 +582,14 @@ def allgather_matmul_default(x, axis: str, *, w, return_gathered: bool = False,
 def allgather_matmul_fused_ring(x, axis: str, *, w,
                                 return_gathered: bool = False, **_):
     """(⊕) ring allgather-matmul: chunk s+1 in flight while chunk s is on
-    the MXU (kernels/collective_matmul.py)."""
+    the MXU.  The backend check lives HERE (not at callsites): on TPU the
+    tier-3 in-kernel RDMA ring is used; everywhere else the ppermute
+    reference ring — CPU CI never even imports the RDMA module."""
     from repro.kernels import collective_matmul as cmm
+    if cmm.on_tpu():
+        from repro.kernels import collective_matmul_rdma as rdma
+        return rdma.ring_allgather_matmul_rdma(
+            x, w, axis, return_gathered=return_gathered)
     return cmm.ring_allgather_matmul(x, w, axis,
                                      return_gathered=return_gathered)
 
@@ -596,6 +605,24 @@ def matmul_reducescatter_fused_ring(x, axis: str, *, w, **_):
     flight while the next block's contribution is computed."""
     from repro.kernels import collective_matmul as cmm
     return cmm.ring_matmul_reducescatter(x, w, axis)
+
+
+def matmul_accumulate_default(w, axis: str, *, x,
+                              return_gathered: bool = False, **_):
+    """Unfused composition: all_gather the K-dim weight shards, then one
+    dense matmul over the full contraction."""
+    full = lax.all_gather(w, axis, axis=0, tiled=True)
+    out = jnp.matmul(x, full)
+    return (out, full) if return_gathered else out
+
+
+def matmul_accumulate_fused_ring(w, axis: str, *, x,
+                                 return_gathered: bool = False, **_):
+    """(⊕) accumulate ring: weight block s+1 in flight while block s's
+    partial product accumulates (kernels/collective_matmul.py)."""
+    from repro.kernels import collective_matmul as cmm
+    return cmm.ring_matmul_accumulate(x, w, axis,
+                                      return_gathered=return_gathered)
 
 
 # ---------------------------------------------------------------------------
@@ -752,6 +779,16 @@ def _reg() -> dict[str, dict[str, Impl]]:
            matmul_reducescatter_fused_ring, "EXT",
            lambda n, p: 2 * max(n // p, 1),
            desc="ring overlap: travelling accumulator hides matmul"),
+    ]}
+
+    r["matmul_accumulate"] = {i.name: i for i in [
+        mk("default", "matmul_accumulate", matmul_accumulate_default, None,
+           lambda n, p: p * n,
+           desc="all_gather K-dim weight then dense matmul (unfused)"),
+        mk("fused_ring", "matmul_accumulate", matmul_accumulate_fused_ring,
+           "EXT", lambda n, p: p * n + 2 * n,
+           desc="ring overlap: weight block in flight while partials "
+                "accumulate"),
     ]}
 
     r["scatter"] = {i.name: i for i in [

@@ -329,6 +329,17 @@ def latency(op: str, impl: str, p: int, nbytes: int, topo: Topo,
             lambda: t_overlapped_ring(
                 p, topo.alpha + (B / p) * (topo.beta + topo.gamma),
                 t_fused_matmul(B / 4.0, topo), topo),
+        # matmul_accumulate: B = per-shard K-dim weight-shard bytes (the
+        # streamed operand); the contraction touches p·B/4 gathered weight
+        # elements, each feeding a canonical-width row batch.  Unfused =
+        # weight all-gather PLUS the matmul; fused = weight block in flight
+        # while the previous block's partial products accumulate.
+        ("matmul_accumulate", "default"):
+            lambda: ag(B) + t_fused_matmul(p * B / 4.0, topo),
+        ("matmul_accumulate", "fused_ring"):
+            lambda: t_overlapped_ring(
+                p, topo.alpha + B * topo.beta,
+                t_fused_matmul(p * B / 4.0, topo), topo),
         # ---- scatter (B = total buffer bytes, p chunks) ----
         ("scatter", "default"): lambda: dflt_scatter(B),
         ("scatter", "scatter_as_bcast"): lambda: dflt_bcast(B),
@@ -344,6 +355,43 @@ def latency(op: str, impl: str, p: int, nbytes: int, topo: Topo,
     if imp.requires_pow2 and not _is_pow2(p):
         return math.inf
     return float(table[key]())
+
+
+def latency_cell(cell, impl: str, topo: Topo, *,
+                 chunk_bytes: int = 0) -> float:
+    """Modeled latency of one ``OpCell`` — the geometry-aware entry point.
+
+    Plain cells (and fused cells with unknown geometry, e.g. from v1
+    traces) fall back to the canonical ``latency`` table; cells carrying a
+    recorded GEMM are priced from the TRUE flop count ``2·K·M·N`` instead
+    of the canonical ``fused_mm_cols``-width assumption, and the
+    matmul-reducescatter ring moves its true output-block bytes.
+    """
+    if not getattr(cell, "fused", False):
+        return latency(cell.op, impl, cell.p, cell.nbytes, topo,
+                       chunk_bytes=chunk_bytes)
+    p = cell.p
+    if p <= 1:
+        return 0.0
+    imp = REGISTRY[cell.op][impl]
+    if imp.requires_pow2 and not _is_pow2(p):
+        return math.inf
+    mm = 2.0 * cell.mm_k * cell.mm_m * cell.mm_n / topo.matmul_flops
+    B = float(max(cell.nbytes, 1))
+    if cell.op in ("allgather_matmul", "matmul_accumulate"):
+        # streamed operand all-gathered over the axis; steps move B bytes
+        if impl == "default":
+            return latency("allgather", "default", p, cell.nbytes, topo) + mm
+        return t_overlapped_ring(p, topo.alpha + B * topo.beta, mm, topo)
+    if cell.op == "matmul_reducescatter":
+        bt_out = float(cell.mm_m * cell.mm_n * cell.itemsize)
+        if impl == "default":
+            return mm + latency("reducescatter", "default", p,
+                                int(bt_out), topo)
+        return t_overlapped_ring(
+            p, topo.alpha + (bt_out / p) * (topo.beta + topo.gamma),
+            mm, topo)
+    raise KeyError(f"no geometry cost model for {cell.op!r}")
 
 
 def _pad(B: float, p: int, chunk_bytes: int) -> float:

@@ -5,6 +5,12 @@ record t' - t.  The dissemination-barrier analogue here is a jitted 1-element
 psum executed (and blocked on) before every sample; collectives themselves
 are pre-compiled so only execution is timed.
 
+Replay is keyed on the full ``OpCell``: a fused collective-matmul cell is
+re-executed with the *recorded* GEMM — dtype and ``(mm_k, mm_m, mm_n)``
+exactly as the callsite issued them — not a canonical square weight, so
+wall-clock replay prices the actual matmul.  Fused cells without recorded
+geometry (v1 traces) cannot be replayed; the tuner note-skips them.
+
 This backend runs on whatever devices the process sees (CPU host devices in
 this container).  Its absolute numbers are CPU-flavored; the tuner uses it to
 validate *orderings* and to exercise the full offline-tuning pipeline, while
@@ -22,14 +28,12 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro._compat import shard_map
 
 from repro.core import collectives as C
+from repro.core.cell import OpCell
 
 AXIS = "bench"
 
-# ops that carry a second (shard-local) matmul operand; measured with a
-# square [MM_WIDTH, MM_WIDTH] weight so wall-clock includes the fused (or
-# trailing/leading) MXU work the cost model prices via ``fused_mm_cols``
-MATMUL_OPS = ("allgather_matmul", "matmul_reducescatter")
-MM_WIDTH = 64
+#: ops whose cells carry a fused-matmul geometry the replay must honor
+MATMUL_OPS = ("allgather_matmul", "matmul_reducescatter", "matmul_accumulate")
 
 
 @lru_cache(maxsize=1)
@@ -42,28 +46,63 @@ def axis_size() -> int:
     return _mesh().devices.size
 
 
-def _input_rows(op: str, n_rows: int, p: int) -> int:
-    """Rows of the per-shard input for a payload of ``n_rows`` rows."""
-    if op in ("alltoall", "reducescatter", "scatter"):
-        # v-style ops: n_rows is the per-chunk payload, input is p chunks
-        return n_rows * p
-    if op == "matmul_reducescatter":
-        # the dispatch key (and hence the replayed nbytes) is the FULL
-        # [p*n, K] input payload — build exactly that many rows, rounded
-        # to a multiple of p so psum_scatter divides
-        return max(p, (n_rows // p) * p)
-    return n_rows
+def host_cell(op: str, nbytes: int, *, dtype: str = "float32",
+              **geom) -> OpCell:
+    """An ``OpCell`` at the axis size the host devices form (benchmarks)."""
+    return OpCell(op, axis_size(), nbytes, dtype, **geom)
+
+
+def problem_shapes(cell: OpCell) -> dict[str, tuple[int, ...]]:
+    """Per-shard operand shapes the replay builds for ``cell`` — pure
+    function of the cell, unit-testable without devices.
+
+    ``x`` is the sharded operand (the collective payload), ``w`` the
+    shard-local second operand of the fused ops (absent for plain
+    collectives).  Fused shapes come from the RECORDED GEMM dims.
+    """
+    p = cell.p
+    if cell.op in MATMUL_OPS:
+        if not cell.fused:
+            raise ValueError(
+                f"cell {cell} has no recorded matmul geometry; a fused op "
+                "cannot be replayed without it (v1 trace?)")
+        if cell.op == "allgather_matmul":
+            return {"x": (max(1, cell.mm_m // p), cell.mm_k),
+                    "w": (cell.mm_k, cell.mm_n)}
+        if cell.op == "matmul_reducescatter":
+            rows = max(p, (cell.mm_m // p) * p)   # psum_scatter must divide
+            return {"x": (rows, cell.mm_k), "w": (cell.mm_k, cell.mm_n)}
+        # matmul_accumulate: the payload is the K-dim weight shard
+        k_loc = max(1, cell.mm_k // p)
+        return {"x": (k_loc, cell.mm_n), "w": (cell.mm_m, p * k_loc)}
+    itemsize = cell.itemsize
+    n_rows = max(1, cell.nbytes // itemsize)
+    if cell.op in ("alltoall", "reducescatter", "scatter"):
+        # v-style ops: nbytes is the per-chunk payload, input is p chunks
+        n_rows *= p
+    return {"x": (n_rows, 1)}
 
 
 @lru_cache(maxsize=512)
-def _compiled(op: str, impl: str, n_rows: int, width: int, dtype_name: str):
+def _compiled(cell: OpCell, impl: str):
     mesh = _mesh()
     p = mesh.devices.size
-    fn = C.REGISTRY[op][impl].fn
-    rows = _input_rows(op, n_rows, p)
+    if cell.p != p:
+        raise ValueError(
+            f"measured backend runs at p={p}, not {cell.p}")
+    fn = C.REGISTRY[cell.op][impl].fn
+    shapes = problem_shapes(cell)
+    dt = jnp.dtype(cell.dtype if cell.dtype else "float32")
 
-    if op in MATMUL_OPS:
-        w = jnp.ones((width, width), jnp.dtype(dtype_name))
+    if cell.op == "matmul_accumulate":
+        # streamed operand = the weight shard; the stationary x is a
+        # shard-local closure constant with the recorded [mm_m, mm_k]
+        stat = jnp.ones(shapes["w"], dt)
+
+        def body(wb):
+            return fn(wb, AXIS, x=stat)
+    elif cell.op in MATMUL_OPS:
+        w = jnp.ones(shapes["w"], dt)
 
         def body(x):
             return fn(x, AXIS, w=w)
@@ -74,8 +113,8 @@ def _compiled(op: str, impl: str, n_rows: int, width: int, dtype_name: str):
     sm = shard_map(body, mesh=mesh, in_specs=P(AXIS), out_specs=P(AXIS),
                    check_vma=False)
     spec = NamedSharding(mesh, P(AXIS))
-    x = jax.device_put(
-        jnp.ones((p * rows, width), jnp.dtype(dtype_name)), spec)
+    rows, width = shapes["x"]
+    x = jax.device_put(jnp.ones((p * rows, width), dt), spec)
     return jax.jit(sm).lower(x).compile(), x
 
 
@@ -93,15 +132,10 @@ def _barrier():
     return jax.jit(sm).lower(x).compile(), x
 
 
-def sample_latency(op: str, impl: str, nbytes: int, count: int,
-                   *, width: int = 1, dtype=jnp.float32,
-                   barrier: bool = True) -> list[float]:
-    """``count`` barrier-synced wall-clock samples of one collective (s)."""
-    if op in MATMUL_OPS:
-        width = MM_WIDTH
-    itemsize = jnp.dtype(dtype).itemsize
-    n_rows = max(1, nbytes // (itemsize * width))
-    fn, x = _compiled(op, impl, n_rows, width, jnp.dtype(dtype).name)
+def sample_latency(cell: OpCell, impl: str, count: int,
+                   *, barrier: bool = True) -> list[float]:
+    """``count`` barrier-synced wall-clock samples of one cell (s)."""
+    fn, x = _compiled(cell, impl)
     bar, bx = _barrier()
     # warm one execution so first-run allocation noise is out of the samples
     jax.block_until_ready(fn(x))
@@ -115,8 +149,13 @@ def sample_latency(op: str, impl: str, nbytes: int, count: int,
     return out
 
 
-def make_sampler(op: str, impl: str):
-    """Adapter to the NREP estimator's (msize, count) -> latencies shape."""
+def make_sampler(cell: OpCell, impl: str):
+    """Adapter to the NREP estimator's (msize, count) -> latencies shape.
+
+    The probe size rescales the cell via ``OpCell.scaled_to`` — for fused
+    cells the recorded GEMM aspect (K, N and the role) is preserved while
+    the payload-tied dim shrinks/grows with the message size.
+    """
     def sampler(msize: int, count: int):
-        return sample_latency(op, impl, msize, count)
+        return sample_latency(cell.scaled_to(msize), impl, count)
     return sampler

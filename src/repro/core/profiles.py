@@ -1,14 +1,20 @@
 """Performance profiles (paper §3.2.2, Listing 1) + O(log M) lookup.
 
 A profile is valid for ONE collective and ONE axis size (the paper: "profiles
-are only valid for the same number of processes").  It maps message-size
-ranges (bytes) to a replacement mock-up.  The on-disk text format round-trips
-the paper's Listing 1 (MPI op names, numbered algorithm table, ``lo hi alg``
-range lines); a JSON form carries extra provenance (topo, backend, chunk).
+are only valid for the same number of processes") — and, for the fused
+collective-matmul ops, ONE matmul geometry (``cell.Geom``: dtype + the GEMM
+dims + the gather/scatter/contract role).  It maps message-size ranges
+(bytes) to a replacement mock-up.  The on-disk text format round-trips the
+paper's Listing 1 (MPI op names, numbered algorithm table, ``lo hi alg``
+range lines) with geometry carried on a ``#@geom`` header line that v1
+parsers ignore — so v1 profile files load unchanged (geometry-less); a JSON
+form carries extra provenance (topo, backend, chunk).
 
-Lookup is ``O(1)`` to find the (op, p) profile + ``O(log M)`` bisect over the
-sorted ranges — the paper's "combination of hash functions and binary
-searches".
+Lookup is ``O(1)`` to find the (op, p, geom) profile + ``O(log M)`` bisect
+over the sorted ranges — the paper's "combination of hash functions and
+binary searches".  ``lookup_cell`` adds the geometry resolution order:
+exact geometry > nearest tuned geometry (same role + dtype, log-space shape
+distance) > the geometry-less (op, p) profile.
 """
 from __future__ import annotations
 
@@ -17,6 +23,8 @@ import dataclasses
 import json
 import os
 import pathlib
+
+from repro.core.cell import Geom, OpCell
 
 OP_TO_MPI = {
     "allgather": "MPI_Allgather",
@@ -33,6 +41,7 @@ OP_TO_MPI = {
     # keep the Listing-1 text profiles round-trippable)
     "allgather_matmul": "MPIX_Allgather_matmul",
     "matmul_reducescatter": "MPIX_Matmul_reduce_scatter",
+    "matmul_accumulate": "MPIX_Matmul_accumulate",
 }
 MPI_TO_OP = {v: k for k, v in OP_TO_MPI.items()}
 
@@ -50,6 +59,7 @@ class Profile:
     axis_size: int
     ranges: list[Range] = dataclasses.field(default_factory=list)
     meta: dict = dataclasses.field(default_factory=dict)
+    geom: Geom | None = None    # fused-op matmul geometry partition
 
     def __post_init__(self):
         self.ranges = sorted(self.ranges, key=lambda r: r.lo)
@@ -66,6 +76,17 @@ class Profile:
             return self.ranges[i].impl
         return None
 
+    def lookup_nearest(self, nbytes: int) -> str | None:
+        """``lookup`` that falls back to the CLOSEST range when ``nbytes``
+        misses every range — used when a cell resolves to a nearest-geometry
+        profile whose tuned sizes differ from the querying cell's."""
+        hit = self.lookup(nbytes)
+        if hit is not None or not self.ranges:
+            return hit
+        best = min(self.ranges,
+                   key=lambda r: min(abs(nbytes - r.lo), abs(nbytes - r.hi)))
+        return best.impl
+
     # -- Listing-1 text format ----------------------------------------------
     def to_text(self) -> str:
         impls = sorted({r.impl for r in self.ranges})
@@ -76,6 +97,11 @@ class Profile:
             f"{self.axis_size} # nb. of. processes",
             f"{len(impls)} # nb. of mock-up impl.",
         ]
+        if self.geom is not None:
+            # a comment line to v1 parsers; geometry to v2
+            lines.insert(1, f"#@geom {self.geom.dtype} {self.geom.mm_k} "
+                            f"{self.geom.mm_m} {self.geom.mm_n} "
+                            f"{self.geom.mm_role}")
         lines += [f"{ids[name]} {name}" for name in impls]
         lines.append(f"{len(self.ranges)} # nb. of ranges")
         lines += [f"{r.lo} {r.hi} {ids[r.impl]}" for r in self.ranges]
@@ -83,6 +109,11 @@ class Profile:
 
     @classmethod
     def from_text(cls, text: str) -> "Profile":
+        geom = None
+        for ln in text.splitlines():
+            if ln.startswith("#@geom"):
+                _, dt, k, m, n, role = ln.split()
+                geom = Geom(dt, int(k), int(m), int(n), role)
         raw = [ln.split("#")[0].strip() for ln in text.splitlines()]
         rows = [ln for ln in raw if ln]
         opname = rows[0]
@@ -98,41 +129,75 @@ class Profile:
         for ln in rows[4 + n_impl:4 + n_impl + n_ranges]:
             lo, hi, alg = ln.split()
             ranges.append(Range(int(lo), int(hi), table[int(alg)]))
-        return cls(op=op, axis_size=axis_size, ranges=ranges)
+        return cls(op=op, axis_size=axis_size, ranges=ranges, geom=geom)
 
     # -- JSON ----------------------------------------------------------------
     def to_json(self) -> str:
-        return json.dumps({
+        d = {
             "op": self.op, "axis_size": self.axis_size,
             "ranges": [dataclasses.asdict(r) for r in self.ranges],
             "meta": self.meta,
-        }, indent=1)
+        }
+        if self.geom is not None:
+            d["geom"] = dataclasses.asdict(self.geom)
+        return json.dumps(d, indent=1)
 
     @classmethod
     def from_json(cls, text: str) -> "Profile":
         d = json.loads(text)
+        geom = Geom(**d["geom"]) if d.get("geom") else None
         return cls(op=d["op"], axis_size=d["axis_size"],
                    ranges=[Range(**r) for r in d["ranges"]],
-                   meta=d.get("meta", {}))
+                   meta=d.get("meta", {}), geom=geom)
+
+
+def _geom_tag(geom: Geom) -> str:
+    """Filesystem-safe geometry suffix for profile filenames."""
+    return (f"{geom.dtype}_k{geom.mm_k}m{geom.mm_m}n{geom.mm_n}"
+            f"_{geom.mm_role}")
 
 
 class ProfileStore:
     """All loaded profiles; the PGMPITuneD in-memory state."""
 
     def __init__(self, profiles: list[Profile] | None = None):
-        self._by_key: dict[tuple[str, int], Profile] = {}
+        self._by_key: dict[tuple[str, int, Geom | None], Profile] = {}
         for p in profiles or []:
             self.add(p)
 
     def add(self, p: Profile) -> None:
-        self._by_key[(p.op, p.axis_size)] = p
+        self._by_key[(p.op, p.axis_size, p.geom)] = p
 
-    def get(self, op: str, axis_size: int) -> Profile | None:
-        return self._by_key.get((op, axis_size))
+    def get(self, op: str, axis_size: int,
+            geom: Geom | None = None) -> Profile | None:
+        return self._by_key.get((op, axis_size, geom))
 
     def lookup(self, op: str, axis_size: int, nbytes: int) -> str | None:
+        """Geometry-less lookup (plain collectives, legacy callers)."""
         p = self.get(op, axis_size)
         return p.lookup(nbytes) if p else None
+
+    def lookup_cell(self, cell: OpCell) -> str | None:
+        """Resolve a dispatch cell: exact geometry profile first, then the
+        nearest tuned geometry (same role + dtype, minimal log-space shape
+        distance — the unseen-shape fallback), then the geometry-less
+        (op, axis_size) profile."""
+        g = cell.geom()
+        if g is not None:
+            prof = self._by_key.get((cell.op, cell.p, g))
+            if prof is not None:
+                hit = prof.lookup(cell.nbytes)
+                if hit is not None:
+                    return hit
+            else:
+                near = [(geom, p) for (op, ax, geom), p in self._by_key.items()
+                        if op == cell.op and ax == cell.p and geom is not None
+                        and geom.mm_role == g.mm_role
+                        and geom.dtype == g.dtype]
+                if near:
+                    _, prof = min(near, key=lambda kv: g.distance(kv[0]))
+                    return prof.lookup_nearest(cell.nbytes)
+        return self.lookup(cell.op, cell.p, cell.nbytes)
 
     def __len__(self) -> int:
         return len(self._by_key)
@@ -144,11 +209,16 @@ class ProfileStore:
     def save(self, directory: str | pathlib.Path, *, fmt: str = "text") -> None:
         d = pathlib.Path(directory)
         d.mkdir(parents=True, exist_ok=True)
-        for (op, p_size), prof in sorted(self._by_key.items()):
+        for (op, p_size, geom), prof in sorted(
+                self._by_key.items(),
+                key=lambda kv: (kv[0][0], kv[0][1], str(kv[0][2]))):
+            stem = f"{op}_p{p_size}"
+            if geom is not None:
+                stem += "_" + _geom_tag(geom)
             if fmt == "text":
-                (d / f"{op}_p{p_size}.pgtune").write_text(prof.to_text())
+                (d / f"{stem}.pgtune").write_text(prof.to_text())
             else:
-                (d / f"{op}_p{p_size}.json").write_text(prof.to_json())
+                (d / f"{stem}.json").write_text(prof.to_json())
 
     @classmethod
     def load(cls, directory: str | pathlib.Path) -> "ProfileStore":

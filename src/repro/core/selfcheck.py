@@ -113,6 +113,25 @@ def main(argv=None) -> int:
         y = run_mm(C.REGISTRY["matmul_reducescatter"][nm].fn, xbf, (n, 4))
         check(f"matmul_reducescatter/{nm}", y, want_mmrs)
 
+    # matmul_accumulate: the SHARDED operand is the K-dim weight block; the
+    # stationary x [T, K] is a shard-local closure operand
+    k_loc, t_rows = 2, 5
+    wacc = rng.normal(size=(P_ * k_loc, 4)).astype(np.float32)
+    xacc = rng.normal(size=(t_rows, P_ * k_loc)).astype(np.float32)
+    want_acc = xacc @ wacc
+
+    def run_acc(fn):
+        sm = shard_map(lambda wb: fn(wb, "x", x=jnp.asarray(xacc)),
+                       mesh=mesh, in_specs=P("x"), out_specs=P("x"),
+                       check_vma=False)
+        return np.asarray(jax.jit(sm)(jnp.asarray(wacc))).reshape(
+            (P_, t_rows, 4))
+
+    for nm in C.impl_names("matmul_accumulate"):
+        y = run_acc(C.REGISTRY["matmul_accumulate"][nm].fn)
+        check(f"matmul_accumulate/{nm}", y,
+              np.broadcast_to(want_acc, (P_,) + want_acc.shape))
+
     fails = [k for k, v in results.items() if not v]
     if args.json:
         print(json.dumps({"devices": P_, "total": len(results),

@@ -5,7 +5,11 @@ synthetic size sweep; its PGMPI predecessor (arXiv:1606.00215) instead tunes
 the op mix a real application issues per callsite.  A ``Trace`` captures that
 mix from live model traffic: every dispatch the api records — forward
 all-gathers, backward reduce-scatters, prefill vs decode serving steps — is
-aggregated into ``(op, axis_size, nbytes, phase, impl) -> count`` cells.
+aggregated into ``(OpCell, phase, impl) -> count`` cells, where ``OpCell``
+(core/cell.py) carries the FULL communication problem: op, axis size,
+payload bytes, dtype and — for the fused collective-matmul ops — the
+per-callsite GEMM dims ``(mm_k, mm_m, mm_n)`` and the gather/scatter/
+contract role.
 
 Phases are the coarse callsite classes of an LM workload:
 
@@ -20,10 +24,17 @@ decode     serving token-by-token steps (launch/serve tags these)
 =========  ===============================================================
 
 The on-disk form is JSONL — one aggregated cell per line, so traces from
-many hosts/steps concatenate and ``merge`` trivially:
+many hosts/steps concatenate and ``merge`` trivially.  **Schema v2** adds the
+geometry fields (``v: 2``; ``mm``/``role`` only present on fused cells):
 
-    {"op": "reducescatter", "p": 8, "nbytes": 4096, "phase": "bwd",
-     "impl": "default", "count": 24}
+    {"v": 2, "op": "allgather_matmul", "p": 8, "nbytes": 4096,
+     "dtype": "float32", "mm": [512, 64, 16], "role": "gather",
+     "phase": "fwd", "impl": "default", "count": 24}
+
+v1 lines (no ``v`` key, bare 5-field cells) still load: their geometry is
+defaulted — dtype ``float32``, no GEMM dims — which for fused ops means
+"geometry unknown" (``OpCell.fused`` is False); the measured backend cannot
+replay such a cell and note-skips it.
 
 ``tuner.tune_trace`` consumes a ``Trace`` and emits per-phase
 ``ProfileStore``s (see DESIGN_TRACE.md), which ``api.tuned(phase_profiles=
@@ -37,30 +48,62 @@ import json
 import pathlib
 from typing import Iterable, Iterator
 
+from repro.core.cell import OpCell
+
+SCHEMA_VERSION = 2
+
 
 @dataclasses.dataclass(frozen=True)
 class TraceEntry:
     """One aggregated dispatch cell."""
-    op: str
-    axis_size: int
-    nbytes: int
+    cell: OpCell
     phase: str = "fwd"
     impl: str = "default"
     count: int = 1
 
-    def key(self) -> tuple[str, int, int, str, str]:
-        return (self.op, self.axis_size, self.nbytes, self.phase, self.impl)
+    # -- convenience views (the cell is the key) -----------------------------
+    @property
+    def op(self) -> str:
+        return self.cell.op
+
+    @property
+    def axis_size(self) -> int:
+        return self.cell.p
+
+    @property
+    def nbytes(self) -> int:
+        return self.cell.nbytes
+
+    def key(self) -> tuple[OpCell, str, str]:
+        return (self.cell, self.phase, self.impl)
+
+    @classmethod
+    def of(cls, op: str, axis_size: int, nbytes: int, phase: str = "fwd",
+           impl: str = "default", count: int = 1, **geom) -> "TraceEntry":
+        """Build from bare fields (tests, hand-written traces); ``geom``
+        passes ``dtype``/``mm_k``/``mm_m``/``mm_n``/``mm_role`` through."""
+        return cls(OpCell(op, axis_size, nbytes, **geom), phase, impl, count)
 
     def to_json(self) -> str:
-        return json.dumps({"op": self.op, "p": self.axis_size,
-                           "nbytes": self.nbytes, "phase": self.phase,
-                           "impl": self.impl, "count": self.count})
+        d = {"v": SCHEMA_VERSION, "op": self.cell.op, "p": self.cell.p,
+             "nbytes": self.cell.nbytes, "dtype": self.cell.dtype}
+        if self.cell.fused:
+            d["mm"] = [self.cell.mm_k, self.cell.mm_m, self.cell.mm_n]
+            d["role"] = self.cell.mm_role
+        d.update(phase=self.phase, impl=self.impl, count=self.count)
+        return json.dumps(d)
 
     @classmethod
     def from_json(cls, line: str) -> "TraceEntry":
+        """Parse a v2 line; v1 lines (no ``v`` key) load with defaulted
+        geometry — fused ops come back with unknown GEMM dims."""
         d = json.loads(line)
-        return cls(op=d["op"], axis_size=int(d["p"]),
-                   nbytes=int(d["nbytes"]), phase=d.get("phase", "fwd"),
+        mm = d.get("mm") or (0, 0, 0)
+        cell = OpCell(op=d["op"], p=int(d["p"]), nbytes=int(d["nbytes"]),
+                      dtype=d.get("dtype", "float32"),
+                      mm_k=int(mm[0]), mm_m=int(mm[1]), mm_n=int(mm[2]),
+                      mm_role=d.get("role", ""))
+        return cls(cell=cell, phase=d.get("phase", "fwd"),
                    impl=d.get("impl", "default"),
                    count=int(d.get("count", 1)))
 
@@ -69,11 +112,11 @@ class Trace:
     """An aggregated multiset of dispatch cells (order-independent)."""
 
     def __init__(self, entries: Iterable[TraceEntry] | None = None):
-        self._cells: dict[tuple[str, int, int, str, str], int] = {}
+        self._cells: dict[tuple[OpCell, str, str], int] = {}
         for e in entries or ():
             self._add(e.key(), e.count)
 
-    def _add(self, key: tuple[str, int, int, str, str], count: int) -> None:
+    def _add(self, key: tuple[OpCell, str, str], count: int) -> None:
         if count <= 0:
             raise ValueError(f"non-positive count {count} for {key}")
         self._cells[key] = self._cells.get(key, 0) + count
@@ -81,11 +124,16 @@ class Trace:
     # -- construction --------------------------------------------------------
     @classmethod
     def from_record(cls, record) -> "Trace":
-        """Build from ``TuneContext.record`` 5-tuples
-        ``(op, axis_size, nbytes, impl, phase)``."""
+        """Build from ``TuneContext.record`` entries (``DispatchRecord``
+        with a ``.cell``; legacy ``(op, p, nbytes, impl, phase)`` 5-tuples
+        are accepted with defaulted geometry)."""
         t = cls()
-        for op, p, nbytes, impl, phase in record:
-            t._add((op, p, nbytes, phase, impl), 1)
+        for r in record:
+            if hasattr(r, "cell"):
+                t._add((r.cell, r.phase, r.impl), 1)
+            else:
+                op, p, nbytes, impl, phase = r
+                t._add((OpCell(op, p, nbytes), phase, impl), 1)
         return t
 
     @classmethod
@@ -95,9 +143,8 @@ class Trace:
     # -- views ---------------------------------------------------------------
     @property
     def entries(self) -> list[TraceEntry]:
-        return [TraceEntry(op, p, nbytes, phase, impl, count)
-                for (op, p, nbytes, phase, impl), count
-                in sorted(self._cells.items())]
+        return [TraceEntry(cell, phase, impl, count)
+                for (cell, phase, impl), count in sorted(self._cells.items())]
 
     def __len__(self) -> int:
         return len(self._cells)
@@ -113,29 +160,27 @@ class Trace:
         return sum(self._cells.values())
 
     def phases(self) -> list[str]:
-        return sorted({k[3] for k in self._cells})
+        return sorted({k[1] for k in self._cells})
 
     def ops(self) -> list[str]:
-        return sorted({k[0] for k in self._cells})
+        return sorted({k[0].op for k in self._cells})
 
-    def histogram(self) -> dict[tuple[str, int, int, str], int]:
-        """``(op, axis_size, nbytes, phase) -> count`` (summed over impls —
-        the tuner re-decides the impl, so the recorded one is provenance)."""
-        out: dict[tuple[str, int, int, str], int] = {}
-        for (op, p, nbytes, phase, _impl), count in self._cells.items():
-            k = (op, p, nbytes, phase)
+    def histogram(self) -> dict[tuple[OpCell, str], int]:
+        """``(cell, phase) -> count`` (summed over impls — the tuner
+        re-decides the impl, so the recorded one is provenance)."""
+        out: dict[tuple[OpCell, str], int] = {}
+        for (cell, phase, _impl), count in self._cells.items():
+            k = (cell, phase)
             out[k] = out.get(k, 0) + count
         return out
 
-    def cells(self, phase: str | None = None) \
-            -> dict[tuple[str, int, int], int]:
-        """``(op, axis_size, nbytes) -> count`` for one phase (or all)."""
-        out: dict[tuple[str, int, int], int] = {}
-        for (op, p, nbytes, ph, _impl), count in self._cells.items():
+    def cells(self, phase: str | None = None) -> dict[OpCell, int]:
+        """``OpCell -> count`` for one phase (or all)."""
+        out: dict[OpCell, int] = {}
+        for (cell, ph, _impl), count in self._cells.items():
             if phase is not None and ph != phase:
                 continue
-            k = (op, p, nbytes)
-            out[k] = out.get(k, 0) + count
+            out[cell] = out.get(cell, 0) + count
         return out
 
     def filter(self, *, phase: str | None = None,
@@ -158,7 +203,7 @@ class Trace:
         for ph in self.phases():
             cells = self.cells(phase=ph)
             n = sum(cells.values())
-            ops = sorted({op for op, _, _ in cells})
+            ops = sorted({c.op for c in cells})
             lines.append(f"  {ph}: {n} dispatches over {len(cells)} cells "
                          f"({', '.join(ops)})")
         return "\n".join(lines)

@@ -27,6 +27,7 @@ import statistics
 from typing import Sequence
 
 from repro.core import costmodel, measure, nrep
+from repro.core.cell import OpCell
 from repro.core.collectives import REGISTRY
 from repro.core.profiles import Profile, ProfileStore, Range
 
@@ -36,12 +37,22 @@ DEFAULT_SIZES = (1, 8, 32, 64, 100, 512, 1024, 4096, 8192, 32768,
 
 @dataclasses.dataclass(frozen=True)
 class Measurement:
-    op: str
+    cell: OpCell
     impl: str
-    axis_size: int
-    nbytes: int
     latency: float          # seconds (median for measured backend)
     nrep: int = 1
+
+    @property
+    def op(self) -> str:
+        return self.cell.op
+
+    @property
+    def axis_size(self) -> int:
+        return self.cell.p
+
+    @property
+    def nbytes(self) -> int:
+        return self.cell.nbytes
 
 
 @dataclasses.dataclass(frozen=True)
@@ -73,7 +84,12 @@ class TuneReport:
 
 
 class CostModelBackend:
-    """Latency = analytic model; deterministic, any axis size."""
+    """Latency = analytic model; deterministic, any axis size.
+
+    Backends price ``OpCell``s: a cell with recorded matmul geometry is
+    priced from its true flops (``costmodel.latency_cell``); geometry-less
+    cells use the canonical table.
+    """
 
     name = "costmodel"
     supported_axis_size: int | None = None      # any p
@@ -82,16 +98,22 @@ class CostModelBackend:
         self.topo = topo
         self.chunk_bytes = chunk_bytes
 
-    def latency(self, op: str, impl: str, p: int, nbytes: int) -> float:
-        return costmodel.latency(op, impl, p, nbytes, self.topo,
-                                 chunk_bytes=self.chunk_bytes)
+    def latency(self, cell: OpCell, impl: str) -> float:
+        return costmodel.latency_cell(cell, impl, self.topo,
+                                      chunk_bytes=self.chunk_bytes)
 
-    def nrep_for(self, op: str, impl: str, nbytes: int) -> int:
+    def nrep_for(self, cell: OpCell, impl: str) -> int:
         return 1
 
 
 class MeasuredBackend:
-    """Wall-clock on host devices; NREP via the paper's estimator."""
+    """Wall-clock on host devices; NREP via the paper's estimator.
+
+    Replays each cell's RECORDED problem — for fused collective-matmul
+    cells that is the callsite's actual GEMM ``(dtype, mm_k, mm_m, mm_n)``,
+    not a canonical square weight.  Fused cells without geometry (v1
+    traces) are unmeasurable (``inf``), which the tuner note-skips.
+    """
 
     name = "measured"
 
@@ -101,8 +123,8 @@ class MeasuredBackend:
         self.rse_large = rse_large
         self.K = K
         self.max_nrep = max_nrep
-        self._one_byte: dict[tuple[str, str], nrep.OneByteEstimate] = {}
-        self._nrep: dict[tuple[str, str, int], int] = {}
+        self._one_byte: dict[tuple, nrep.OneByteEstimate] = {}
+        self._nrep: dict[tuple, int] = {}
 
     @property
     def supported_axis_size(self) -> int:
@@ -110,31 +132,44 @@ class MeasuredBackend:
         the trace-replay tuner skips (and notes) every other cell."""
         return measure.axis_size()
 
-    def _ob(self, op: str, impl: str) -> nrep.OneByteEstimate:
-        key = (op, impl)
+    @staticmethod
+    def _measurable(cell: OpCell) -> bool:
+        return cell.op not in measure.MATMUL_OPS or cell.fused
+
+    def _ob(self, cell: OpCell, impl: str) -> nrep.OneByteEstimate:
+        # for fused cells scaled_to(1) floors at ONE GEMM row/block, so the
+        # anchor is the minimal fused problem rather than a literal byte —
+        # a conservatively high floor; max_nrep bounds the resulting reps
+        key = (cell.scaled_to(1), impl)
         if key not in self._one_byte:
             self._one_byte[key] = nrep.estimate_1byte(
-                measure.make_sampler(op, impl),
+                measure.make_sampler(cell, impl),
                 rse_threshold=self.rse_1byte, batch0=5, max_samples=60)
         return self._one_byte[key]
 
-    def nrep_for(self, op: str, impl: str, nbytes: int) -> int:
+    def nrep_for(self, cell: OpCell, impl: str) -> int:
         # memoized: latency() and the Measurement record both ask, and each
         # estimate costs real barrier-synced timed samples
-        key = (op, impl, nbytes)
+        if not self._measurable(cell):
+            return 1
+        key = (cell, impl)
         if key not in self._nrep:
-            n = nrep.estimate_nrep(measure.make_sampler(op, impl), nbytes,
-                                   self._ob(op, impl),
+            n = nrep.estimate_nrep(measure.make_sampler(cell, impl),
+                                   cell.nbytes, self._ob(cell, impl),
                                    rse_threshold=self.rse_large, K=self.K)
             self._nrep[key] = min(n, self.max_nrep)
         return self._nrep[key]
 
-    def latency(self, op: str, impl: str, p: int, nbytes: int) -> float:
-        if p != measure.axis_size():
+    def latency(self, cell: OpCell, impl: str) -> float:
+        if cell.p != measure.axis_size():
             raise ValueError(
-                f"measured backend runs at p={measure.axis_size()}, not {p}")
-        count = self.nrep_for(op, impl, nbytes)
-        samples = measure.sample_latency(op, impl, nbytes, count)
+                f"measured backend runs at p={measure.axis_size()}, "
+                f"not {cell.p}")
+        if not self._measurable(cell):
+            # fused op without recorded geometry: nothing faithful to replay
+            return math.inf
+        count = self.nrep_for(cell, impl)
+        samples = measure.sample_latency(cell, impl, count)
         return statistics.median(samples)
 
 
@@ -170,7 +205,7 @@ def tune(ops: Sequence[str] | None = None,
         picks: list[tuple[int, str]] = []   # (nbytes, winning impl)
         lat_by_size: dict[int, dict[str, float]] = {}
         for nbytes in sizes:
-            lats = _measure_cell(op, p, nbytes, backend,
+            lats = _measure_cell(OpCell(op, p, nbytes), backend,
                                  scratch_budget_bytes, ms)
             t_def = lats.get("default")
             if t_def is None:
@@ -228,27 +263,28 @@ def tune(ops: Sequence[str] | None = None,
                       notes=notes)
 
 
-def _measure_cell(op: str, p: int, nbytes: int, backend,
+def _measure_cell(cell: OpCell, backend,
                   scratch_budget_bytes: int | None,
                   ms: list[Measurement]) -> dict[str, float]:
-    """Benchmark every admissible impl of one (op, p, nbytes) cell — the
-    §4.2 admission rules (pow2 guard, Table-1 scratch budget, inf filter)
+    """Benchmark every admissible impl of one tuning cell — the §4.2
+    admission rules (pow2 guard, Table-1 scratch budget, inf filter)
     shared by the sweep tuner and the trace-replay tuner.  Appends to
     ``ms`` and returns ``{impl: latency}``."""
     lats: dict[str, float] = {}
-    for impl_name, impl in REGISTRY[op].items():
+    p, nbytes = cell.p, cell.nbytes
+    for impl_name, impl in REGISTRY[cell.op].items():
         if impl.requires_pow2 and (p & (p - 1)) != 0:
             continue
         if (scratch_budget_bytes is not None
                 and impl_name != "default"
                 and impl.extra_bytes(nbytes, p) > scratch_budget_bytes):
             continue
-        t = backend.latency(op, impl_name, p, nbytes)
+        t = backend.latency(cell, impl_name)
         if math.isinf(t):
             continue
         lats[impl_name] = t
-        ms.append(Measurement(op, impl_name, p, nbytes, t,
-                              backend.nrep_for(op, impl_name, nbytes)))
+        ms.append(Measurement(cell, impl_name, t,
+                              backend.nrep_for(cell, impl_name)))
     return lats
 
 
@@ -314,10 +350,16 @@ def tune_trace(trace, backend=None, *, min_win: float = 0.10,
     mock-up than the forward's all-gathers.
 
     With a ``MeasuredBackend`` this is the ROADMAP "measured-backend trace
-    replay": each recorded (op, p, nbytes) cell is re-executed on the host
-    devices and timed (serving profiles from wall clock, not the model).
-    Cells whose ``p`` differs from ``measure.axis_size()`` cannot be
-    replayed and are skipped with a note.
+    replay": each recorded cell is re-executed on the host devices with its
+    RECORDED problem — fused collective-matmul cells replay the callsite's
+    actual GEMM ``(dtype, mm_k, mm_m, mm_n)`` — and timed (serving profiles
+    from wall clock, not the model).  Cells whose ``p`` differs from
+    ``measure.axis_size()`` cannot be replayed and are skipped with a note;
+    so are fused cells without recorded geometry (v1 traces).
+
+    Emitted profiles are keyed like the cells: fused cells produce one
+    geometry profile per ``(op, p, Geom)`` — the store's nearest-cell
+    fallback covers unseen shapes at dispatch.
     """
     backend = backend or CostModelBackend(costmodel.V5E_ICI)
     sup = getattr(backend, "supported_axis_size", None)
@@ -326,14 +368,15 @@ def tune_trace(trace, backend=None, *, min_win: float = 0.10,
     phase_profiles: dict[str, ProfileStore] = {}
     est_default: dict[str, float] = {}
     est_tuned: dict[str, float] = {}
-    # fwd and bwd often share cells; measure each (op, p, nbytes) once —
-    # this matters for a future measured backend doing real timed runs
-    lat_cache: dict[tuple[str, int, int], dict[str, float]] = {}
+    # fwd and bwd often share cells; measure each OpCell once — this
+    # matters for the measured backend doing real timed runs
+    lat_cache: dict[OpCell, dict[str, float]] = {}
 
     for ph in trace.phases():
-        picks: dict[tuple[str, int], list[tuple[int, str]]] = {}
+        picks: dict[tuple, list[tuple[int, str]]] = {}
         t_d = t_t = 0.0
-        for (op, p, nbytes), weight in sorted(trace.cells(phase=ph).items()):
+        for cell, weight in sorted(trace.cells(phase=ph).items()):
+            op, p, nbytes = cell.op, cell.p, cell.nbytes
             if op not in REGISTRY:
                 notes.append(f"{ph}: unknown op {op!r}; cell skipped")
                 continue
@@ -341,9 +384,8 @@ def tune_trace(trace, backend=None, *, min_win: float = 0.10,
                 notes.append(f"{ph}: {op} p={p} {nbytes}B: p != host axis "
                              f"size {sup}; cell skipped")
                 continue
-            cell = (op, p, nbytes)
             if cell not in lat_cache:
-                lat_cache[cell] = _measure_cell(op, p, nbytes, backend,
+                lat_cache[cell] = _measure_cell(cell, backend,
                                                 scratch_budget_bytes, ms)
             lats = lat_cache[cell]
             t_def = lats.get("default")
@@ -355,19 +397,23 @@ def tune_trace(trace, backend=None, *, min_win: float = 0.10,
             cands = {k: v for k, v in lats.items() if k != "default"}
             best = min(cands, key=cands.get) if cands else None
             if best is not None and cands[best] < t_def * (1.0 - min_win):
-                picks.setdefault((op, p), []).append((nbytes, best))
+                picks.setdefault((op, p, cell.geom()), []).append(
+                    (nbytes, best))
                 t_t += weight * cands[best]
             else:
                 t_t += weight * t_def
 
-        for (op, p), pk in sorted(picks.items()):
+        for (op, p, geom), pk in sorted(
+                picks.items(), key=lambda kv: (kv[0][0], kv[0][1],
+                                               str(kv[0][2]))):
             ranges = [Range(nb, nb, impl) for nb, impl in sorted(pk)]
             if coalesce:
                 ranges = _coalesce(ranges)
+            meta = {"backend": backend.name, "min_win": min_win,
+                    "phase": ph, "source": "trace"}
             phase_profiles.setdefault(ph, ProfileStore()).add(
-                Profile(op=op, axis_size=p, ranges=ranges,
-                        meta={"backend": backend.name, "min_win": min_win,
-                              "phase": ph, "source": "trace"}))
+                Profile(op=op, axis_size=p, ranges=ranges, meta=meta,
+                        geom=geom))
         est_default[ph] = t_d
         est_tuned[ph] = t_t
 

@@ -13,6 +13,6 @@ from repro.dist import ops  # noqa: F401
 from repro.dist.axes import AXES, MeshAxes, axis_size_or_1, has_axis  # noqa: F401
 from repro.dist.ops import (allgather_matmul, col_matmul,  # noqa: F401
                             ep_alltoall, fsdp_gather, fsdp_matmul,
-                            matmul_reducescatter, row_matmul, tp_allgather,
-                            tp_allreduce, tp_copy, tp_psum_grad,
-                            tp_reducescatter)
+                            matmul_accumulate, matmul_reducescatter,
+                            row_matmul, tp_allgather, tp_allreduce, tp_copy,
+                            tp_psum_grad, tp_reducescatter)

@@ -32,6 +32,9 @@ matmul_reducescatter api.matmul_reducescatter   api.allgather_matmul (dx; the
 fsdp_matmul          api.allgather_matmul       api.matmul_reducescatter (dw)
                      (data — weight gather      — the FSDP grad
                      fused into the matmul)     reduce-scatter, fused
+matmul_accumulate    api.matmul_accumulate      api.matmul_reducescatter (dw
+                     (data — K-dim weight       reduce-scatter over K rows);
+                     gather, CONTRACTED away)   dx reuses the gathered weight
 ===================  =========================  ==========================
 
 The fused pair (``allgather_matmul`` / ``matmul_reducescatter``) exposes the
@@ -362,6 +365,60 @@ def fsdp_matmul(x, w, axis: str = AXES.data):
 
 
 @partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _acc_mm(axis: str, x, w):
+    x2, _ = _flat2(x)
+    out = api.matmul_accumulate(x2, w, axis)
+    return out.reshape(*x.shape[:-1], w.shape[-1])
+
+
+def _acc_mm_fwd(axis, x, w):
+    # x @ AG(w, dim 0): the gathered dim is contracted away — the accumulate
+    # ring.  The ring materializes the full weight anyway; keep it as the
+    # residual so dx is a local matmul (memory parity with the unfused
+    # fsdp_gather path, whose autodiff saves the gathered weight too).
+    x2, _ = _flat2(x)
+    out, wf = api.matmul_accumulate(x2, w, axis, return_gathered=True)
+    return out.reshape(*x.shape[:-1], w.shape[-1]), (x, wf)
+
+
+def _acc_mm_bwd(axis, res, g):
+    # out = x @ W with W = AG(w, rows).  dw is W's cotangent (x.T @ g)
+    # reduce-scattered back to the K-row owner shards — the mirror fused op;
+    # dx reuses the gathered weight saved by the forward.
+    x, wf = res
+    g2, _ = _flat2(g)
+    x2, _ = _flat2(x)
+    with api.phase("bwd"):
+        dw = api.matmul_reducescatter(x2.T, g2, axis)
+    dx = jnp.matmul(g2, wf.T).reshape(x.shape)
+    return dx, dw
+
+
+_acc_mm.defvjp(_acc_mm_fwd, _acc_mm_bwd)
+
+
+def matmul_accumulate(x, w, axis: str = AXES.data):
+    """``x @ all_gather(w, dim 0)`` with the K-dim (contraction) weight
+    gather fused into the matmul — the ``fsdp_gather(w, 0)`` + matmul
+    sites.  ``w`` per-shard ``[K/p, M]``, ``x`` ``[..., K]``.  The gathered
+    dim is contracted away, so the row-block rings don't apply; the
+    dispatcher arbitrates the accumulate ring vs the unfused composition
+    per cell.  The backward pairs ``matmul_reducescatter`` for the weight
+    grad (the FSDP reduce-scatter over K rows).
+
+    Unevenly padded shards (``x``'s K != p·rows(w)) fall back to the tuned
+    unfused gather + slice — the ring needs equal blocks.
+    """
+    if not has_axis(axis):
+        return jnp.matmul(x, w)
+    k = x.shape[-1]
+    if k != axis_size(axis) * w.shape[0]:
+        full = _gather(0, axis, w)[:k]
+        return jnp.matmul(x, full)
+    return _acc_mm(axis, x, w)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0,))
 def _col_mm(axis: str, x, w):
     return jnp.matmul(x, w)
 
@@ -390,11 +447,22 @@ def _col_mm_bwd(axis, res, g):
 _col_mm.defvjp(_col_mm_fwd, _col_mm_bwd)
 
 
-def col_matmul(x, w, axis: str = AXES.model):
+def col_matmul(x, w, axis: str = AXES.model, *, fsdp_dim: int | None = None,
+               fsdp_axis: str = AXES.data):
     """Column-parallel matmul: ``x`` replicated, ``w`` sharded on its output
     dim -> output sharded on the last dim.  No forward collective; the input
     grad is summed over the axis — via the fused-selectable
-    ``matmul_reducescatter`` + all-gather decomposition."""
+    ``matmul_reducescatter`` + all-gather decomposition.
+
+    ``fsdp_dim=0`` declares that ``w`` is additionally FSDP-sharded on its
+    INPUT (contraction) dim over ``fsdp_axis`` and fuses that gather into
+    the matmul via ``matmul_accumulate`` — the K-dim weight-gather sites;
+    the model-axis input-grad sum is carried by a ``tp_copy`` marker.
+    Other ``fsdp_dim`` values gather unfused first."""
+    if fsdp_dim == 0:
+        return matmul_accumulate(tp_copy(x, axis), w, fsdp_axis)
+    if fsdp_dim is not None:
+        w = fsdp_gather(w, fsdp_dim, fsdp_axis)
     if not has_axis(axis):
         return jnp.matmul(x, w)
     return _col_mm(axis, x, w)

@@ -1,18 +1,32 @@
 """Latency-hiding collective-matmul kernels (ring schedules, Pallas + ref).
 
-Two fused primitives, each semantically equal to an unfused collective
+Three fused primitives, each semantically equal to an unfused collective
 followed (or preceded) by a dense matmul:
 
 * ``ring_allgather_matmul``      out = all_gather(x, rows) @ w
 * ``ring_matmul_reducescatter``  out = reduce_scatter(x @ w, rows)
+* ``ring_matmul_accumulate``     out = x @ all_gather(w, rows)
 
-Both run the classic (p-1)-step neighbour ring, but matmul the chunk they
+All run the classic (p-1)-step neighbour ring, but matmul the chunk they
 already hold while the next chunk is in flight — the "collective matmul" of
 Wang et al. (overlap of ICI transfers with MXU work), applied here as a
-tunable mock-up: the dispatcher's ``fused_ring`` impl of the
-``allgather_matmul`` / ``matmul_reducescatter`` ops (core/collectives.py)
-calls these, and the tuner arbitrates fused vs unfused per (op, p, nbytes)
-exactly like any other guideline.
+tunable mock-up: the dispatcher's ``fused_ring`` impls of the
+``allgather_matmul`` / ``matmul_reducescatter`` / ``matmul_accumulate`` ops
+(core/collectives.py) call these, and the tuner arbitrates fused vs unfused
+per tuning cell exactly like any other guideline.
+
+The three ring schedules differ in WHAT travels and WHAT stays resident:
+
+=========================  ==================  ===========================
+schedule                   travelling operand  per-step local work
+=========================  ==================  ===========================
+allgather-matmul           activation chunk    chunk row-block @ resident w
+                           (gather role)       -> disjoint output rows
+matmul-reducescatter       output accumulator  resident x row-block @ w,
+                           (scatter role)      added into the accumulator
+matmul-accumulate          weight block        x K-slice @ weight block,
+                           (contract role)     accumulated into [T, M] out
+=========================  ==================  ===========================
 
 Three execution tiers:
 
@@ -24,11 +38,12 @@ Three execution tiers:
 2. **Pallas block matmul** (``pallas_matmul``): the per-chunk matmul as a
    tiled MXU kernel with an fp32 VMEM accumulator; used inside the ring on
    TPU and exercised on CPU via ``interpret=True``.
-3. **RDMA ring kernel** (``ring_allgather_matmul_rdma``): a single Pallas
-   kernel that drives ``make_async_remote_copy`` sends itself (double-
-   buffered comm scratch, per-slot DMA semaphores, neighbour barrier) —
-   the full latency-hiding schedule with no XLA scheduling dependence.
-   TPU-only; the public entry points fall back to tier 1/2 elsewhere.
+3. **RDMA ring kernel** (``collective_matmul_rdma.ring_allgather_matmul_
+   rdma``): a single Pallas kernel that drives ``make_async_remote_copy``
+   sends itself — the full latency-hiding schedule with no XLA scheduling
+   dependence.  TPU-only and kept in its own module; the ``fused_ring``
+   dispatcher impl performs the backend check (``on_tpu``) and only
+   imports the RDMA module on TPU, so CPU CI never loads that path.
 """
 from __future__ import annotations
 
@@ -43,22 +58,23 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.core._axis import axis_index, axis_size, ring_perm
 
 __all__ = ["pallas_matmul", "ring_allgather_matmul",
-           "ring_matmul_reducescatter", "ring_allgather_matmul_rdma"]
-
-# jax 0.4.x names this TPUCompilerParams; new jax uses CompilerParams
-_CompilerParams = getattr(pltpu, "CompilerParams", None) or \
-    getattr(pltpu, "TPUCompilerParams")
+           "ring_matmul_reducescatter", "ring_matmul_accumulate", "on_tpu"]
 
 
 def _cdiv(a: int, b: int) -> int:
     return -(-a // b)
 
 
-def _on_tpu() -> bool:
+def on_tpu() -> bool:
+    """Backend check gating the TPU-only execution tiers (RDMA ring,
+    non-interpret Pallas)."""
     try:
         return jax.default_backend() == "tpu"
     except Exception:  # pragma: no cover - backend probing never fatal
         return False
+
+
+_on_tpu = on_tpu  # internal alias
 
 
 # ---------------------------------------------------------------------------
@@ -198,121 +214,59 @@ def ring_matmul_reducescatter(x, w, axis: str, *, mm: str = "auto"):
     return acc
 
 
-# ---------------------------------------------------------------------------
-# tier 3: single-kernel RDMA ring (TPU only — drives its own transfers)
-# ---------------------------------------------------------------------------
+def ring_matmul_accumulate(x, w, axis: str, *, return_gathered: bool = False,
+                           mm: str = "auto"):
+    """``x @ all_gather(w, rows)`` with per-block overlap — the contraction-
+    dim ring.
 
+    x: ``[T, K]`` shard-local (K = p·k_loc, the full contraction), w:
+    per-shard ``[k_loc, M]`` (rows gathered over ``axis``) -> ``[T, M]``.
+    The gathered dim is contracted away, so neither row-block schedule
+    applies; instead the WEIGHT blocks travel: step s matmuls the K-slice of
+    ``x`` matching the block originated by rank ``idx - s`` into a local
+    accumulator while the ppermute moving block s+1 is already in flight
+    (issue-before-consume, same overlap law as the other rings).
 
-def _agmm_rdma_kernel(x_ref, w_ref, o_ref, gath_ref, comm_buf, send_sem,
-                      recv_sem, credit_sem, acc_scr, *, p: int, axis: str):
-    """One grid step per ring hop: RDMA-send the resident chunk to the right
-    neighbour, matmul it into its output rows, then wait on the transfers —
-    compute and ICI traffic overlap inside a single kernel invocation.
-
-    Buffer-reuse flow control: the send at step s lands in the right
-    neighbour's slot ``(s+1) % 2`` — the buffer that neighbour last read at
-    its step s-1.  Each device therefore grants one CREDIT to its left
-    neighbour when it finishes consuming a slot, and a sender must burn one
-    credit (from the right neighbour) before re-targeting that slot; the
-    step-0 send needs none (both slots start free)."""
-    s = pl.program_id(0)
-    my = lax.axis_index(axis)
-    right = lax.rem(my + 1, p)
-    left = lax.rem(my + p - 1, p)
-
-    @pl.when(s == 0)
-    def _seed():
-        # neighbour barrier so nobody RDMAs into a peer still setting up
-        bar = pltpu.get_barrier_semaphore()
-        pltpu.semaphore_signal(bar, inc=1, device_id=(left,),
-                               device_id_type=pltpu.DeviceIdType.LOGICAL)
-        pltpu.semaphore_signal(bar, inc=1, device_id=(right,),
-                               device_id_type=pltpu.DeviceIdType.LOGICAL)
-        pltpu.semaphore_wait(bar, 2)
-        comm_buf[0] = x_ref[...]
-
-    slot = lax.rem(s, 2)
-    nxt = lax.rem(s + 1, 2)
-
-    @pl.when(jnp.logical_and(s >= 1, s < p - 1))
-    def _flow_control():
-        # right neighbour finished reading its slot `nxt` at its step s-1
-        pltpu.semaphore_wait(credit_sem, 1)
-
-    @pl.when(s < p - 1)
-    def _send():
-        rdma = pltpu.make_async_remote_copy(
-            src_ref=comm_buf.at[slot],
-            dst_ref=comm_buf.at[nxt],
-            send_sem=send_sem.at[slot],
-            recv_sem=recv_sem.at[nxt],
-            device_id=(right,),
-            device_id_type=pltpu.DeviceIdType.LOGICAL,
-        )
-        rdma.start()
-
-    # matmul the chunk we hold while the RDMA is in flight
-    src = lax.rem(my - s + p, p)
-    n = x_ref.shape[0]
-    blk = comm_buf[slot]
-    acc_scr[...] = jax.lax.dot_general(
-        blk, w_ref[...], (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)
-    o_ref[pl.ds(src * n, n), :] = acc_scr[...].astype(o_ref.dtype)
-    gath_ref[pl.ds(src * n, n), :] = blk
-
-    @pl.when(s < p - 1)
-    def _wait():
-        pltpu.semaphore_wait(send_sem.at[slot], 1)
-        pltpu.semaphore_wait(recv_sem.at[nxt], 1)
-
-    @pl.when(s < p - 2)
-    def _grant():
-        # slot `slot` is fully consumed (matmul done AND our outgoing DMA
-        # from it delivered): the left neighbour may target it again with
-        # its step-s+1 send.  Credits exactly balance the waits above, so
-        # the semaphore drains to zero by kernel exit.
-        pltpu.semaphore_signal(credit_sem, inc=1, device_id=(left,),
-                               device_id_type=pltpu.DeviceIdType.LOGICAL)
-
-
-def ring_allgather_matmul_rdma(x, w, axis: str, *,
-                               return_gathered: bool = False,
-                               collective_id: int = 7):
-    """The tier-3 Pallas kernel: ring allgather-matmul with in-kernel RDMA.
-
-    TPU-only (``make_async_remote_copy`` has no host interpret path across
-    shard_map devices); callers gate on backend and fall back to
-    ``ring_allgather_matmul`` elsewhere.
+    ``return_gathered=True`` additionally returns the assembled
+    ``all_gather(w)`` — the ring materializes it for free, and custom VJPs
+    reuse it for the input gradient instead of re-gathering.
     """
     p = axis_size(axis)
-    n, k = x.shape
-    m = w.shape[-1]
     out_dtype = jnp.result_type(x.dtype, w.dtype)
     if p == 1:
-        out = jnp.matmul(x, w)
-        return (out, x) if return_gathered else out
-    out, gath = pl.pallas_call(
-        functools.partial(_agmm_rdma_kernel, p=p, axis=axis),
-        grid=(p,),
-        in_specs=[pl.BlockSpec((n, k), lambda s: (0, 0),
-                               memory_space=pltpu.VMEM),
-                  pl.BlockSpec((k, m), lambda s: (0, 0),
-                               memory_space=pltpu.VMEM)],
-        out_specs=(pl.BlockSpec((p * n, m), lambda s: (0, 0),
-                                memory_space=pltpu.VMEM),
-                   pl.BlockSpec((p * n, k), lambda s: (0, 0),
-                                memory_space=pltpu.VMEM)),
-        out_shape=(jax.ShapeDtypeStruct((p * n, m), out_dtype),
-                   jax.ShapeDtypeStruct((p * n, k), x.dtype)),
-        scratch_shapes=[
-            pltpu.VMEM((2, n, k), x.dtype),        # double-buffered chunks
-            pltpu.SemaphoreType.DMA((2,)),         # send slots
-            pltpu.SemaphoreType.DMA((2,)),         # recv slots
-            pltpu.SemaphoreType.REGULAR,           # buffer-reuse credits
-            pltpu.VMEM((n, m), jnp.float32),
-        ],
-        compiler_params=_CompilerParams(
-            has_side_effects=True, collective_id=collective_id),
-    )(x, w)
-    return (out, gath) if return_gathered else out
+        out = _local_mm(x, w, mm).astype(out_dtype)
+        return (out, w) if return_gathered else out
+    k_loc = w.shape[0]
+    assert x.shape[-1] == p * k_loc, (x.shape, w.shape, p)
+    idx = axis_index(axis)
+    zeros = (0,) * (w.ndim - 1)
+    gath = jnp.zeros((p * k_loc,) + w.shape[1:], w.dtype) if return_gathered \
+        else None
+    acc = None
+    cur = w
+    for s in range(p):
+        # issue the transfer of the NEXT weight block before consuming this
+        # one — the accumulate below has no data dependence on it
+        nxt = lax.ppermute(cur, axis, ring_perm(p, 1)) if s < p - 1 else None
+        src = (idx - s) % p                # originating rank of `cur`
+        xblk = lax.dynamic_slice_in_dim(x, src * k_loc, k_loc, axis=-1)
+        contrib = _local_mm(xblk, cur, mm).astype(out_dtype)
+        acc = contrib if acc is None else acc + contrib
+        if return_gathered:
+            gath = lax.dynamic_update_slice(gath, cur, (src * k_loc,) + zeros)
+        cur = nxt
+    return (acc, gath) if return_gathered else acc
+
+
+# ---------------------------------------------------------------------------
+# tier 3 lives in kernels/collective_matmul_rdma.py (TPU-only module); keep
+# the historical import path working without loading it on CPU.
+# ---------------------------------------------------------------------------
+
+
+def __getattr__(name: str):
+    if name == "ring_allgather_matmul_rdma":
+        from repro.kernels.collective_matmul_rdma import \
+            ring_allgather_matmul_rdma
+        return ring_allgather_matmul_rdma
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,139 @@
+"""Tier-3 collective matmul: the single-kernel RDMA ring (TPU only).
+
+A Pallas kernel that drives ``make_async_remote_copy`` sends itself
+(double-buffered comm scratch, per-slot DMA semaphores, neighbour barrier) —
+the full latency-hiding schedule with no XLA scheduling dependence.
+
+This module is TPU-only and imported LAZILY: the ``fused_ring`` dispatcher
+impl (core/collectives.py) performs the backend check and only imports it
+when ``jax.default_backend() == "tpu"``, so CPU CI never loads this path
+(``make_async_remote_copy`` has no host interpret path across shard_map
+devices).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core._axis import axis_size
+
+__all__ = ["ring_allgather_matmul_rdma"]
+
+# jax 0.4.x names this TPUCompilerParams; new jax uses CompilerParams
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    getattr(pltpu, "TPUCompilerParams")
+
+
+def _agmm_rdma_kernel(x_ref, w_ref, o_ref, gath_ref, comm_buf, send_sem,
+                      recv_sem, credit_sem, acc_scr, *, p: int, axis: str):
+    """One grid step per ring hop: RDMA-send the resident chunk to the right
+    neighbour, matmul it into its output rows, then wait on the transfers —
+    compute and ICI traffic overlap inside a single kernel invocation.
+
+    Buffer-reuse flow control: the send at step s lands in the right
+    neighbour's slot ``(s+1) % 2`` — the buffer that neighbour last read at
+    its step s-1.  Each device therefore grants one CREDIT to its left
+    neighbour when it finishes consuming a slot, and a sender must burn one
+    credit (from the right neighbour) before re-targeting that slot; the
+    step-0 send needs none (both slots start free)."""
+    s = pl.program_id(0)
+    my = lax.axis_index(axis)
+    right = lax.rem(my + 1, p)
+    left = lax.rem(my + p - 1, p)
+
+    @pl.when(s == 0)
+    def _seed():
+        # neighbour barrier so nobody RDMAs into a peer still setting up
+        bar = pltpu.get_barrier_semaphore()
+        pltpu.semaphore_signal(bar, inc=1, device_id=(left,),
+                               device_id_type=pltpu.DeviceIdType.LOGICAL)
+        pltpu.semaphore_signal(bar, inc=1, device_id=(right,),
+                               device_id_type=pltpu.DeviceIdType.LOGICAL)
+        pltpu.semaphore_wait(bar, 2)
+        comm_buf[0] = x_ref[...]
+
+    slot = lax.rem(s, 2)
+    nxt = lax.rem(s + 1, 2)
+
+    @pl.when(jnp.logical_and(s >= 1, s < p - 1))
+    def _flow_control():
+        # right neighbour finished reading its slot `nxt` at its step s-1
+        pltpu.semaphore_wait(credit_sem, 1)
+
+    @pl.when(s < p - 1)
+    def _send():
+        rdma = pltpu.make_async_remote_copy(
+            src_ref=comm_buf.at[slot],
+            dst_ref=comm_buf.at[nxt],
+            send_sem=send_sem.at[slot],
+            recv_sem=recv_sem.at[nxt],
+            device_id=(right,),
+            device_id_type=pltpu.DeviceIdType.LOGICAL,
+        )
+        rdma.start()
+
+    # matmul the chunk we hold while the RDMA is in flight
+    src = lax.rem(my - s + p, p)
+    n = x_ref.shape[0]
+    blk = comm_buf[slot]
+    acc_scr[...] = jax.lax.dot_general(
+        blk, w_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    o_ref[pl.ds(src * n, n), :] = acc_scr[...].astype(o_ref.dtype)
+    gath_ref[pl.ds(src * n, n), :] = blk
+
+    @pl.when(s < p - 1)
+    def _wait():
+        pltpu.semaphore_wait(send_sem.at[slot], 1)
+        pltpu.semaphore_wait(recv_sem.at[nxt], 1)
+
+    @pl.when(s < p - 2)
+    def _grant():
+        # slot `slot` is fully consumed (matmul done AND our outgoing DMA
+        # from it delivered): the left neighbour may target it again with
+        # its step-s+1 send.  Credits exactly balance the waits above, so
+        # the semaphore drains to zero by kernel exit.
+        pltpu.semaphore_signal(credit_sem, inc=1, device_id=(left,),
+                               device_id_type=pltpu.DeviceIdType.LOGICAL)
+
+
+def ring_allgather_matmul_rdma(x, w, axis: str, *,
+                               return_gathered: bool = False,
+                               collective_id: int = 7):
+    """The tier-3 Pallas kernel: ring allgather-matmul with in-kernel RDMA."""
+    p = axis_size(axis)
+    n, k = x.shape
+    m = w.shape[-1]
+    out_dtype = jnp.result_type(x.dtype, w.dtype)
+    if p == 1:
+        out = jnp.matmul(x, w)
+        return (out, x) if return_gathered else out
+    out, gath = pl.pallas_call(
+        functools.partial(_agmm_rdma_kernel, p=p, axis=axis),
+        grid=(p,),
+        in_specs=[pl.BlockSpec((n, k), lambda s: (0, 0),
+                               memory_space=pltpu.VMEM),
+                  pl.BlockSpec((k, m), lambda s: (0, 0),
+                               memory_space=pltpu.VMEM)],
+        out_specs=(pl.BlockSpec((p * n, m), lambda s: (0, 0),
+                                memory_space=pltpu.VMEM),
+                   pl.BlockSpec((p * n, k), lambda s: (0, 0),
+                                memory_space=pltpu.VMEM)),
+        out_shape=(jax.ShapeDtypeStruct((p * n, m), out_dtype),
+                   jax.ShapeDtypeStruct((p * n, k), x.dtype)),
+        scratch_shapes=[
+            pltpu.VMEM((2, n, k), x.dtype),        # double-buffered chunks
+            pltpu.SemaphoreType.DMA((2,)),         # send slots
+            pltpu.SemaphoreType.DMA((2,)),         # recv slots
+            pltpu.SemaphoreType.REGULAR,           # buffer-reuse credits
+            pltpu.VMEM((n, m), jnp.float32),
+        ],
+        compiler_params=_CompilerParams(
+            has_side_effects=True, collective_id=collective_id),
+    )(x, w)
+    return (out, gath) if return_gathered else out

@@ -152,10 +152,10 @@ def _modeled_latency(ctx) -> dict:
     from repro.core import costmodel as cm
     t_sel = 0.0
     t_def = 0.0
-    for op, p, nbytes, impl, *_phase in ctx.record:
+    for rec in ctx.record:
         try:
-            t_sel += cm.latency(op, impl, p, nbytes, cm.V5E_ICI)
-            t_def += cm.latency(op, "default", p, nbytes, cm.V5E_ICI)
+            t_sel += cm.latency_cell(rec.cell, rec.impl, cm.V5E_ICI)
+            t_def += cm.latency_cell(rec.cell, "default", cm.V5E_ICI)
         except KeyError:
             pass
     return {"selected": round(t_sel * 1e6, 2), "default": round(t_def * 1e6, 2)}

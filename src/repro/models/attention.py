@@ -297,8 +297,7 @@ def attention(p: dict, cfg: ModelConfig, x, *, pos, kind: str = "causal",
     hd = cfg.hd
     kv_sharded = cfg.n_kv_heads % tp == 0
 
-    w_q = ops.fsdp_gather(p["w_q"], 0)
-    q = ops.col_matmul(x, w_q)
+    q = ops.col_matmul(x, p["w_q"], fsdp_dim=0)
     q = q.reshape(*x.shape[:-1], hq_loc, hd)
 
     if cross_kv is not None:
@@ -306,13 +305,12 @@ def attention(p: dict, cfg: ModelConfig, x, *, pos, kind: str = "causal",
         kv_pos = jnp.arange(k_loc.shape[1])[None]
         kv_valid = None
     else:
-        w_k = ops.fsdp_gather(p["w_k"], 0)
-        w_v = ops.fsdp_gather(p["w_v"], 0)
-        if not kv_sharded:
-            w_k = ops.tp_psum_grad(w_k)
-            w_v = ops.tp_psum_grad(w_v)
-        k = ops.col_matmul(x, w_k) if kv_sharded else x @ w_k
-        v = ops.col_matmul(x, w_v) if kv_sharded else x @ w_v
+        if kv_sharded:
+            k = ops.col_matmul(x, p["w_k"], fsdp_dim=0)
+            v = ops.col_matmul(x, p["w_v"], fsdp_dim=0)
+        else:
+            k = ops.matmul_accumulate(x, ops.tp_psum_grad(p["w_k"]))
+            v = ops.matmul_accumulate(x, ops.tp_psum_grad(p["w_v"]))
         n_kv_loc = (cfg.n_kv_heads // tp) if kv_sharded else cfg.n_kv_heads
         k = k.reshape(*x.shape[:-1], n_kv_loc, hd)
         v = v.reshape(*x.shape[:-1], n_kv_loc, hd)
@@ -468,16 +466,15 @@ def _attention_mla(p, cfg: ModelConfig, x, *, pos, kind, cache, mode):
     hq_loc = hq // tp
     qk_hd = m.nope_head_dim + m.rope_head_dim
 
-    w_dq = ops.fsdp_gather(p["w_dq"], 0)
-    c_q = rms_norm(x @ w_dq, p["q_norm"], cfg.norm_eps)
-    w_uq = ops.fsdp_gather(p["w_uq"], 0)
-    q = ops.col_matmul(c_q, w_uq).reshape(*x.shape[:-1], hq_loc, qk_hd)
+    c_q = rms_norm(ops.matmul_accumulate(x, p["w_dq"]), p["q_norm"],
+                   cfg.norm_eps)
+    q = ops.col_matmul(c_q, p["w_uq"], fsdp_dim=0).reshape(
+        *x.shape[:-1], hq_loc, qk_hd)
     q_nope, q_rope = q[..., :m.nope_head_dim], q[..., m.nope_head_dim:]
     q_rope = rope(q_rope, pos, cfg.rope_theta)
 
-    w_dkv = ops.fsdp_gather(p["w_dkv"], 0)
-    w_dkv = ops.tp_psum_grad(w_dkv)
-    ckv_kr = x @ w_dkv                                  # [B,S,kvr+dr]
+    ckv_kr = ops.matmul_accumulate(
+        x, ops.tp_psum_grad(p["w_dkv"]))                # [B,S,kvr+dr]
     c_kv = rms_norm(ckv_kr[..., :m.kv_lora_rank], p["kv_norm"], cfg.norm_eps)
     k_rope = rope(ckv_kr[..., None, m.kv_lora_rank:], pos, cfg.rope_theta)
 
@@ -504,8 +501,10 @@ def _attention_mla(p, cfg: ModelConfig, x, *, pos, kind, cache, mode):
     else:
         kv_pos, kv_valid = pos, None
 
-    w_ukv = ops.fsdp_gather(p["w_ukv"], 0)
     if cfg.attn_impl == "flash":
+        # the absorbed path reshapes the FULL up-projection weight into
+        # per-head factors, so it keeps the unfused gather
+        w_ukv = ops.fsdp_gather(p["w_ukv"], 0)
         # ABSORBED MLA (+ flash): fold W_uk into q and W_uv into the output
         # so the latent cache itself is the KV — no [B,S,H,dh] k/v ever
         # materializes (DeepSeek's own inference optimization, §Perf).
@@ -528,7 +527,8 @@ def _attention_mla(p, cfg: ModelConfig, x, *, pos, kind, cache, mode):
         o = o.reshape(*x.shape[:-1], hq_loc * m.v_head_dim)
     else:
         # naive MLA: up-project latent kv for local heads per use
-        kv = ops.col_matmul(c_kv.astype(x.dtype), w_ukv).reshape(
+        kv = ops.col_matmul(c_kv.astype(x.dtype), p["w_ukv"],
+                            fsdp_dim=0).reshape(
             *c_kv.shape[:-1], hq_loc, m.nope_head_dim + m.v_head_dim)
         k_nope, v = kv[..., :m.nope_head_dim], kv[..., m.nope_head_dim:]
         k = jnp.concatenate(

@@ -54,10 +54,10 @@ def mlp_specs(d_model: int, d_ff: int, dtype: str):
 
 
 def mlp(params, x, *, act=jax.nn.silu):
-    w_in = ops.fsdp_gather(params["w_in"], 0)
-    w_gate = ops.fsdp_gather(params["w_gate"], 0)
-    h = ops.col_matmul(x, w_in)
-    g = ops.col_matmul(x, w_gate)
+    # fsdp_dim=0: the data-axis K-dim weight gather is fused into the
+    # matmul (matmul_accumulate — the contraction-dim ring)
+    h = ops.col_matmul(x, params["w_in"], fsdp_dim=0)
+    g = ops.col_matmul(x, params["w_gate"], fsdp_dim=0)
     # fsdp_dim=1: the data-axis gather of w_out is fused into the matmul
     # (allgather_matmul — tuner picks ring overlap vs unfused per shape)
     return ops.row_matmul(act(g) * h, params["w_out"], fsdp_dim=1)
@@ -91,11 +91,11 @@ def embed_lookup(params, tokens, *, scale: float | None = None):
 def lm_logits(params, x, head_params=None, *, final_softcap=None):
     """x: [B, S, D] -> logits [B, S, V_t] (vocab-sharded, fp32)."""
     if head_params is not None:
-        w = ops.fsdp_gather(head_params["w"], 0)      # [D, V_t]
-        logits = ops.col_matmul(x, w)
+        # w [D, V_t], K-sharded over data: fused accumulate-ring gather
+        logits = ops.col_matmul(x, head_params["w"], fsdp_dim=0)
     else:
-        table = ops.fsdp_gather(params["table"], 1)   # [V_t, D]
-        logits = ops.col_matmul(x, table.T)
+        # table [V_t, D/p_data]: transposed it is K-sharded on dim 0
+        logits = ops.col_matmul(x, params["table"].T, fsdp_dim=0)
     logits = logits.astype(jnp.float32)
     if final_softcap:
         logits = jnp.tanh(logits / final_softcap) * final_softcap

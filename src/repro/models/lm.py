@@ -306,12 +306,12 @@ def _cross_kv(p, cfg: ModelConfig, enc_out):
     tp = axis_size_or_1(AXES.model)
     hd = cfg.hd
     kv_sharded = cfg.n_kv_heads % tp == 0
-    w_k = ops.fsdp_gather(p["w_k"], 0)
-    w_v = ops.fsdp_gather(p["w_v"], 0)
-    if not kv_sharded:
-        w_k, w_v = ops.tp_psum_grad(w_k), ops.tp_psum_grad(w_v)
-    k = (ops.col_matmul(enc_out, w_k) if kv_sharded else enc_out @ w_k)
-    v = (ops.col_matmul(enc_out, w_v) if kv_sharded else enc_out @ w_v)
+    if kv_sharded:
+        k = ops.col_matmul(enc_out, p["w_k"], fsdp_dim=0)
+        v = ops.col_matmul(enc_out, p["w_v"], fsdp_dim=0)
+    else:
+        k = ops.matmul_accumulate(enc_out, ops.tp_psum_grad(p["w_k"]))
+        v = ops.matmul_accumulate(enc_out, ops.tp_psum_grad(p["w_v"]))
     n_loc = (cfg.n_kv_heads // tp) if kv_sharded else cfg.n_kv_heads
     k = k.reshape(*enc_out.shape[:-1], n_loc, hd)
     v = v.reshape(*enc_out.shape[:-1], n_loc, hd)
@@ -327,8 +327,8 @@ def _run_block(kind, p, cfg, x, *, pos, mode, cache, n_prefix, enc_out,
                                seq_sharded=seq_sharded)
     if kind == "shared_attn":
         # zamba2: shared transformer block on concat(x, resid0), projected in
-        w_in = ops.fsdp_gather(shared_p["proj_in"], 0)
-        h = jnp.concatenate([x, resid0], axis=-1) @ w_in
+        h = ops.matmul_accumulate(jnp.concatenate([x, resid0], axis=-1),
+                                  shared_p["proj_in"])
         shared_cfg = dataclasses.replace(cfg, moe=None, mla=None)
         y, c, aux = _run_attn_block(
             shared_p, shared_cfg, h, kind="attn", pos=pos, mode=mode,
@@ -418,7 +418,7 @@ def _embed_inputs(params, cfg: ModelConfig, batch, *, pos0=0):
     """Returns (x, pos, n_prefix, labels_mask_extra)."""
     scale = (cfg.d_model ** 0.5) if cfg.scale_embed else None
     if cfg.vlm is not None and "patches" in batch:
-        img = batch["patches"] @ ops.fsdp_gather(params["img_proj"], 0)
+        img = ops.matmul_accumulate(batch["patches"], params["img_proj"])
         img = img.astype(jnp.dtype(cfg.dtype))
         txt = embed_lookup(params["embed"], batch["tokens"], scale=scale)
         x = jnp.concatenate([img, txt], axis=1)

@@ -66,8 +66,8 @@ def moe_block(p: dict, cfg: ModelConfig, x) -> tuple[jax.Array, jax.Array]:
     xt = x.reshape(t, d)
 
     # --- routing (fp32, replicated over TP) ---------------------------------
-    router = ops.fsdp_gather(p["router"], 0)
-    logits = (xt.astype(jnp.float32) @ router.astype(jnp.float32))
+    logits = ops.matmul_accumulate(xt.astype(jnp.float32),
+                                   p["router"].astype(jnp.float32))
     probs = jax.nn.softmax(logits, axis=-1)                      # [T, E]
     gate_vals, expert_ids = lax.top_k(probs, m.top_k)            # [T, k]
     gate_vals = gate_vals / jnp.maximum(

@@ -119,13 +119,12 @@ def rwkv_block(p: dict, cfg: ModelConfig, x, *, state=None):
     xw = _lerp(xn, prev, p["mu_w"])
     xg = _lerp(xn, prev, p["mu_g"])
 
-    r = ops.col_matmul(xr, ops.fsdp_gather(p["w_r"], 0))
-    k = ops.col_matmul(xk, ops.fsdp_gather(p["w_k"], 0))
-    v = ops.col_matmul(xv, ops.fsdp_gather(p["w_v"], 0))
-    g = ops.col_matmul(xg, ops.fsdp_gather(p["w_g"], 0))
+    r = ops.col_matmul(xr, p["w_r"], fsdp_dim=0)
+    k = ops.col_matmul(xk, p["w_k"], fsdp_dim=0)
+    v = ops.col_matmul(xv, p["w_v"], fsdp_dim=0)
+    g = ops.col_matmul(xg, p["w_g"], fsdp_dim=0)
     # data-dependent decay (the Finch headline feature)
-    wa = ops.tp_psum_grad(ops.fsdp_gather(p["wA"], 0))
-    low = jnp.tanh(xw @ wa)
+    low = jnp.tanh(ops.matmul_accumulate(xw, ops.tp_psum_grad(p["wA"])))
     dec_raw = p["w0"].astype(f32) + ops.col_matmul(
         low, p["wB"]).astype(f32)
     w = jnp.exp(-jnp.exp(dec_raw))                   # (0,1), per channel
@@ -155,10 +154,10 @@ def rwkv_block(p: dict, cfg: ModelConfig, x, *, state=None):
     prevc = _token_shift(xn2, last_cm)
     xck = _lerp(xn2, prevc, p["mu_ck"])
     xcr = _lerp(xn2, prevc, p["mu_cr"])
-    kk = ops.col_matmul(xck, ops.fsdp_gather(p["w_ck"], 0))
+    kk = ops.col_matmul(xck, p["w_ck"], fsdp_dim=0)
     kk = jnp.square(jax.nn.relu(kk))
     cv = ops.row_matmul(kk, p["w_cv"], fsdp_dim=1)
-    r_loc = ops.col_matmul(xcr, ops.fsdp_gather(p["w_cr"], 0))
+    r_loc = ops.col_matmul(xcr, p["w_cr"], fsdp_dim=0)
     r_full = ops.tp_allgather(r_loc, r_loc.ndim - 1)
     y = jax.nn.sigmoid(r_full) * cv
     out = x + y
@@ -281,11 +280,10 @@ def mamba_block(p: dict, cfg: ModelConfig, x, *, state=None):
     f32 = jnp.float32
 
     xn = rms_norm(x, p["ln"], cfg.norm_eps)
-    z = ops.col_matmul(xn, ops.fsdp_gather(p["w_in_z"], 0))
-    xin = ops.col_matmul(xn, ops.fsdp_gather(p["w_in_x"], 0))
-    w_bc = ops.tp_psum_grad(ops.fsdp_gather(p["w_bc"], 0))
-    bc = xn @ w_bc
-    dt_raw = ops.col_matmul(xn, ops.fsdp_gather(p["w_dt"], 0))
+    z = ops.col_matmul(xn, p["w_in_z"], fsdp_dim=0)
+    xin = ops.col_matmul(xn, p["w_in_x"], fsdp_dim=0)
+    bc = ops.matmul_accumulate(xn, ops.tp_psum_grad(p["w_bc"]))
+    dt_raw = ops.col_matmul(xn, p["w_dt"], fsdp_dim=0)
 
     conv_x_w = p["conv_x"]
     conv_bc_w = ops.tp_psum_grad(p["conv_bc"])

@@ -284,13 +284,14 @@ def test_tuner_selects_fused_large_default_small():
 def test_tune_trace_phase_profiles_pick_fused_for_tp_shapes():
     """A trace with a realistic TP matmul cell and a tiny one: the phase
     store must route the big cell to fused_ring and keep the small cell on
-    the default — the acceptance-criterion shape split."""
-    t = Trace([TraceEntry("allgather_matmul", 8, 4_194_304, "decode",
-                          "default", 10),
-               TraceEntry("allgather_matmul", 8, 256, "decode",
-                          "default", 10),
-               TraceEntry("matmul_reducescatter", 8, 8_388_608, "bwd",
-                          "default", 4)])
+    the default — the acceptance-criterion shape split.  (Geometry-less
+    cells: the canonical cost-model pricing still applies.)"""
+    t = Trace([TraceEntry.of("allgather_matmul", 8, 4_194_304, "decode",
+                             "default", 10),
+               TraceEntry.of("allgather_matmul", 8, 256, "decode",
+                             "default", 10),
+               TraceEntry.of("matmul_reducescatter", 8, 8_388_608, "bwd",
+                             "default", 4)])
     rep = tuner.tune_trace(t, backend=tuner.CostModelBackend(cm.V5E_ICI))
     dec = rep.phase_profiles["decode"]
     assert dec.lookup("allgather_matmul", 8, 4_194_304) == "fused_ring"
@@ -328,15 +329,36 @@ def test_lm_train_trace_contains_fused_ops_and_tuner_splits(rng):
         jax.vmap(grad_fn, axis_name="data")(params)
 
     trace = Trace.from_context(ctx)
-    assert any(op == "allgather_matmul" for op, *_ in trace.cells("fwd"))
-    assert any(op == "matmul_reducescatter"
-               for op, *_ in trace.cells("bwd"))
+    assert any(c.op == "allgather_matmul" for c in trace.cells("fwd"))
+    assert any(c.op == "matmul_reducescatter"
+               for c in trace.cells("bwd"))
+    # every fused cell must carry its callsite's true GEMM geometry
+    for c in trace.cells():
+        if c.op in ("allgather_matmul", "matmul_reducescatter",
+                    "matmul_accumulate"):
+            assert c.fused and c.mm_role, c
     # smoke-config payloads are tiny (fusion correctly loses there); replay
-    # the same op mix at production scale — d_model x512, the paper's
-    # "profiles are per (p, nbytes)" point — and the tuner must flip the
-    # fused collective-matmul cells to fused_ring
-    scaled = Trace([TraceEntry(e.op, e.axis_size, e.nbytes * 512, e.phase,
-                               e.impl, e.count) for e in trace.entries])
+    # the same op mix with every recorded GEMM grown to production dims
+    # (the paper's "profiles are per cell" point, now with true geometry:
+    # the overlap is priced from the cell's actual flops) — and the tuner
+    # must flip the fused collective-matmul cells of all THREE ring
+    # schedules to fused_ring
+    import dataclasses as _dc
+
+    def _production(c, k=2048, m=8192, n=8192):
+        if not c.fused:
+            return _dc.replace(c, nbytes=c.nbytes * 512)
+        kk = c.mm_k * -(-k // c.mm_k)
+        mm = c.mm_m * -(-m // c.mm_m)
+        nn = c.mm_n * -(-n // c.mm_n)
+        it = c.itemsize
+        nb = {"gather": (mm // c.p) * kk * it,
+              "scatter": mm * kk * it,
+              "contract": (kk // c.p) * nn * it}[c.mm_role]
+        return _dc.replace(c, mm_k=kk, mm_m=mm, mm_n=nn, nbytes=nb)
+
+    scaled = Trace([TraceEntry(_production(e.cell), e.phase, e.impl,
+                               e.count) for e in trace.entries])
     rep = tuner.tune_trace(scaled,
                            backend=tuner.CostModelBackend(cm.V5E_ICI))
     fused = [
@@ -348,6 +370,14 @@ def test_lm_train_trace_contains_fused_ops_and_tuner_splits(rng):
     ]
     assert any(op == "allgather_matmul" for _, op, _ in fused), fused
     assert any(op == "matmul_reducescatter" for _, op, _ in fused), fused
+    assert any(op == "matmul_accumulate" for _, op, _ in fused), fused
+    # the emitted profiles are geometry-keyed — the cells above must
+    # resolve through lookup_cell at dispatch
+    ph, store = next((ph, s) for ph, s in rep.phase_profiles.items()
+                     for p_ in s if p_.op == "allgather_matmul")
+    agmm_cells = [c for c, _cnt in Trace(scaled.entries).cells(ph).items()
+                  if c.op == "allgather_matmul"]
+    assert any(store.lookup_cell(c) == "fused_ring" for c in agmm_cells)
 
 
 # ---------------------------------------------------------------------------
@@ -356,7 +386,7 @@ def test_lm_train_trace_contains_fused_ops_and_tuner_splits(rng):
 
 
 def test_tune_trace_measured_backend_skips_foreign_axis_sizes():
-    t = Trace([TraceEntry("allreduce", 4, 1024, "fwd", "default", 3)])
+    t = Trace([TraceEntry.of("allreduce", 4, 1024, "fwd", "default", 3)])
     backend = tuner.MeasuredBackend()
     # this process sees 1 host device -> p=4 cells cannot be replayed
     assert backend.supported_axis_size == 1
@@ -382,7 +412,9 @@ def test_fast_path_records_and_selects_default(rng):
     x = jnp.ones((4, 8), jnp.float32)
     with api.tuned() as ctx:
         jax.vmap(lambda a: api.allreduce(a, "x"), axis_name="x")(x)
-    assert ctx.record == [("allreduce", 4, 32, "default", "fwd")]
+    assert [tuple(r) for r in ctx.record] == \
+        [("allreduce", 4, 32, "default", "fwd")]
+    assert ctx.record[0].cell.dtype == "float32"
 
 
 def test_fast_path_defers_to_profiles_and_env(monkeypatch):
@@ -393,8 +425,8 @@ def test_fast_path_defers_to_profiles_and_env(monkeypatch):
                                                 "allreduce_as_doubling")])])
     with api.tuned(profiles=store) as ctx:
         jax.vmap(lambda a: api.allreduce(a, "x"), axis_name="x")(x)
-    assert ctx.record[0][3] == "allreduce_as_doubling"
+    assert ctx.record[0].impl == "allreduce_as_doubling"
     monkeypatch.setenv("PGTUNE_MODULE", "allreduce:alg=allreduce_as_doubling")
     with api.tuned() as ctx2:
         jax.vmap(lambda a: api.allreduce(a, "x"), axis_name="x")(x)
-    assert ctx2.record[0][3] == "allreduce_as_doubling"
+    assert ctx2.record[0].impl == "allreduce_as_doubling"

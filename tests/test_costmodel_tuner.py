@@ -7,6 +7,7 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core import costmodel as cm
 from repro.core import tuner
+from repro.core.cell import OpCell
 from repro.core.collectives import REGISTRY
 
 
@@ -106,8 +107,9 @@ def test_tuner_profiles_pick_fastest():
     prof = rep.profiles.get("allreduce", 256)
     assert prof is not None
     for r in prof.ranges:
-        t_best = backend.latency("allreduce", r.impl, 256, r.lo)
-        t_def = backend.latency("allreduce", "default", 256, r.lo)
+        cell = OpCell("allreduce", 256, r.lo)
+        t_best = backend.latency(cell, r.impl)
+        t_def = backend.latency(cell, "default")
         assert t_best < t_def * 0.9
 
 
@@ -127,12 +129,12 @@ def test_tuner_survives_unmeasurable_default():
     class InfDefaultBackend:
         name = "stub"
 
-        def latency(self, op, impl, p, nbytes):
-            if impl == "default" and nbytes == 8:
+        def latency(self, cell, impl):
+            if impl == "default" and cell.nbytes == 8:
                 return math.inf
             return 1.0 if impl == "default" else 0.5
 
-        def nrep_for(self, op, impl, nbytes):
+        def nrep_for(self, cell, impl):
             return 1
 
     rep = tuner.tune(ops=["allreduce"], sizes=(8, 64), axis_size=16,

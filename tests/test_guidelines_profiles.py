@@ -232,8 +232,8 @@ def test_dispatch_profile_and_record():
     x = jnp.ones((8, 4, 2), jnp.float32)
     y, ctx = _run_ar(dict(profiles=store), x)
     assert np.allclose(np.asarray(y), 8.0)
-    assert ctx.record == [("allreduce", 8, 32, "allreduce_as_rsb_allgather",
-                           "fwd")]
+    assert [tuple(r) for r in ctx.record] == \
+        [("allreduce", 8, 32, "allreduce_as_rsb_allgather", "fwd")]
     footer = api.format_footer(ctx)
     assert "#@pgpmi" not in footer
     assert "#@pgmpi alg MPI_Allreduce 32 allreduce_as_rsb_allgather" in footer
@@ -244,7 +244,7 @@ def test_dispatch_force_module_syntax():
         "allreduce:alg=allreduce_as_reduce_bcast;bcast:alg=bcast_as_tree")
     x = jnp.ones((8, 4, 2), jnp.float32)
     y, ctx = _run_ar(dict(force=force), x)
-    assert ctx.record[-1][3] == "allreduce_as_reduce_bcast"
+    assert ctx.record[-1].impl == "allreduce_as_reduce_bcast"
 
 
 def test_dispatch_pow2_guard():
@@ -253,7 +253,7 @@ def test_dispatch_pow2_guard():
     x = jnp.ones((6, 4, 2), jnp.float32)      # p=6: not a power of two
     y, ctx = _run_ar(dict(force=force), x)
     assert np.allclose(np.asarray(y), 6.0)
-    assert ctx.record[-1][3] == "default"
+    assert ctx.record[-1].impl == "default"
 
 
 def test_dispatch_scratch_budget():
@@ -265,7 +265,7 @@ def test_dispatch_scratch_budget():
     x = jnp.ones((8, 64, 4), jnp.float32)     # 1 KiB payload, extra = 8 KiB
     with api.tuned(profiles=store, scratch_budget_bytes=100) as ctx:
         jax.vmap(lambda a: api.allgather(a, "x"), axis_name="x")(x)
-    assert ctx.record[-1][3] == "default"
+    assert ctx.record[-1].impl == "default"
     with api.tuned(profiles=store, scratch_budget_bytes=10**6) as ctx2:
         jax.vmap(lambda a: api.allgather(a, "x"), axis_name="x")(x)
-    assert ctx2.record[-1][3] == "allgather_as_alltoall"
+    assert ctx2.record[-1].impl == "allgather_as_alltoall"

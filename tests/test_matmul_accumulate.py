@@ -1,0 +1,252 @@
+"""The contraction-dim collective matmul: ``matmul_accumulate`` end-to-end.
+
+Ring kernel vs the unfused composition (fwd + bwd, incl. non-divisible K
+and the padded-shard fallback), the rewired ``col_matmul(fsdp_dim=0)``
+K-gather sites vs the legacy ``fsdp_gather(w, 0)`` composition, and the
+tuner flipping the accumulate ring on modeled must-win shapes.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import api, costmodel as cm, tuner
+from repro.core import collectives as C
+from repro.core.cell import OpCell
+from repro.kernels.collective_matmul import ring_matmul_accumulate
+from repro.dist import ops
+
+PS = (4, 8)
+
+
+def _cot(y):
+    return jnp.cos(jnp.arange(y.size, dtype=jnp.float32)).reshape(y.shape)
+
+
+# ---------------------------------------------------------------------------
+# the ring kernel vs the dense oracle (vmap semantic path)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("p", PS)
+@pytest.mark.parametrize("dtype,atol", [(np.float32, 1e-4),
+                                        (np.float16, 2e-2)])
+@pytest.mark.parametrize("t,k_loc,m", [(5, 3, 6), (1, 8, 2), (7, 1, 4)])
+def test_ring_matmul_accumulate_matches_unfused(rng, p, dtype, atol,
+                                                t, k_loc, m):
+    w = jnp.asarray(rng.normal(size=(p, k_loc, m)).astype(dtype))
+    x = jnp.asarray(np.broadcast_to(
+        rng.normal(size=(t, p * k_loc)).astype(dtype), (p, t, p * k_loc))
+        .copy())
+    got = jax.vmap(lambda a, b: ring_matmul_accumulate(a, b, "x"),
+                   axis_name="x")(x, w)
+    full = np.asarray(w, np.float32).reshape(p * k_loc, m)
+    want = np.asarray(x, np.float32)[0] @ full
+    for r in range(p):
+        np.testing.assert_allclose(np.asarray(got, np.float32)[r], want,
+                                   atol=atol)
+
+
+def test_ring_matmul_accumulate_returns_gathered(rng):
+    p, t, k_loc, m = 4, 3, 2, 5
+    w = jnp.asarray(rng.normal(size=(p, k_loc, m)).astype(np.float32))
+    x = jnp.asarray(np.broadcast_to(
+        rng.normal(size=(t, p * k_loc)).astype(np.float32),
+        (p, t, p * k_loc)).copy())
+    _, gath = jax.vmap(
+        lambda a, b: ring_matmul_accumulate(a, b, "x", return_gathered=True),
+        axis_name="x")(x, w)
+    np.testing.assert_allclose(np.asarray(gath)[0],
+                               np.asarray(w).reshape(p * k_loc, m),
+                               atol=1e-6)
+
+
+def test_registry_impls_semantics(rng):
+    """Every registered impl of matmul_accumulate against the dense
+    oracle (the streamed operand is the FIRST argument of the impl fn)."""
+    p, t, k_loc, m = 4, 5, 2, 3
+    w = rng.normal(size=(p, k_loc, m)).astype(np.float32)
+    x = jnp.asarray(rng.normal(size=(t, p * k_loc)).astype(np.float32))
+    want = np.asarray(x) @ w.reshape(p * k_loc, m)
+    for name in C.impl_names("matmul_accumulate"):
+        fn = C.REGISTRY["matmul_accumulate"][name].fn
+        got = jax.vmap(lambda wb, fn=fn: fn(wb, "x", x=x),
+                       axis_name="x")(jnp.asarray(w))
+        for r in range(p):
+            np.testing.assert_allclose(np.asarray(got)[r], want, atol=1e-4,
+                                       err_msg=name)
+
+
+# ---------------------------------------------------------------------------
+# dist op: values + grads vs the unfused fsdp_gather composition
+# ---------------------------------------------------------------------------
+
+
+def _acc_grads(fun, x, w, axis="data"):
+    def loss(a, b):
+        y = fun(a, b)
+        return jnp.sum(y * _cot(y))
+    return jax.vmap(jax.grad(loss, argnums=(0, 1)), axis_name=axis)(x, w)
+
+
+@pytest.mark.parametrize("impl", ["default", "fused_ring"])
+@pytest.mark.parametrize("p", PS)
+def test_matmul_accumulate_grads_match_unfused(rng, p, impl):
+    t, k_loc, m = 6, 2, 5
+    x = jnp.asarray(np.broadcast_to(
+        rng.normal(size=(t, p * k_loc)).astype(np.float32),
+        (p, t, p * k_loc)).copy())
+    w = jnp.asarray(rng.normal(size=(p, k_loc, m)).astype(np.float32))
+
+    def fused(a, b):
+        return ops.matmul_accumulate(a, b, "data")
+
+    def unfused(a, b):
+        return jnp.matmul(a, ops.fsdp_gather(b, 0, "data"))
+
+    with api.tuned(force={"matmul_accumulate": impl,
+                          "matmul_reducescatter": impl}) as ctx:
+        got_y = jax.vmap(fused, axis_name="data")(x, w)
+        gx, gw = _acc_grads(fused, x, w)
+    ref_y = jax.vmap(unfused, axis_name="data")(x, w)
+    rx, rw = _acc_grads(unfused, x, w)
+    np.testing.assert_allclose(np.asarray(got_y), np.asarray(ref_y),
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(gx), np.asarray(rx), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(gw), np.asarray(rw), atol=1e-5)
+    # fwd records the contract-role cell; bwd pairs matmul_reducescatter
+    assert any(r.op == "matmul_accumulate" and r.phase == "fwd"
+               and r.cell.mm_role == "contract" for r in ctx.record)
+    assert any(r.op == "matmul_reducescatter" and r.phase == "bwd"
+               for r in ctx.record)
+
+
+def test_matmul_accumulate_default_is_bit_exact(rng):
+    """With the default dispatch the rewired K-gather site is literally the
+    unfused composition — outputs must match BIT-FOR-BIT."""
+    p, t, k_loc, m = 4, 5, 3, 6
+    x = jnp.asarray(np.broadcast_to(
+        rng.normal(size=(t, p * k_loc)).astype(np.float32),
+        (p, t, p * k_loc)).copy())
+    w = jnp.asarray(rng.normal(size=(p, k_loc, m)).astype(np.float32))
+    got = jax.vmap(lambda a, b: ops.matmul_accumulate(a, b, "data"),
+                   axis_name="data")(x, w)
+    ref = jax.vmap(lambda a, b: jnp.matmul(a, ops.fsdp_gather(b, 0, "data")),
+                   axis_name="data")(x, w)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+def test_matmul_accumulate_nondivisible_k_falls_back(rng):
+    """K=10 on a p=4 axis: shards carry ceil(K/p)=3 padded rows; the op must
+    fall back to the (tuned) unfused gather + slice and still match the
+    dense oracle in values and grads."""
+    p, t, k, k_loc, m = 4, 5, 10, 3, 4
+    w_full = rng.normal(size=(p * k_loc, m)).astype(np.float32)
+    w_full[k:] = 0.0                                    # pad rows
+    w = jnp.asarray(w_full.reshape(p, k_loc, m))
+    x = jnp.asarray(np.broadcast_to(
+        rng.normal(size=(t, k)).astype(np.float32), (p, t, k)).copy())
+
+    with api.tuned() as ctx:
+        got = jax.vmap(lambda a, b: ops.matmul_accumulate(a, b, "data"),
+                       axis_name="data")(x, w)
+        gx, gw = _acc_grads(
+            lambda a, b: ops.matmul_accumulate(a, b, "data"), x, w)
+    want = np.asarray(x)[0] @ w_full[:k]
+    np.testing.assert_allclose(np.asarray(got)[0], want, atol=1e-5)
+    # the fallback dispatches a plain (tunable) allgather, not the fused op
+    assert any(r.op == "allgather" for r in ctx.record)
+    assert not any(r.op == "matmul_accumulate" for r in ctx.record)
+    # grads: dense reference through the same padded-slice composition
+    rx, rw = _acc_grads(
+        lambda a, b: jnp.matmul(a, ops.fsdp_gather(b, 0, "data")[:k]), x, w)
+    np.testing.assert_allclose(np.asarray(gx), np.asarray(rx), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(gw), np.asarray(rw), atol=1e-5)
+
+
+def test_matmul_accumulate_no_axis_is_local_matmul(rng):
+    x = jnp.asarray(rng.normal(size=(3, 8)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(8, 2)).astype(np.float32))
+    np.testing.assert_array_equal(
+        np.asarray(ops.matmul_accumulate(x, w, "data")),
+        np.asarray(jnp.matmul(x, w)))
+
+
+# ---------------------------------------------------------------------------
+# the rewired col_matmul(fsdp_dim=0) K-gather sites
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("impl", ["default", "fused_ring"])
+def test_col_matmul_fsdp_dim0_matches_legacy(rng, impl):
+    """col_matmul with the fused K-dim weight gather must equal the legacy
+    fsdp_gather(w, 0) + col_matmul composition under BOTH axes (data FSDP
+    inside model TP), values and grads."""
+    pd, pm, t, k_loc, m_loc = 2, 2, 4, 3, 5
+    k = pd * k_loc
+    x = jnp.asarray(np.broadcast_to(
+        rng.normal(size=(t, k)).astype(np.float32),
+        (pm, pd, t, k)).copy())
+    w = jnp.asarray(rng.normal(size=(pm, pd, k_loc, m_loc)).astype(
+        np.float32))
+
+    def fused(a, b):
+        return ops.col_matmul(a, b, "model", fsdp_dim=0)
+
+    def legacy(a, b):
+        return ops.col_matmul(a, ops.fsdp_gather(b, 0, "data"), "model")
+
+    def run(fun):
+        def inner(a, b):
+            def loss(aa, bb):
+                y = fun(aa, bb)
+                return jnp.sum(y * _cot(y))
+            y = fun(a, b)
+            g = jax.grad(loss, argnums=(0, 1))(a, b)
+            return y, g
+        return jax.vmap(jax.vmap(inner, axis_name="data"),
+                        axis_name="model")(x, w)
+
+    with api.tuned(force={"matmul_accumulate": impl,
+                          "matmul_reducescatter": impl}) as ctx:
+        got_y, (gx, gw) = run(fused)
+    ref_y, (rx, rw) = run(legacy)
+    np.testing.assert_allclose(np.asarray(got_y), np.asarray(ref_y),
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(gx), np.asarray(rx), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(gw), np.asarray(rw), atol=1e-5)
+    assert any(r.op == "matmul_accumulate" for r in ctx.record)
+
+
+# ---------------------------------------------------------------------------
+# tuner: must-win accumulate shapes (the EXT guideline per cell)
+# ---------------------------------------------------------------------------
+
+
+def test_tuner_selects_fused_accumulate_large_default_small():
+    rep = tuner.tune(ops=["matmul_accumulate"],
+                     sizes=(64, 1024, 1_048_576, 16_777_216),
+                     axis_size=8, backend=tuner.CostModelBackend(cm.V5E_ICI))
+    prof = rep.profiles
+    assert prof.lookup("matmul_accumulate", 8, 16_777_216) == "fused_ring"
+    assert prof.lookup("matmul_accumulate", 8, 64) is None   # default kept
+
+
+def test_latency_cell_prices_true_flops_for_accumulate():
+    """A modeled must-win accumulate cell: compute comparable to comm makes
+    the ring overlap win; shrinking the GEMM to a sliver must flip the
+    decision back to default — geometry, not just payload, decides."""
+    big = OpCell("matmul_accumulate", 8, 4_194_304, "float32",
+                 mm_k=8_388_608 // 1024, mm_m=8192, mm_n=1024,
+                 mm_role="contract")
+    t_def = cm.latency_cell(big, "default", cm.V5E_ICI)
+    t_fus = cm.latency_cell(big, "fused_ring", cm.V5E_ICI)
+    assert t_fus < t_def * 0.9
+    sliver = OpCell("matmul_accumulate", 8, 4_194_304, "float32",
+                    mm_k=8_388_608 // 1024, mm_m=1, mm_n=1024,
+                    mm_role="contract")
+    # with a sliver GEMM there is nothing to overlap: fusion must not clear
+    # the 10% violation bar the tuner applies
+    assert not (cm.latency_cell(sliver, "fused_ring", cm.V5E_ICI)
+                < cm.latency_cell(sliver, "default", cm.V5E_ICI) * 0.9)

@@ -151,6 +151,47 @@ vf, _ = run(lambda a: ops.allgather_matmul(a, w, "model"), x,
 want = np.asarray(x) @ np.asarray(w)
 out["oracle_agmm"] = float(np.abs(
     vf.reshape(p, p * n, m) - want[None]).max())
+
+# matmul_accumulate (contraction-dim ring) over a data axis: w K-sharded,
+# x shard-local; compare fused vs unfused values + weight grads, and the
+# REWIRED col_matmul(fsdp_dim=0) K-gather site vs the legacy composition
+# bit-for-bit under default dispatch (the acceptance criterion).
+mesh_d = Mesh(np.array(jax.devices()), ("data",))
+kloc, T, M = 4, 6, 5
+K = p * kloc
+xs = jnp.asarray(rng.normal(size=(T, K)).astype(np.float32))
+wacc = jnp.asarray(rng.normal(size=(K, M)).astype(np.float32))
+
+def run_acc(f, force):
+    def body(wb):
+        val = f(wb)
+        g = jax.grad(lambda b: jnp.sum(f(b) * cot(f(b))))(wb)
+        return val, g
+    sm = shard_map(body, mesh=mesh_d, in_specs=P("data"),
+                   out_specs=(P(), P("data")), check_vma=False)
+    with api.tuned(force=force):
+        val, g = jax.jit(sm)(wacc)
+    return np.asarray(val), np.asarray(g)
+
+acc_f = lambda wb: ops.matmul_accumulate(xs, wb, "data")
+acc_u = lambda wb: jnp.matmul(xs, ops.fsdp_gather(wb, 0, "data"))
+vd, gd = run_acc(acc_u, {})
+vf_, gf_ = run_acc(acc_f, {"matmul_accumulate": "fused_ring",
+                           "matmul_reducescatter": "fused_ring"})
+v0, g0 = run_acc(acc_f, {})          # default dispatch = unfused comp
+out["acc"] = {"dv": float(np.abs(vd - vf_).max()),
+              "dg": float(np.abs(gd - gf_).max())}
+out["acc_default_bitexact"] = bool((vd == v0).all() and (gd == g0).all())
+out["oracle_acc"] = float(np.abs(vd - np.asarray(xs) @ np.asarray(wacc)
+                                 ).max())
+
+col_f = lambda wb: ops.col_matmul(xs, wb, "model", fsdp_dim=0)
+col_u = lambda wb: ops.col_matmul(xs, ops.fsdp_gather(wb, 0, "data"),
+                                  "model")
+vcf, gcf = run_acc(col_f, {})
+vcu, gcu = run_acc(col_u, {})
+out["col_rewired_bitexact"] = bool((vcf == vcu).all()
+                                   and (gcf == gcu).all())
 print(json.dumps(out))
 """
 
@@ -162,8 +203,8 @@ import jax
 from repro.core import tuner
 from repro.core.trace import Trace, TraceEntry
 
-t = Trace([TraceEntry("allreduce", 4, 1024, "decode", "default", 5),
-           TraceEntry("allreduce", 8, 1024, "decode", "default", 5)])
+t = Trace([TraceEntry.of("allreduce", 4, 1024, "decode", "default", 5),
+           TraceEntry.of("allreduce", 8, 1024, "decode", "default", 5)])
 backend = tuner.MeasuredBackend(K=2, max_nrep=3)
 rep = tuner.tune_trace(t, backend=backend)
 print(json.dumps({
@@ -177,15 +218,21 @@ print(json.dumps({
 
 @pytest.mark.slow
 def test_fused_collective_matmul_spmd_equivalence_4dev():
-    """Fused-ring allgather-matmul / matmul-reducescatter vs the unfused
-    composition under REAL shard_map on 4 host devices — values and grads
-    (the acceptance bit-exactness criterion, at SPMD lowering level)."""
+    """All THREE fused rings (allgather-matmul / matmul-reducescatter /
+    matmul-accumulate) vs the unfused composition under REAL shard_map on
+    4 host devices — values and grads; the rewired col_matmul(fsdp_dim=0)
+    K-gather site must match the legacy fsdp_gather composition
+    BIT-FOR-BIT under default dispatch (acceptance criterion)."""
     r = _run(FUSED_MM_SCRIPT)
     assert r.returncode == 0, r.stdout + r.stderr[-2000:]
     out = json.loads(r.stdout.strip().splitlines()[-1])
     assert out["agmm"]["dv"] < 1e-4 and out["agmm"]["dg"] < 1e-4, out
     assert out["mmrs"]["dv"] < 1e-4 and out["mmrs"]["dg"] < 1e-4, out
     assert out["oracle_agmm"] < 1e-4, out
+    assert out["acc"]["dv"] < 1e-4 and out["acc"]["dg"] < 1e-4, out
+    assert out["oracle_acc"] < 1e-4, out
+    assert out["acc_default_bitexact"] is True, out
+    assert out["col_rewired_bitexact"] is True, out
 
 
 @pytest.mark.slow

@@ -16,6 +16,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core import api, tuner
+from repro.core.cell import OpCell
 from repro.core.profiles import (Profile, ProfileStore, Range, load_stores,
                                  resolve_stores)
 from repro.core.trace import Trace, TraceEntry
@@ -30,8 +31,8 @@ P = 4
 
 
 def _mk(op="allreduce", p=8, nbytes=1024, phase="fwd", impl="default",
-        count=1):
-    return TraceEntry(op, p, nbytes, phase, impl, count)
+        count=1, **geom):
+    return TraceEntry.of(op, p, nbytes, phase, impl, count, **geom)
 
 
 def test_trace_aggregates_duplicate_cells():
@@ -62,9 +63,11 @@ def test_trace_histogram_cells_filter():
     t = Trace([_mk(impl="default", count=2),
                _mk(impl="allreduce_as_doubling", count=3),
                _mk(phase="bwd", op="reducescatter", count=5)])
-    # histogram sums over impls (the tuner re-decides the impl)
-    assert t.histogram()[("allreduce", 8, 1024, "fwd")] == 5
-    assert t.cells(phase="bwd") == {("reducescatter", 8, 1024): 5}
+    # histogram keys on the full OpCell and sums over impls (the tuner
+    # re-decides the impl)
+    ar = OpCell("allreduce", 8, 1024)
+    assert t.histogram()[(ar, "fwd")] == 5
+    assert t.cells(phase="bwd") == {OpCell("reducescatter", 8, 1024): 5}
     assert t.filter(phase="fwd").ops() == ["allreduce"]
     assert t.phases() == ["bwd", "fwd"]
 
@@ -75,7 +78,7 @@ def test_trace_from_record_matches_api_tuples():
         with api.phase("decode"):
             jax.vmap(lambda a: api.allreduce(a, "x"), axis_name="x")(x)
     t = Trace.from_context(ctx)
-    assert t.cells() == {("allreduce", P, 32): 1}
+    assert t.cells() == {OpCell("allreduce", P, 32): 1}
     assert t.phases() == ["decode"]
 
 
@@ -85,8 +88,8 @@ def test_trace_from_record_matches_api_tuples():
        st.sampled_from(["fwd", "bwd", "prefill", "decode"]),
        st.sampled_from(["allreduce", "allgather", "scatter"]))
 def test_trace_jsonl_roundtrip_property(sizes, phase, op):
-    entries = [TraceEntry(op, 1 << (i % 10), nb, phase, "default",
-                          (i % 5) + 1)
+    entries = [TraceEntry.of(op, 1 << (i % 10), nb, phase, "default",
+                             (i % 5) + 1)
                for i, nb in enumerate(sizes)]
     t = Trace(entries)
     back = Trace.from_jsonl(t.to_jsonl())
@@ -126,9 +129,11 @@ def test_phase_profiles_beat_base_profiles_for_matching_phase():
         with api.phase("decode"):
             jax.vmap(lambda a: api.allreduce(a, "x"), axis_name="x")(x)
         jax.vmap(lambda a: api.allreduce(a, "x"), axis_name="x")(x)
-    assert ctx.record[0][3:] == ("allreduce_as_doubling", "decode")
+    assert (ctx.record[0].impl, ctx.record[0].phase) == \
+        ("allreduce_as_doubling", "decode")
     # outside the tagged phase the base store still applies
-    assert ctx.record[1][3:] == ("allreduce_as_reduce_bcast", "fwd")
+    assert (ctx.record[1].impl, ctx.record[1].phase) == \
+        ("allreduce_as_reduce_bcast", "fwd")
 
 
 def test_tuned_shared_record_sink():
@@ -164,10 +169,10 @@ class _StubBackend:
         self.table = table
         self.fallback = fallback
 
-    def latency(self, op, impl, p, nbytes):
-        return self.table.get((op, impl), self.fallback)
+    def latency(self, cell, impl):
+        return self.table.get((cell.op, impl), self.fallback)
 
-    def nrep_for(self, op, impl, nbytes):
+    def nrep_for(self, cell, impl):
         return 1
 
 
@@ -273,8 +278,8 @@ def test_tune_trace_lm_step_phase_split_end_to_end():
     ctx = _lm_step_ctx()
     trace = Trace.from_context(ctx)
     assert {"fwd", "bwd"} <= set(trace.phases())
-    assert any(op == "allgather" for op, _, _ in trace.cells("fwd"))
-    assert any(op == "reducescatter" for op, _, _ in trace.cells("bwd"))
+    assert any(c.op == "allgather" for c in trace.cells("fwd"))
+    assert any(c.op == "reducescatter" for c in trace.cells("bwd"))
 
     # 2. tune the recorded mix; stub latencies make the winners
     #    deterministic: fwd allgathers -> ring, bwd reduce-scatters -> the
@@ -286,12 +291,13 @@ def test_tune_trace_lm_step_phase_split_end_to_end():
                            fallback=50.0)
     rep = tuner.tune_trace(trace, backend=backend)
     fwd, bwd = rep.phase_profiles["fwd"], rep.phase_profiles["bwd"]
-    ag_cells = [c for c in trace.cells("fwd") if c[0] == "allgather"]
-    rs_cells = [c for c in trace.cells("bwd") if c[0] == "reducescatter"]
-    for _, p, nb in ag_cells:
-        assert fwd.lookup("allgather", p, nb) == "allgather_as_ring"
-    for _, p, nb in rs_cells:
-        assert bwd.lookup("reducescatter", p, nb) == "rsb_as_reduce_scatter"
+    ag_cells = [c for c in trace.cells("fwd") if c.op == "allgather"]
+    rs_cells = [c for c in trace.cells("bwd") if c.op == "reducescatter"]
+    for c in ag_cells:
+        assert fwd.lookup("allgather", c.p, c.nbytes) == "allgather_as_ring"
+    for c in rs_cells:
+        assert bwd.lookup("reducescatter", c.p, c.nbytes) == \
+            "rsb_as_reduce_scatter"
 
     # 3. re-run the SAME model step under the phase-split stores: api must
     #    honor the phase tag at dispatch
@@ -359,5 +365,6 @@ def test_serve_builder_record_only_inherits_ambient_context(monkeypatch):
 
     with api.tuned(force={"allreduce": "allreduce_as_doubling"}) as outer:
         jax.vmap(step, axis_name="x")(x)
-    assert sink == [("allreduce", P, 32, "allreduce_as_doubling", "decode")]
+    assert [tuple(r) for r in sink] == \
+        [("allreduce", P, 32, "allreduce_as_doubling", "decode")]
     assert outer.record == []          # sink swapped, tuning inherited
