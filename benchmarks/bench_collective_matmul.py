@@ -6,9 +6,17 @@ For a grid of (op, p, nbytes) cells, price the unfused composition and the
 the same grid and verify its selections agree: every cell where the overlap
 model says fusion wins by at least ``MIN_WIN`` must select ``fused_ring``,
 and at least one small cell must keep the default (fusion's per-step
-overhead must not be modeled away).  Emits ``BENCH_collective_matmul.json``
-for the CI artifact; exits non-zero (via ``run()`` raising) when the tuner
-never selects the fused impl on a must-win shape.
+overhead must not be modeled away).
+
+The 2-D section does the same over data x model MESHES with geometry
+cells: per (d, q, GEMM) cell it prices THREE alternatives — the unfused
+composition, the 1-D status quo (data-gather fused + monolithic model
+allreduce — what ``row_matmul(fsdp_dim=1)`` emitted before the 2-D op)
+and the nested ``fused_ring2d`` — replays the cells through
+``tuner.tune_trace`` and verifies the per-cell selection matches every
+modeled must-win.  Emits ``BENCH_collective_matmul.json`` for the CI
+artifact; exits non-zero (via ``run()`` raising) when the tuner misses a
+must-win shape in either section.
 """
 from __future__ import annotations
 
@@ -18,11 +26,21 @@ import pathlib
 from benchmarks.common import emit
 from repro.core import costmodel as cm
 from repro.core import tuner
+from repro.core.cell import OpCell
+from repro.core.trace import Trace, TraceEntry
 
 OPS = ("allgather_matmul", "matmul_reducescatter", "matmul_accumulate")
 AXIS_SIZES = (4, 8, 16, 64)
 SIZES = (64, 1024, 32768, 262_144, 1_048_576, 4_194_304, 16_777_216)
 MIN_WIN = 0.10
+#: 2-D section: (data, model) meshes x per-callsite GEMMs (T, K, M) — the
+#: row_matmul(fsdp_dim=1) w_out shapes of serving-sized LMs, plus slivers
+#: that must keep the default
+MESHES_2D = ((2, 2), (4, 4), (8, 8), (16, 8))
+GEMMS_2D = ((8192, 4096, 14336),      # mlp w_out, prefill batch
+            (1024, 4096, 4096),       # attention w_o
+            (256, 14336, 4096),       # mlp w_out, small decode batch
+            (8, 512, 256))            # sliver: overhead must win
 OUT = pathlib.Path(__file__).resolve().parents[1] / "results" / \
     "BENCH_collective_matmul.json"
 
@@ -45,6 +63,64 @@ def sweep_cells(topo=cm.V5E_ICI):
     return cells
 
 
+def _cell_2d(d: int, q: int, t: int, k: int, m: int) -> OpCell:
+    """The dispatch cell row_matmul(fsdp_dim=1) records on a (d, q) mesh
+    for the logical GEMM [t, k] @ [k, m]: per-rank dims, payload = the
+    streamed weight column block [k/q, m/d]."""
+    k_loc, m_loc = max(1, k // q), max(1, m // d)
+    return OpCell("matmul_reducescatter_2d", d, k_loc * m_loc * 4,
+                  "float32", mm_k=k_loc, mm_m=t, mm_n=d * m_loc,
+                  mm_role="2d", p2=q)
+
+
+def sweep_cells_2d(topo=cm.V5E_ICI):
+    """Three-way modeled comparison per 2-D cell: unfused vs the 1-D
+    status quo (fsdp_matmul fused + monolithic model-axis allreduce) vs
+    the nested 2-D schedule, plus the trace-tuner's per-cell pick."""
+    rows = []
+    entries = []
+    for d, q in MESHES_2D:
+        for t, k, m in GEMMS_2D:
+            cell = _cell_2d(d, q, t, k, m)
+            entries.append(TraceEntry(cell, "fwd", "default", 1))
+    rep = tuner.tune_trace(Trace(entries),
+                           backend=tuner.CostModelBackend(topo),
+                           min_win=MIN_WIN)
+    store = rep.store("fwd")
+    for d, q in MESHES_2D:
+        for t, k, m in GEMMS_2D:
+            cell = _cell_2d(d, q, t, k, m)
+            t_unf = cm.latency_cell(cell, "default", topo)
+            t_2d = cm.latency_cell(cell, "fused_ring2d", topo)
+            # 1-D status quo: the data-axis weight gather fused
+            # (allgather_matmul with the weight as the gathered operand,
+            # fsdp_matmul's formulation) + an unfused model allreduce of
+            # the [t, m] partial products
+            agmm = OpCell("allgather_matmul", d, cell.nbytes, "float32",
+                          mm_k=cell.mm_k, mm_m=cell.mm_n, mm_n=t,
+                          mm_role="gather")
+            t_1d = (cm.latency_cell(agmm, "fused_ring", topo)
+                    + cm.latency("allreduce", "default", q, t * m * 4,
+                                 topo))
+            # every cell here was IN the trace, so the tuner's per-cell
+            # verdict is its EXACT geometry profile (the nearest-geometry
+            # fallback is for unseen shapes and would leak big-cell wins
+            # onto slivers)
+            prof = store.get("matmul_reducescatter_2d", d,
+                             cell.geom()) if store else None
+            pick = (prof.lookup(cell.nbytes) if prof else None) or "default"
+            best = min(("default", t_unf), ("fused_1d", t_1d),
+                       ("fused_ring2d", t_2d), key=lambda kv: kv[1])[0]
+            rows.append({"d": d, "q": q, "gemm": [t, k, m],
+                         "nbytes": cell.nbytes,
+                         "t_unfused_s": t_unf, "t_fused1d_s": t_1d,
+                         "t_fused2d_s": t_2d,
+                         "model_win_vs_unfused": t_unf / t_2d,
+                         "model_win_vs_1d": t_1d / t_2d,
+                         "modeled_best": best, "tuner_pick": pick})
+    return rows
+
+
 def run():
     cells = sweep_cells()
     must_win = [c for c in cells if c["t_fused_s"]
@@ -54,10 +130,20 @@ def run():
     n_default_small = sum(1 for c in cells
                           if c["nbytes"] <= 1024
                           and c["tuner_pick"] == "default")
+    cells_2d = sweep_cells_2d()
+    must_win_2d = [c for c in cells_2d
+                   if c["t_fused2d_s"] < min(c["t_unfused_s"],
+                                             c["t_fused1d_s"])
+                   * (1.0 - MIN_WIN)]
+    missed_2d = [c for c in must_win_2d
+                 if c["tuner_pick"] != "fused_ring2d"]
+    n_default_2d = sum(1 for c in cells_2d if c["tuner_pick"] == "default")
     OUT.parent.mkdir(parents=True, exist_ok=True)
     OUT.write_text(json.dumps({
         "min_win": MIN_WIN, "cells": cells,
         "must_win_cells": len(must_win), "missed": missed,
+        "cells_2d": cells_2d, "must_win_cells_2d": len(must_win_2d),
+        "missed_2d": missed_2d,
     }, indent=1))
     for op in OPS:
         best = max((c["model_win"] for c in cells if c["op"] == op),
@@ -66,6 +152,13 @@ def run():
              f"fused_selected={sum(1 for c in cells if c['op'] == op and c['tuner_pick'] == 'fused_ring')}"
              f"/{sum(1 for c in cells if c['op'] == op)}"
              f" best_model_win=x{best:.2f}")
+    n2 = len(cells_2d)
+    n2_fused = sum(1 for c in cells_2d if c["tuner_pick"] == "fused_ring2d")
+    best_2d = max((c["model_win_vs_unfused"] for c in cells_2d),
+                  default=0.0)
+    emit("collective_matmul/matmul_reducescatter_2d", 0.0,
+         f"fused_selected={n2_fused}/{n2} best_model_win=x{best_2d:.2f} "
+         f"must_win_vs_both={len(must_win_2d)}")
     if missed:
         raise AssertionError(
             f"tuner missed {len(missed)} must-win fused cells, e.g. "
@@ -76,8 +169,22 @@ def run():
     if n_default_small == 0:
         raise AssertionError("fused_ring selected even on tiny messages — "
                              "per-step overhead lost from the model")
+    if missed_2d:
+        raise AssertionError(
+            f"tuner missed {len(missed_2d)} must-win 2-D fused cells "
+            f"(vs BOTH the unfused and 1-D compositions), e.g. "
+            f"{missed_2d[0]}")
+    if not must_win_2d:
+        raise AssertionError("nested-overlap model never beats both the "
+                             "unfused and 1-D compositions — 2-D cost "
+                             "model regression")
+    if n_default_2d == 0:
+        raise AssertionError("fused_ring2d selected even on sliver GEMMs — "
+                             "the per-step overhead on both axes is lost "
+                             "from the model")
     emit("collective_matmul/consistency", 0.0,
-         f"must_win={len(must_win)} missed=0 json={OUT.name}")
+         f"must_win={len(must_win)} missed=0 must_win_2d={len(must_win_2d)} "
+         f"missed_2d=0 json={OUT.name}")
 
 
 def main():

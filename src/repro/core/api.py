@@ -183,6 +183,20 @@ def _make_cell(op: str, payload, axis: str, kw) -> OpCell:
     role = OP_MM_ROLE.get(op)
     if role is None:
         return OpCell(op, p, nbytes, str(payload.dtype))
+    if role == "2d":
+        # two-axis op: p = outer stream axis, p2 = inner reduce-scatter
+        # axis; recorded dims are the PER-RANK GEMM (see core/cell.py)
+        p2 = axis_size(kw["rs_axis"])
+        if kw.get("xpose"):  # payload g [T/p, M] streamed+contracted
+            mm_k, mm_m = p * payload.shape[0], payload.shape[-1]
+            mm_n = kw["x"].shape[-1]
+            return OpCell(op, p, nbytes, str(payload.dtype),
+                          mm_k, mm_m, mm_n, "2dT", p2)
+        # payload w [K, M/p] column block streamed over the outer axis
+        mm_k, mm_m = payload.shape[0], kw["x"].shape[0]
+        mm_n = p * payload.shape[-1]
+        return OpCell(op, p, nbytes, str(payload.dtype),
+                      mm_k, mm_m, mm_n, "2d", p2)
     if role == "gather":     # payload x [n, K] gathered over rows, w [K, M]
         mm_k, mm_m = payload.shape[-1], p * payload.shape[0]
         mm_n = kw["w"].shape[-1]
@@ -332,6 +346,45 @@ def matmul_accumulate(x, w, axis: str, *, impl: str | None = None,
     """
     return _dispatch("matmul_accumulate", w, axis, impl, x=x,
                      return_gathered=return_gathered)
+
+
+def matmul_reducescatter_2d(x, w, rs_axis: str, ag_axis: str, *,
+                            impl: str | None = None,
+                            return_gathered: bool = False):
+    """``reduce_scatter(x @ all_gather(w, cols over ag_axis), rows over
+    rs_axis)`` — the weight-stationary 2-D collective matmul.
+
+    ``w`` per-shard ``[K, M/d]`` (the data-axis FSDP column block of a
+    row-parallel weight; its payload is the dispatch key — those are the
+    bytes the OUTER ring streams), ``x`` ``[T, K]`` shard-local ->
+    ``[T/q, M]`` summed over ``rs_axis``.  Fuses BOTH the data-axis weight
+    all-gather and the model-axis reduce-scatter around one matmul;
+    fused-vs-unfused is a dispatcher decision per 2-D cell
+    (``p`` = outer/gather axis, ``p2`` = inner/scatter axis).
+    ``return_gathered=True`` additionally returns the assembled full
+    weight ``[K, M]`` (the outer ring materializes it for free; the paired
+    VJP reuses it for dx).
+    """
+    return _dispatch("matmul_reducescatter_2d", w, ag_axis, impl, x=x,
+                     rs_axis=rs_axis, return_gathered=return_gathered)
+
+
+def matmul_reducescatter_2d_t(g, x, rs_axis: str, ag_axis: str, *,
+                              impl: str | None = None):
+    """``reduce_scatter(all_gather(g, rows over ag_axis)ᵀ @ x, rows over
+    rs_axis)`` — the TRANSPOSE 2-D schedule (the dw of the paired VJP).
+
+    ``g`` per-shard ``[T/q, M]`` (the cotangent's gather-axis row block —
+    the dispatch payload; its gathered dim is CONTRACTED away), ``x``
+    ``[T, K]`` shard-local -> ``[M/d, K]`` summed over ``rs_axis``.
+    Unlike the forward, the gather axis is the INNER ring here (the outer
+    ring is the travelling accumulator over ``rs_axis``) — ``p`` still
+    records the gather/stream axis, ``p2`` the scatter axis.  Dispatches
+    through the same op as the forward (cells record role ``2dT``), so
+    the tuner arbitrates it per cell too.
+    """
+    return _dispatch("matmul_reducescatter_2d", g, ag_axis, impl, x=x,
+                     rs_axis=rs_axis, xpose=True)
 
 
 def format_footer(ctx: TuneContext) -> str:

@@ -16,16 +16,39 @@ is the first-class record every layer keys on:
 Geometry convention for fused matmul ops (the full logical GEMM is always
 ``[mm_m, mm_k] @ [mm_k, mm_n]``):
 
-====================  =========================  ==========================
-op                    collective operand         ``mm_role``
-====================  =========================  ==========================
-allgather_matmul      x ``[mm_m/p, mm_k]``       ``gather``  — the gathered
-                                                 dim is the output-ROW dim
-matmul_reducescatter  x ``[mm_m, mm_k]``         ``scatter`` — output rows
-                                                 are reduce-scattered
-matmul_accumulate     w ``[mm_k/p, mm_n]``       ``contract`` — the gathered
-                                                 dim is CONTRACTED away
-====================  =========================  ==========================
+=======================  =========================  =======================
+op                       collective operand         ``mm_role``
+=======================  =========================  =======================
+allgather_matmul         x ``[mm_m/p, mm_k]``       ``gather``  — the
+                                                    gathered dim is the
+                                                    output-ROW dim
+matmul_reducescatter     x ``[mm_m, mm_k]``         ``scatter`` — output
+                                                    rows are
+                                                    reduce-scattered
+matmul_accumulate        w ``[mm_k/p, mm_n]``       ``contract`` — the
+                                                    gathered dim is
+                                                    CONTRACTED away
+matmul_reducescatter_2d  w ``[mm_k, mm_n/p]``       ``2d`` — weight cols
+                                                    gathered over the outer
+                                                    (``p``) axis, output
+                                                    rows reduce-scattered
+                                                    over the inner (``p2``)
+                                                    axis
+matmul_reducescatter_2d  g ``[mm_k/p, mm_m]``       ``2dT`` — the transpose
+(``xpose=True``)                                    schedule: the gathered
+                                                    dim is CONTRACTED,
+                                                    output rows scattered
+                                                    over ``p2``
+=======================  =========================  =======================
+
+The 2-D op is the only one whose cell carries a SECOND axis size ``p2``
+(the inner reduce-scatter axis; ``p`` is always the axis the payload
+streams over).  1-D cells keep ``p2 == 0``; ``world()`` is the device
+count the cell needs (``p`` or ``p * p2``).  For 2-D cells the recorded
+GEMM dims are the PER-RANK problem — ``[mm_m, mm_k] @ [mm_k, mm_n]`` is
+the matmul one rank performs across the whole nested ring — consistent
+with the 1-D convention (e.g. ``matmul_reducescatter``'s ``mm_k`` is the
+local partial-contraction depth).
 
 Plain collectives carry ``mm_k == mm_m == mm_n == 0`` and ``mm_role == ""``
 (``fused`` is False); their dtype is still recorded.
@@ -38,28 +61,36 @@ import math
 import numpy as np
 
 #: roles a fused matmul operand can play in its collective
-MM_ROLES = ("gather", "scatter", "contract")
+MM_ROLES = ("gather", "scatter", "contract", "2d", "2dT")
 
-#: dispatcher op -> role of its fused matmul (None for plain collectives)
+#: dispatcher op -> role of its fused matmul (None for plain collectives;
+#: the 2-D op's ``xpose=True`` direction records as "2dT")
 OP_MM_ROLE = {
     "allgather_matmul": "gather",
     "matmul_reducescatter": "scatter",
     "matmul_accumulate": "contract",
+    "matmul_reducescatter_2d": "2d",
 }
 
 
 @dataclasses.dataclass(frozen=True, order=True)
 class Geom:
-    """The matmul geometry of a fused cell — the profile partition key."""
+    """The matmul geometry of a fused cell — the profile partition key.
+
+    ``p2`` is the inner axis size of a 2-D cell (0 for 1-D cells): two
+    meshes with the same GEMM but different inner axes are different
+    communication problems, so they partition into different profiles.
+    """
     dtype: str
     mm_k: int
     mm_m: int
     mm_n: int
     mm_role: str
+    p2: int = 0
 
     def distance(self, other: "Geom") -> float:
         """Log-space shape distance for the nearest-cell profile fallback
-        (same role/dtype assumed; see ``ProfileStore.lookup_cell``)."""
+        (same role/dtype/p2 assumed; see ``ProfileStore.lookup_cell``)."""
         d = 0.0
         for a, b in ((self.mm_k, other.mm_k), (self.mm_m, other.mm_m),
                      (self.mm_n, other.mm_n)):
@@ -71,23 +102,34 @@ class Geom:
 class OpCell:
     """One tuning cell: collective type, scale, payload, and geometry."""
     op: str
-    p: int                      # axis size ("number of processes")
+    p: int                      # axis size the payload streams over
     nbytes: int                 # payload bytes of the collective operand
     dtype: str = "float32"
     mm_k: int = 0               # contraction dim of the fused GEMM
     mm_m: int = 0               # output rows of the fused GEMM
     mm_n: int = 0               # output cols of the fused GEMM
-    mm_role: str = ""           # "gather" | "scatter" | "contract" | ""
+    mm_role: str = ""           # one of MM_ROLES or "" (plain)
+    p2: int = 0                 # inner axis size (2-D cells only; else 0)
 
     def __post_init__(self):
         if self.mm_role and self.mm_role not in MM_ROLES:
             raise ValueError(f"unknown mm_role {self.mm_role!r}")
+        if self.p2 and self.mm_role not in ("2d", "2dT"):
+            raise ValueError(
+                f"p2={self.p2} only valid for 2-D roles, not "
+                f"{self.mm_role!r}")
 
     # -- views ---------------------------------------------------------------
     @property
     def fused(self) -> bool:
         """True when the cell carries a recorded GEMM geometry."""
         return self.mm_k > 0
+
+    def world(self) -> int:
+        """Device count the cell's communication problem spans: ``p`` for
+        1-D cells, ``p * p2`` for 2-D cells — what the measured backend
+        needs the host mesh to factor as."""
+        return self.p * self.p2 if self.p2 else self.p
 
     @property
     def itemsize(self) -> int:
@@ -106,7 +148,7 @@ class OpCell:
         if not self.fused:
             return None
         return Geom(self.dtype, self.mm_k, self.mm_m, self.mm_n,
-                    self.mm_role)
+                    self.mm_role, self.p2)
 
     def key(self) -> tuple:
         return dataclasses.astuple(self)
@@ -118,11 +160,13 @@ class OpCell:
         For fused cells the dimension tied to the collective operand is
         rescaled so the replayed GEMM stays consistent with the payload:
         ``gather``/``scatter`` scale the row dim ``mm_m``; ``contract``
-        scales the contraction dim ``mm_k``.  The returned nbytes is
-        re-derived from the integral dims — rounded to whole rows/blocks
-        and never below ONE row/block, so a fused cell's "1-byte" NREP
-        anchor is really its minimal-GEMM floor (one K-row / one weight
-        block), not a literal byte.
+        scales the contraction dim ``mm_k``; ``2d`` scales the output-col
+        dim ``mm_n`` (the streamed weight's width) and ``2dT`` the
+        contraction dim ``mm_k`` (the streamed cotangent's rows).  The
+        returned nbytes is re-derived from the integral dims — rounded to
+        whole rows/blocks and never below ONE row/block, so a fused cell's
+        "1-byte" NREP anchor is really its minimal-GEMM floor (one K-row /
+        one weight block), not a literal byte.
         """
         if not self.fused:
             return dataclasses.replace(self, nbytes=max(int(nbytes), 1))
@@ -136,6 +180,16 @@ class OpCell:
                        (int(nbytes) // (self.mm_k * it) // self.p) * self.p)
             return dataclasses.replace(self, nbytes=rows * self.mm_k * it,
                                        mm_m=rows)
+        if self.mm_role == "2d":
+            # payload = the weight shard [mm_k, mm_n/p]: scale its width
+            cols = max(1, int(nbytes) // (self.mm_k * it))
+            return dataclasses.replace(self, nbytes=cols * self.mm_k * it,
+                                       mm_n=self.p * cols)
+        if self.mm_role == "2dT":
+            # payload = the cotangent shard [mm_k/p, mm_m]: scale its rows
+            rows = max(1, int(nbytes) // (self.mm_m * it))
+            return dataclasses.replace(self, nbytes=rows * self.mm_m * it,
+                                       mm_k=self.p * rows)
         k_loc = max(1, int(nbytes) // (self.mm_n * it))
         return dataclasses.replace(self, nbytes=k_loc * self.mm_n * it,
                                    mm_k=self.p * k_loc)

@@ -562,13 +562,21 @@ def scatter_as_tree(x, axis: str, *, root: int = 0, **_):
 #   allgather_matmul       x [n, K], w [K, M]     -> all_gather(x) @ w [p*n, M]
 #   matmul_reducescatter   x [p*n, K], w [K, M]   -> reduce_scatter(x @ w) [n, M]
 #   matmul_accumulate      w [K/p, M], x [T, K]   -> x @ all_gather(w) [T, M]
+#   matmul_reducescatter_2d
+#       w [K, M/d] over ag axis (size d), x [T, K], rs axis (size q)
+#       -> reduce_scatter(x @ all_gather(w, cols, ag), rows, rs) [T/q, M]
+#       (xpose=True: g [T/q, M] over ag axis, x [T, K]
+#        -> reduce_scatter(all_gather(g, rows, ag)T @ x, rows, rs) [M/d, K])
 #
 # ``default`` is the unfused composition today's dist/ops emit; ``fused_ring``
-# is the kernels/collective_matmul.py ring schedule that overlaps each chunk's
+# (and ``fused_ring2d`` for the two-axis op) is the
+# kernels/collective_matmul.py ring schedule that overlaps each chunk's
 # transfer with the previous chunk's matmul.  The tuner arbitrates the two via
 # the overlap-aware cost model (max(comm, compute) per step instead of sum).
-# Note ``matmul_accumulate`` takes the STREAMED operand (the K-dim weight
-# shard) first — the dispatcher keys on the bytes the collective moves.
+# Note ``matmul_accumulate`` and ``matmul_reducescatter_2d`` take the
+# STREAMED operand (the K-dim / column-block weight shard, or the xpose
+# cotangent shard) first — the dispatcher keys on the bytes the collective
+# moves over its OUTER axis.
 
 
 def allgather_matmul_default(x, axis: str, *, w, return_gathered: bool = False,
@@ -623,6 +631,42 @@ def matmul_accumulate_fused_ring(w, axis: str, *, x,
     from repro.kernels import collective_matmul as cmm
     return cmm.ring_matmul_accumulate(x, w, axis,
                                       return_gathered=return_gathered)
+
+
+def matmul_reducescatter_2d_default(w, axis: str, *, x, rs_axis: str,
+                                    xpose: bool = False,
+                                    return_gathered: bool = False, **_):
+    """Unfused 2-D composition: gather the streamed operand over ``axis``
+    (the outer axis the dispatcher keys on), one dense matmul, then
+    reduce-scatter the output rows over ``rs_axis``.
+
+    ``xpose=False``: w ``[K, m_loc]`` col-gathered -> psum_scatter(x @ W).
+    ``xpose=True``: the payload is the cotangent shard g ``[t_loc, M]``
+    row-gathered and CONTRACTED -> psum_scatter(Gᵀ @ x) — the transpose
+    schedule of the paired VJP.
+    """
+    if xpose:
+        full = lax.all_gather(w, axis, axis=0, tiled=True)
+        return lax.psum_scatter(jnp.matmul(jnp.swapaxes(full, 0, 1), x),
+                                rs_axis, scatter_dimension=0, tiled=True)
+    full = lax.all_gather(w, axis, axis=1, tiled=True)
+    out = lax.psum_scatter(jnp.matmul(x, full), rs_axis,
+                           scatter_dimension=0, tiled=True)
+    return (out, full) if return_gathered else out
+
+
+def matmul_reducescatter_2d_fused_ring(w, axis: str, *, x, rs_axis: str,
+                                       xpose: bool = False,
+                                       return_gathered: bool = False, **_):
+    """(⊕) nested 2-D ring: outer weight (or cotangent) stream over
+    ``axis``, inner matmul-reducescatter (or contract-stream) over
+    ``rs_axis``, issue-before-consume on both axes
+    (kernels/collective_matmul.py)."""
+    from repro.kernels import collective_matmul as cmm
+    if xpose:
+        return cmm.ring_matmul_reducescatter_2d_t(w, x, rs_axis, axis)
+    return cmm.ring_matmul_reducescatter_2d(
+        x, w, rs_axis, axis, return_gathered=return_gathered)
 
 
 # ---------------------------------------------------------------------------
@@ -789,6 +833,19 @@ def _reg() -> dict[str, dict[str, Impl]]:
            "EXT", lambda n, p: p * n + 2 * n,
            desc="ring overlap: weight block in flight while partials "
                 "accumulate"),
+    ]}
+
+    r["matmul_reducescatter_2d"] = {i.name: i for i in [
+        mk("default", "matmul_reducescatter_2d",
+           matmul_reducescatter_2d_default, None,
+           lambda n, p: p * n,
+           desc="all_gather weight cols then dense matmul then psum_scatter"
+                " (unfused 2-D composition)"),
+        mk("fused_ring2d", "matmul_reducescatter_2d",
+           matmul_reducescatter_2d_fused_ring, "EXT",
+           lambda n, p: p * n + 2 * n,
+           desc="nested rings: outer weight stream over the gather axis, "
+                "inner matmul-reducescatter over the scatter axis"),
     ]}
 
     r["scatter"] = {i.name: i for i in [

@@ -157,6 +157,24 @@ def t_overlapped_ring(p, step_comm: float, mm_total: float, t: Topo):
     return chunk + (p - 1) * max(chunk, step_comm)
 
 
+def t_overlapped_ring2d(p_out: int, q_in: int, outer_step_comm: float,
+                        inner_step_comm: float, mm_total: float, t: Topo):
+    """The nested overlap law of the 2-D ring:
+    ``max(outer_comm, per-step max(inner_comm, compute))``.
+
+    Each of the ``p_out`` outer steps runs a full inner ring
+    (``t_overlapped_ring`` over ``q_in`` steps) on ``1/p_out`` of the total
+    compute; the outer transfer is issued before the inner ring consumes
+    the resident block, so it hides behind the whole inner ring.  The
+    first outer block's inner ring is exposed, and the outer kernel issue
+    pays ``fused_step_overhead`` per outer step — so the 2-D schedule
+    loses in the latency regime on BOTH axes at once.
+    """
+    inner = t_overlapped_ring(q_in, inner_step_comm, mm_total / p_out, t)
+    return inner + (p_out - 1) * max(
+        inner, outer_step_comm + t.fused_step_overhead)
+
+
 def t_meta(p, t: Topo):
     """The 2p·I count/displacement exchange of the 'v' emulations."""
     return t_ring_allgather(p, 8, t)
@@ -340,6 +358,22 @@ def latency(op: str, impl: str, p: int, nbytes: int, topo: Topo,
             lambda: t_overlapped_ring(
                 p, topo.alpha + B * topo.beta,
                 t_fused_matmul(p * B / 4.0, topo), topo),
+        # matmul_reducescatter_2d: B = streamed weight-block bytes over the
+        # OUTER axis.  The geometry-less canonical assumption: the inner
+        # axis equals the outer (square data x model mesh), the matmul
+        # touches p·B/4 gathered weight elements, the output buffer is the
+        # gathered weight's size p·B, and the inner ring's travelling
+        # accumulator block is its per-(outer-step, inner-rank) share
+        # p·B/(p·p) = B/p.  Unfused = weight all-gather PLUS matmul PLUS
+        # output reduce-scatter; fused = the nested overlap law.
+        ("matmul_reducescatter_2d", "default"):
+            lambda: (ag(B) + t_fused_matmul(p * B / 4.0, topo)
+                     + rs(p * B)),
+        ("matmul_reducescatter_2d", "fused_ring2d"):
+            lambda: t_overlapped_ring2d(
+                p, p, topo.alpha + B * topo.beta,
+                topo.alpha + (B / p) * (topo.beta + topo.gamma),
+                t_fused_matmul(p * B / 4.0, topo), topo),
         # ---- scatter (B = total buffer bytes, p chunks) ----
         ("scatter", "default"): lambda: dflt_scatter(B),
         ("scatter", "scatter_as_bcast"): lambda: dflt_bcast(B),
@@ -371,13 +405,48 @@ def latency_cell(cell, impl: str, topo: Topo, *,
         return latency(cell.op, impl, cell.p, cell.nbytes, topo,
                        chunk_bytes=chunk_bytes)
     p = cell.p
-    if p <= 1:
+    if p <= 1 and getattr(cell, "p2", 0) <= 1:
         return 0.0
     imp = REGISTRY[cell.op][impl]
     if imp.requires_pow2 and not _is_pow2(p):
         return math.inf
     mm = 2.0 * cell.mm_k * cell.mm_m * cell.mm_n / topo.matmul_flops
     B = float(max(cell.nbytes, 1))
+    if cell.op == "matmul_reducescatter_2d":
+        # nested 2-D cells: p = outer stream axis, p2 = inner rs axis; the
+        # recorded dims are the PER-RANK GEMM, so ``mm`` above is already
+        # one rank's compute and the output product is mm_m x mm_n.
+        q = max(cell.p2, 1)
+        it = cell.itemsize
+        bt_out = float(cell.mm_m * cell.mm_n * it)
+        if cell.mm_role == "2dT":
+            # outer = travelling accumulator over the rs axis (q steps,
+            # [mm_m/q, mm_n] blocks); inner = cotangent column-slice
+            # stream over the gather axis (p steps)
+            acc_blk = bt_out / q
+            slice_blk = (float(cell.mm_k) / p) * (float(cell.mm_m) / q) * it
+            if impl == "default":
+                return (latency("allgather", "default", p, cell.nbytes,
+                                topo)
+                        + mm
+                        + t_ring_reduce_scatter(q, bt_out, topo))
+            return t_overlapped_ring2d(
+                q, p,
+                topo.alpha + acc_blk * (topo.beta + topo.gamma),
+                topo.alpha + slice_blk * topo.beta,
+                mm, topo)
+        # forward "2d": outer = weight column-block stream over the gather
+        # axis (p steps, B bytes each); inner = matmul-reducescatter ring
+        # over the rs axis (q steps, [mm_m/q, mm_n/p] accumulator blocks)
+        inner_blk = (float(cell.mm_m) / q) * (float(cell.mm_n) / p) * it
+        if impl == "default":
+            return (latency("allgather", "default", p, cell.nbytes, topo)
+                    + mm
+                    + t_ring_reduce_scatter(q, bt_out, topo))
+        return t_overlapped_ring2d(
+            p, q, topo.alpha + B * topo.beta,
+            topo.alpha + inner_blk * (topo.beta + topo.gamma),
+            mm, topo)
     if cell.op in ("allgather_matmul", "matmul_accumulate"):
         # streamed operand all-gathered over the axis; steps move B bytes
         if impl == "default":

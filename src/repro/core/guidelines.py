@@ -50,8 +50,8 @@ def _collect() -> list[Guideline]:
                 # collective-matmul ops)
                 gl_id = (f"EXT:{name}" if "_as_" in name
                          else f"EXT:{op}.{name}")
-            if name == "fused_ring":
-                stmt = (f"{op}(n) <= fused_ring(n)  "
+            if name.startswith("fused_ring"):
+                stmt = (f"{op}(n) <= {name}(n)  "
                         "[fused overlap must not lose to collective+matmul]")
             else:
                 stmt = f"{op}(n) <= {name.replace('_as_', ' -> ')}(n)"

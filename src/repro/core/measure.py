@@ -31,15 +31,29 @@ from repro.core import collectives as C
 from repro.core.cell import OpCell
 
 AXIS = "bench"
+AXIS2 = "bench2"       # inner axis of the 2-D replay mesh
 
 #: ops whose cells carry a fused-matmul geometry the replay must honor
-MATMUL_OPS = ("allgather_matmul", "matmul_reducescatter", "matmul_accumulate")
+MATMUL_OPS = ("allgather_matmul", "matmul_reducescatter", "matmul_accumulate",
+              "matmul_reducescatter_2d")
 
 
 @lru_cache(maxsize=1)
 def _mesh() -> Mesh:
     devs = np.array(jax.devices())
     return Mesh(devs, (AXIS,))
+
+
+@lru_cache(maxsize=8)
+def _mesh2(p: int, p2: int) -> Mesh:
+    """The (outer, inner) replay mesh of a 2-D cell; requires the host
+    devices to factor exactly as p x p2."""
+    devs = np.array(jax.devices())
+    if devs.size != p * p2:
+        raise ValueError(
+            f"2-D replay needs {p}x{p2}={p * p2} host devices, "
+            f"have {devs.size}")
+    return Mesh(devs.reshape(p, p2), (AXIS, AXIS2))
 
 
 def axis_size() -> int:
@@ -66,6 +80,20 @@ def problem_shapes(cell: OpCell) -> dict[str, tuple[int, ...]]:
             raise ValueError(
                 f"cell {cell} has no recorded matmul geometry; a fused op "
                 "cannot be replayed without it (v1 trace?)")
+        if cell.op == "matmul_reducescatter_2d":
+            q = max(cell.p2, 1)
+            if cell.mm_role == "2dT":
+                # payload = the cotangent row block [mm_k/p, mm_m]; its
+                # cols must divide the inner rs axis; x is shard-local
+                t_loc = max(1, cell.mm_k // p)
+                m_pad = max(q, (cell.mm_m // q) * q)
+                return {"x": (t_loc, m_pad),
+                        "w": (p * t_loc, cell.mm_n)}
+            # payload = the weight column block [mm_k, mm_n/p]; the
+            # shard-local x rows must divide the inner rs axis
+            rows = max(q, (cell.mm_m // q) * q)
+            return {"x": (cell.mm_k, max(1, cell.mm_n // p)),
+                    "w": (rows, cell.mm_k)}
         if cell.op == "allgather_matmul":
             return {"x": (max(1, cell.mm_m // p), cell.mm_k),
                     "w": (cell.mm_k, cell.mm_n)}
@@ -85,6 +113,8 @@ def problem_shapes(cell: OpCell) -> dict[str, tuple[int, ...]]:
 
 @lru_cache(maxsize=512)
 def _compiled(cell: OpCell, impl: str):
+    if cell.op == "matmul_reducescatter_2d":
+        return _compiled_2d(cell, impl)
     mesh = _mesh()
     p = mesh.devices.size
     if cell.p != p:
@@ -115,6 +145,36 @@ def _compiled(cell: OpCell, impl: str):
     spec = NamedSharding(mesh, P(AXIS))
     rows, width = shapes["x"]
     x = jax.device_put(jnp.ones((p * rows, width), dt), spec)
+    return jax.jit(sm).lower(x).compile(), x
+
+
+def _compiled_2d(cell: OpCell, impl: str):
+    """Compile a 2-D cell's replay on the (outer, inner) host mesh.
+
+    The payload streams over the OUTER axis exactly as at dispatch: the
+    forward cell shards the weight's columns over ``AXIS``, the ``2dT``
+    cell shards the cotangent's rows; the stationary operand is a
+    shard-local closure constant with the recorded per-rank shape."""
+    q = max(cell.p2, 1)
+    mesh = _mesh2(cell.p, q)
+    fn = C.REGISTRY[cell.op][impl].fn
+    shapes = problem_shapes(cell)
+    dt = jnp.dtype(cell.dtype if cell.dtype else "float32")
+    stat = jnp.ones(shapes["w"], dt)
+    xpose = cell.mm_role == "2dT"
+
+    def body(payload):
+        return fn(payload, AXIS, x=stat, rs_axis=AXIS2, xpose=xpose)
+
+    rows, cols = shapes["x"]
+    if xpose:
+        in_spec, x = P(AXIS, None), jnp.ones((cell.p * rows, cols), dt)
+    else:
+        in_spec, x = P(None, AXIS), jnp.ones((rows, cell.p * cols), dt)
+    sm = shard_map(body, mesh=mesh, in_specs=in_spec,
+                   out_specs=P(AXIS2, None), check_vma=False)
+    spec = NamedSharding(mesh, in_spec)
+    x = jax.device_put(x, spec)
     return jax.jit(sm).lower(x).compile(), x
 
 

@@ -42,6 +42,7 @@ OP_TO_MPI = {
     "allgather_matmul": "MPIX_Allgather_matmul",
     "matmul_reducescatter": "MPIX_Matmul_reduce_scatter",
     "matmul_accumulate": "MPIX_Matmul_accumulate",
+    "matmul_reducescatter_2d": "MPIX_Matmul_reduce_scatter_2d",
 }
 MPI_TO_OP = {v: k for k, v in OP_TO_MPI.items()}
 
@@ -92,16 +93,21 @@ class Profile:
         impls = sorted({r.impl for r in self.ranges})
         ids = {name: i + 2 for i, name in enumerate(impls)}  # 1 = default
         lines = [
-            "# pgtune profile",
+            "# pgtune profile v2",
             OP_TO_MPI.get(self.op, self.op),
             f"{self.axis_size} # nb. of. processes",
             f"{len(impls)} # nb. of mock-up impl.",
         ]
         if self.geom is not None:
-            # a comment line to v1 parsers; geometry to v2
-            lines.insert(1, f"#@geom {self.geom.dtype} {self.geom.mm_k} "
-                            f"{self.geom.mm_m} {self.geom.mm_n} "
-                            f"{self.geom.mm_role}")
+            # a comment line to v1 parsers; geometry to v2.  The trailing
+            # p2 token (inner axis of a 2-D cell) is only written when
+            # nonzero, so 1-D geometry lines stay byte-identical.
+            g = self.geom
+            line = (f"#@geom {g.dtype} {g.mm_k} {g.mm_m} {g.mm_n} "
+                    f"{g.mm_role}")
+            if g.p2:
+                line += f" {g.p2}"
+            lines.insert(1, line)
         lines += [f"{ids[name]} {name}" for name in impls]
         lines.append(f"{len(self.ranges)} # nb. of ranges")
         lines += [f"{r.lo} {r.hi} {ids[r.impl]}" for r in self.ranges]
@@ -112,8 +118,10 @@ class Profile:
         geom = None
         for ln in text.splitlines():
             if ln.startswith("#@geom"):
-                _, dt, k, m, n, role = ln.split()
-                geom = Geom(dt, int(k), int(m), int(n), role)
+                parts = ln.split()
+                _, dt, k, m, n, role = parts[:6]
+                p2 = int(parts[6]) if len(parts) > 6 else 0
+                geom = Geom(dt, int(k), int(m), int(n), role, p2)
         raw = [ln.split("#")[0].strip() for ln in text.splitlines()]
         rows = [ln for ln in raw if ln]
         opname = rows[0]
@@ -153,8 +161,11 @@ class Profile:
 
 def _geom_tag(geom: Geom) -> str:
     """Filesystem-safe geometry suffix for profile filenames."""
-    return (f"{geom.dtype}_k{geom.mm_k}m{geom.mm_m}n{geom.mm_n}"
-            f"_{geom.mm_role}")
+    tag = (f"{geom.dtype}_k{geom.mm_k}m{geom.mm_m}n{geom.mm_n}"
+           f"_{geom.mm_role}")
+    if geom.p2:
+        tag += f"_q{geom.p2}"
+    return tag
 
 
 class ProfileStore:
@@ -193,7 +204,8 @@ class ProfileStore:
                 near = [(geom, p) for (op, ax, geom), p in self._by_key.items()
                         if op == cell.op and ax == cell.p and geom is not None
                         and geom.mm_role == g.mm_role
-                        and geom.dtype == g.dtype]
+                        and geom.dtype == g.dtype
+                        and geom.p2 == g.p2]
                 if near:
                     _, prof = min(near, key=lambda kv: g.distance(kv[0]))
                     return prof.lookup_nearest(cell.nbytes)
@@ -225,7 +237,15 @@ class ProfileStore:
         d = pathlib.Path(directory)
         store = cls()
         for f in sorted(d.glob("*.pgtune")):
-            store.add(Profile.from_text(f.read_text()))
+            text = f.read_text()
+            if not text.lstrip().startswith("# pgtune profile v2"):
+                import warnings
+                warnings.warn(
+                    f"profile file {f} is schema v1 (no 'pgtune profile v2' "
+                    "header); v1 parse paths are deprecated — re-save with "
+                    "the current tuner (see ROADMAP 'Trace v1 sunset')",
+                    DeprecationWarning, stacklevel=2)
+            store.add(Profile.from_text(text))
         for f in sorted(d.glob("*.json")):
             store.add(Profile.from_json(f.read_text()))
         return store

@@ -132,6 +132,47 @@ def main(argv=None) -> int:
         check(f"matmul_accumulate/{nm}", y,
               np.broadcast_to(want_acc, (P_,) + want_acc.shape))
 
+    # matmul_reducescatter_2d: a REAL two-axis mesh ("a" = the outer
+    # weight-stream/gather axis, "b" = the inner reduce-scatter axis).
+    # Forward: shard (a=i, b=j) holds x's j-th K-slice and W's (j K-rows,
+    # i col-block) — the row_matmul(fsdp_dim=1) layout — so the inner RS
+    # performs the model-axis contraction sum and the outer stream the
+    # data-axis weight gather.  Xpose: the cotangent's rows shard over
+    # "a" (gathered + CONTRACTED), each "b" rank contributes a different
+    # stationary x (the data-batch sum of the dw schedule).
+    d2 = 2
+    q2 = P_ // d2
+    mesh2 = Mesh(np.array(jax.devices()[:P_]).reshape(d2, q2), ("a", "b"))
+    t2, kl2, ml2 = 2 * q2, 3, 4
+    x2d = rng.normal(size=(t2, q2 * kl2)).astype(np.float32)
+    w2d = rng.normal(size=(q2 * kl2, d2 * ml2)).astype(np.float32)
+    g2d = rng.normal(size=(t2, d2 * ml2)).astype(np.float32)
+    xb2d = rng.normal(size=(t2, q2 * kl2)).astype(np.float32)
+    want_2d = x2d @ w2d                                       # [t2, M]
+    want_2dt = sum(                                           # [M, kl2]
+        g2d.T @ xb2d[:, j * kl2:(j + 1) * kl2] for j in range(q2))
+
+    for nm in C.impl_names("matmul_reducescatter_2d"):
+        fn = C.REGISTRY["matmul_reducescatter_2d"][nm].fn
+
+        def body_f(xb, wb, fn=fn):
+            return fn(wb, "a", x=xb, rs_axis="b")
+
+        sm = shard_map(body_f, mesh=mesh2,
+                       in_specs=(P(None, "b"), P("b", "a")),
+                       out_specs=P("b", None), check_vma=False)
+        y = np.asarray(jax.jit(sm)(jnp.asarray(x2d), jnp.asarray(w2d)))
+        check(f"matmul_reducescatter_2d/{nm}", y, want_2d)
+
+        def body_t(gb, xb, fn=fn):
+            return fn(gb, "a", x=xb, rs_axis="b", xpose=True)
+
+        sm_t = shard_map(body_t, mesh=mesh2,
+                         in_specs=(P("a", None), P(None, "b")),
+                         out_specs=P("b", None), check_vma=False)
+        yt = np.asarray(jax.jit(sm_t)(jnp.asarray(g2d), jnp.asarray(xb2d)))
+        check(f"matmul_reducescatter_2d/{nm}/xpose", yt, want_2dt)
+
     fails = [k for k, v in results.items() if not v]
     if args.json:
         print(json.dumps({"devices": P_, "total": len(results),

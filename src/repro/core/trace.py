@@ -90,6 +90,8 @@ class TraceEntry:
         if self.cell.fused:
             d["mm"] = [self.cell.mm_k, self.cell.mm_m, self.cell.mm_n]
             d["role"] = self.cell.mm_role
+        if self.cell.p2:
+            d["p2"] = self.cell.p2      # inner axis of a 2-D cell
         d.update(phase=self.phase, impl=self.impl, count=self.count)
         return json.dumps(d)
 
@@ -102,7 +104,7 @@ class TraceEntry:
         cell = OpCell(op=d["op"], p=int(d["p"]), nbytes=int(d["nbytes"]),
                       dtype=d.get("dtype", "float32"),
                       mm_k=int(mm[0]), mm_m=int(mm[1]), mm_n=int(mm[2]),
-                      mm_role=d.get("role", ""))
+                      mm_role=d.get("role", ""), p2=int(d.get("p2", 0)))
         return cls(cell=cell, phase=d.get("phase", "fwd"),
                    impl=d.get("impl", "default"),
                    count=int(d.get("count", 1)))
@@ -213,10 +215,22 @@ class Trace:
         return "".join(e.to_json() + "\n" for e in self.entries)
 
     @classmethod
-    def from_jsonl(cls, text: str) -> "Trace":
-        entries = [TraceEntry.from_json(ln) for ln in text.splitlines()
-                   if ln.strip() and not ln.lstrip().startswith("#")]
-        return cls(entries)
+    def from_jsonl(cls, text: str, *, source: str | None = None) -> "Trace":
+        """Parse JSONL; any v1 line (no ``"v"`` key) triggers ONE
+        ``DeprecationWarning`` naming ``source`` (the v1 sunset step — the
+        lines still load with defaulted geometry, but fused cells lose
+        their GEMM and the measured backend note-skips them; re-record)."""
+        lines = [ln for ln in text.splitlines()
+                 if ln.strip() and not ln.lstrip().startswith("#")]
+        n_v1 = sum(1 for ln in lines if '"v"' not in ln)
+        if n_v1:
+            import warnings
+            warnings.warn(
+                f"trace {source or '<string>'} carries {n_v1} schema-v1 "
+                "line(s) (no 'v' key); v1 parse paths are deprecated — "
+                "re-record with the current dispatcher (see ROADMAP "
+                "'Trace v1 sunset')", DeprecationWarning, stacklevel=2)
+        return cls([TraceEntry.from_json(ln) for ln in lines])
 
     def save(self, path: str | pathlib.Path) -> None:
         p = pathlib.Path(path)
@@ -225,4 +239,5 @@ class Trace:
 
     @classmethod
     def load(cls, path: str | pathlib.Path) -> "Trace":
-        return cls.from_jsonl(pathlib.Path(path).read_text())
+        p = pathlib.Path(path)
+        return cls.from_jsonl(p.read_text(), source=str(p))

@@ -161,10 +161,10 @@ class MeasuredBackend:
         return self._nrep[key]
 
     def latency(self, cell: OpCell, impl: str) -> float:
-        if cell.p != measure.axis_size():
+        if cell.world() != measure.axis_size():
             raise ValueError(
-                f"measured backend runs at p={measure.axis_size()}, "
-                f"not {cell.p}")
+                f"measured backend runs at world={measure.axis_size()}, "
+                f"not {cell.world()} (cell p={cell.p}, p2={cell.p2})")
         if not self._measurable(cell):
             # fused op without recorded geometry: nothing faithful to replay
             return math.inf
@@ -380,8 +380,10 @@ def tune_trace(trace, backend=None, *, min_win: float = 0.10,
             if op not in REGISTRY:
                 notes.append(f"{ph}: unknown op {op!r}; cell skipped")
                 continue
-            if sup is not None and p != sup:
-                notes.append(f"{ph}: {op} p={p} {nbytes}B: p != host axis "
+            if sup is not None and cell.world() != sup:
+                wd = (f"world={cell.world()} (p={p}, p2={cell.p2})"
+                      if cell.p2 else f"p={p}")
+                notes.append(f"{ph}: {op} {nbytes}B: {wd} != host axis "
                              f"size {sup}; cell skipped")
                 continue
             if cell not in lat_cache:
@@ -390,8 +392,19 @@ def tune_trace(trace, backend=None, *, min_win: float = 0.10,
             lats = lat_cache[cell]
             t_def = lats.get("default")
             if t_def is None:
-                notes.append(f"{ph}: {op} p={p} {nbytes}B: default impl "
-                             "unmeasurable; cell skipped")
+                # don't let a fused cell's inf latency vanish silently: say
+                # WHY it was unmeasurable — a fused op without recorded
+                # geometry (v1 trace) has nothing faithful to replay, and
+                # the report footer must carry that (regression:
+                # measure.sample_latency inf inside tune_trace aggregation)
+                if op in measure.MATMUL_OPS and not cell.fused:
+                    notes.append(
+                        f"{ph}: {op} p={p} {nbytes}B: fused cell has no "
+                        "recorded GEMM geometry (v1 trace?); unmeasurable, "
+                        "cell skipped — re-record the trace with schema v2")
+                else:
+                    notes.append(f"{ph}: {op} p={p} {nbytes}B: default impl "
+                                 "unmeasurable; cell skipped")
                 continue
             t_d += weight * t_def
             cands = {k: v for k, v in lats.items() if k != "default"}

@@ -14,5 +14,6 @@ from repro.dist.axes import AXES, MeshAxes, axis_size_or_1, has_axis  # noqa: F4
 from repro.dist.ops import (allgather_matmul, col_matmul,  # noqa: F401
                             ep_alltoall, fsdp_gather, fsdp_matmul,
                             matmul_accumulate, matmul_reducescatter,
-                            row_matmul, tp_allgather, tp_allreduce, tp_copy,
+                            matmul_reducescatter_2d, row_matmul,
+                            tp_allgather, tp_allreduce, tp_copy,
                             tp_psum_grad, tp_reducescatter)

@@ -35,6 +35,11 @@ fsdp_matmul          api.allgather_matmul       api.matmul_reducescatter (dw)
 matmul_accumulate    api.matmul_accumulate      api.matmul_reducescatter (dw
                      (data — K-dim weight       reduce-scatter over K rows);
                      gather, CONTRACTED away)   dx reuses the gathered weight
+matmul_reducescatter api.matmul_reducescatter   api.allgather_matmul (dx) +
+_2d                  _2d (data-gather AND       api.matmul_reducescatter_2d_t
+                     model-reduce-scatter       (dw — the fused 2-D
+                     fused around one matmul)   TRANSPOSE schedule: axes
+                                                swap roles)
 ===================  =========================  ==========================
 
 The fused pair (``allgather_matmul`` / ``matmul_reducescatter``) exposes the
@@ -70,7 +75,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import api
-from repro.core._axis import axis_size, tie_to_axis
+from repro.core._axis import axis_index, axis_size, tie_to_axis
 from repro.dist.axes import AXES, has_axis
 
 
@@ -360,6 +365,70 @@ def fsdp_matmul(x, w, axis: str = AXES.data):
 
 
 # ---------------------------------------------------------------------------
+# weight-stationary 2-D collective matmul (data-gather x model-reduce-scatter)
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _mm2d(rs_axis: str, ag_axis: str, x, w):
+    return api.matmul_reducescatter_2d(x, w, rs_axis, ag_axis)
+
+
+def _mm2d_fwd(rs_axis, ag_axis, x, w):
+    # the outer ring materializes the col-gathered full weight anyway; keep
+    # it as the residual so dx needs no re-gather of w (memory parity with
+    # the unfused path, whose autodiff saves the gathered weight too)
+    ys, wf = api.matmul_reducescatter_2d(x, w, rs_axis, ag_axis,
+                                         return_gathered=True)
+    return ys, (x, wf)
+
+
+def _mm2d_bwd(rs_axis, ag_axis, res, g):
+    # ys = RS_q(x @ AG_d(w)): the cotangent g arrives SHARDED over rs_axis.
+    # dx = AG_q(g) @ Wᵀ — the 1-D gather-role fused op (transpose of the
+    # reduce-scatter); dw is the fused 2-D TRANSPOSE schedule: the rs-axis
+    # cotangent gather is CONTRACTED into the ag-axis reduce-scatter
+    # (axes swap roles relative to the forward).
+    x, wf = res
+    with api.phase("bwd"):
+        dx = api.allgather_matmul(g, jnp.swapaxes(wf, 0, 1), rs_axis)
+        dwt = api.matmul_reducescatter_2d_t(g, x, ag_axis, rs_axis)
+    return dx, jnp.swapaxes(dwt, 0, 1)
+
+
+_mm2d.defvjp(_mm2d_fwd, _mm2d_bwd)
+
+
+def matmul_reducescatter_2d(x, w, rs_axis: str = AXES.model,
+                            ag_axis: str = AXES.data):
+    """``reduce_scatter(x @ all_gather(w, cols over ag_axis), rows over
+    rs_axis)`` — x ``[T, K]`` shard-local, w ``[K, M/d]`` the data-axis
+    FSDP column block -> ``[T/q, M]`` summed over ``rs_axis``.  BOTH
+    collectives fuse around one matmul (nested rings); fused-vs-unfused is
+    a dispatcher decision per 2-D cell.  The backward pairs
+    ``allgather_matmul`` for dx and the fused 2-D transpose schedule
+    (``matmul_reducescatter_2d_t``) for dw.
+
+    Degenerate axes fall back to the matching 1-D op.  Rows MUST divide
+    the rs axis — the reduce-scatter contract has no well-defined output
+    otherwise (same constraint as the 1-D ``matmul_reducescatter``);
+    callers like ``row_matmul(fsdp_dim=1)`` guard this and keep the 1-D
+    ``tp_allreduce(fsdp_matmul(...))`` composition for ragged rows.
+    """
+    if not has_axis(ag_axis):
+        return matmul_reducescatter(x, w, rs_axis)
+    if not has_axis(rs_axis):
+        return fsdp_matmul(x, w, ag_axis)
+    if x.shape[0] % axis_size(rs_axis) != 0:
+        raise ValueError(
+            f"matmul_reducescatter_2d: rows {x.shape[0]} must divide the "
+            f"rs axis size {axis_size(rs_axis)}; use the unfused "
+            "tp_allreduce(fsdp_matmul(...)) composition for ragged rows "
+            "(row_matmul(fsdp_dim=1) does this automatically)")
+    return _mm2d(rs_axis, ag_axis, x, w)
+
+
+# ---------------------------------------------------------------------------
 # Megatron matmuls
 # ---------------------------------------------------------------------------
 
@@ -494,6 +563,43 @@ def _row_mm_bwd(axis, res, g):
 _row_mm.defvjp(_row_mm_fwd, _row_mm_bwd)
 
 
+@partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _row2d_mm(rs_axis: str, ag_axis: str, x, w):
+    x2, _ = _flat2(x)
+    ys = api.matmul_reducescatter_2d(x2, w, rs_axis, ag_axis)
+    return api.allgather(ys, rs_axis).reshape(*x.shape[:-1], ys.shape[-1])
+
+
+def _row2d_fwd(rs_axis, ag_axis, x, w):
+    x2, _ = _flat2(x)
+    ys, wf = api.matmul_reducescatter_2d(x2, w, rs_axis, ag_axis,
+                                         return_gathered=True)
+    y = api.allgather(ys, rs_axis).reshape(*x.shape[:-1], ys.shape[-1])
+    return y, (x, wf)
+
+
+def _row2d_bwd(rs_axis, ag_axis, res, g):
+    # the reduced output is ONE logical replicated tensor (Megatron "g"):
+    # its replicated cotangent needs no collective for dx (local matmul
+    # against the saved col-gathered weight).  dw re-enters the rs-axis
+    # row shard of g and runs the fused 2-D TRANSPOSE schedule — the
+    # rs-axis re-gather is contracted into the ag-axis FSDP grad
+    # reduce-scatter, both tuner-arbitrated.
+    x, wf = res
+    g2, t = _flat2(g)
+    x2, _ = _flat2(x)
+    t_loc = t // axis_size(rs_axis)
+    gs = jax.lax.dynamic_slice_in_dim(g2, axis_index(rs_axis) * t_loc,
+                                      t_loc, axis=0)
+    with api.phase("bwd"):
+        dwt = api.matmul_reducescatter_2d_t(gs, x2, ag_axis, rs_axis)
+    dx = jnp.matmul(g2, jnp.swapaxes(wf, 0, 1)).reshape(x.shape)
+    return dx, jnp.swapaxes(dwt, 0, 1)
+
+
+_row2d_mm.defvjp(_row2d_fwd, _row2d_bwd)
+
+
 def row_matmul(x, w, axis: str = AXES.model, *, fsdp_dim: int | None = None,
                fsdp_axis: str = AXES.data):
     """Row-parallel matmul: ``x`` sharded on the last dim, ``w`` sharded on
@@ -504,10 +610,18 @@ def row_matmul(x, w, axis: str = AXES.model, *, fsdp_dim: int | None = None,
     collective (cotangent is replicated).
 
     ``fsdp_dim=1`` declares that ``w`` is additionally FSDP-sharded on its
-    OUTPUT dim over ``fsdp_axis`` and fuses that gather into the matmul
-    (``fsdp_matmul``), keeping the model-axis sum a classic tuned
-    all-reduce; other ``fsdp_dim`` values gather unfused first."""
+    OUTPUT dim over ``fsdp_axis`` and fuses BOTH collectives around the
+    matmul via the weight-stationary 2-D op (``matmul_reducescatter_2d``:
+    outer data-axis weight stream, inner model-axis reduce-scatter; the
+    replicating model-axis all-gather of the scattered rows stays a
+    classic tuned collective).  When either axis is missing — or the row
+    count does not divide the model axis — it falls back to the 1-D
+    composition ``tp_allreduce(fsdp_matmul(...))``; other ``fsdp_dim``
+    values gather unfused first."""
     if fsdp_dim == 1:
+        if (has_axis(axis) and has_axis(fsdp_axis)
+                and math.prod(x.shape[:-1]) % axis_size(axis) == 0):
+            return _row2d_mm(axis, fsdp_axis, x, w)
         return tp_allreduce(fsdp_matmul(x, w, fsdp_axis), axis)
     if fsdp_dim is not None:
         w = fsdp_gather(w, fsdp_dim, fsdp_axis)

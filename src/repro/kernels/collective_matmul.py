@@ -1,21 +1,25 @@
 """Latency-hiding collective-matmul kernels (ring schedules, Pallas + ref).
 
-Three fused primitives, each semantically equal to an unfused collective
-followed (or preceded) by a dense matmul:
+Four fused primitives, each semantically equal to an unfused collective
+composition around a dense matmul:
 
-* ``ring_allgather_matmul``      out = all_gather(x, rows) @ w
-* ``ring_matmul_reducescatter``  out = reduce_scatter(x @ w, rows)
-* ``ring_matmul_accumulate``     out = x @ all_gather(w, rows)
+* ``ring_allgather_matmul``          out = all_gather(x, rows) @ w
+* ``ring_matmul_reducescatter``      out = reduce_scatter(x @ w, rows)
+* ``ring_matmul_accumulate``         out = x @ all_gather(w, rows)
+* ``ring_matmul_reducescatter_2d``   out = reduce_scatter(
+                                         x @ all_gather(w, cols, ag_axis),
+                                         rows, rs_axis)   — TWO mesh axes
 
 All run the classic (p-1)-step neighbour ring, but matmul the chunk they
 already hold while the next chunk is in flight — the "collective matmul" of
 Wang et al. (overlap of ICI transfers with MXU work), applied here as a
-tunable mock-up: the dispatcher's ``fused_ring`` impls of the
-``allgather_matmul`` / ``matmul_reducescatter`` / ``matmul_accumulate`` ops
+tunable mock-up: the dispatcher's ``fused_ring`` / ``fused_ring2d`` impls
+of the ``allgather_matmul`` / ``matmul_reducescatter`` /
+``matmul_accumulate`` / ``matmul_reducescatter_2d`` ops
 (core/collectives.py) call these, and the tuner arbitrates fused vs unfused
 per tuning cell exactly like any other guideline.
 
-The three ring schedules differ in WHAT travels and WHAT stays resident:
+The ring schedules differ in WHAT travels and WHAT stays resident:
 
 =========================  ==================  ===========================
 schedule                   travelling operand  per-step local work
@@ -26,7 +30,22 @@ matmul-reducescatter       output accumulator  resident x row-block @ w,
                            (scatter role)      added into the accumulator
 matmul-accumulate          weight block        x K-slice @ weight block,
                            (contract role)     accumulated into [T, M] out
+matmul-reducescatter-2d    outer: weight       inner matmul-reducescatter
+                           column block over   ring over ``rs_axis`` of the
+                           ``ag_axis``; inner: resident x against the
+                           output accumulator  resident weight block —
+                           over ``rs_axis``    nested rings, issue-before-
+                                               consume on BOTH axes
 =========================  ==================  ===========================
+
+The 2-D schedule is weight-stationary in the serving sense: each rank's
+FSDP weight shard never leaves its ring slot's rotation — one column block
+is in flight on the outer (data) ring while the previous block's partial
+products are being reduce-scattered over the inner (model) ring.
+``ring_matmul_reducescatter_2d_t`` is its transpose (the dw schedule of
+the paired VJP): the gathered operand's dim is CONTRACTED away (outer
+travelling accumulator over the scatter axis, inner contract-stream of the
+cotangent's column slice over the gather axis).
 
 Three execution tiers:
 
@@ -58,7 +77,9 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.core._axis import axis_index, axis_size, ring_perm
 
 __all__ = ["pallas_matmul", "ring_allgather_matmul",
-           "ring_matmul_reducescatter", "ring_matmul_accumulate", "on_tpu"]
+           "ring_matmul_reducescatter", "ring_matmul_accumulate",
+           "ring_matmul_reducescatter_2d", "ring_matmul_reducescatter_2d_t",
+           "on_tpu"]
 
 
 def _cdiv(a: int, b: int) -> int:
@@ -256,6 +277,117 @@ def ring_matmul_accumulate(x, w, axis: str, *, return_gathered: bool = False,
             gath = lax.dynamic_update_slice(gath, cur, (src * k_loc,) + zeros)
         cur = nxt
     return (acc, gath) if return_gathered else acc
+
+
+# ---------------------------------------------------------------------------
+# tier 1b: the weight-stationary 2-D nested ring (data × model)
+# ---------------------------------------------------------------------------
+
+
+def ring_matmul_reducescatter_2d(x, w, rs_axis: str, ag_axis: str, *,
+                                 return_gathered: bool = False,
+                                 mm: str = "auto"):
+    """``reduce_scatter(x @ all_gather(w, cols over ag_axis), rows over
+    rs_axis)`` with nested overlap — the weight-stationary 2-D collective
+    matmul.
+
+    x: ``[T, K]`` shard-local (T divisible by ``q = size(rs_axis)``), w:
+    per-shard ``[K, m_loc]`` (column block of the logical ``[K, d·m_loc]``
+    weight, gathered over ``d = size(ag_axis)``) -> ``[T/q, d·m_loc]``
+    summed over ``rs_axis`` with row-block i landing on inner-rank i.
+
+    Nested rings: the OUTER ring streams weight column blocks over
+    ``ag_axis`` (d steps, issue-before-consume — the ppermute moving block
+    s+1 is issued before block s is consumed); each outer step runs a full
+    INNER ``ring_matmul_reducescatter`` over ``rs_axis`` (itself
+    issue-before-consume), whose ``[T/q, m_loc]`` result fills the outer
+    block's output columns.  Both transfers overlap MXU work, so the
+    modeled cost is ``max(outer_comm, per-step max(inner_comm, compute))``
+    per outer step (costmodel.t_overlapped_ring2d).
+
+    ``return_gathered=True`` additionally returns the assembled
+    ``all_gather(w, cols)`` ``[K, d·m_loc]`` — the outer ring materializes
+    it for free, and the paired VJP reuses it for dx instead of
+    re-gathering.
+    """
+    d = axis_size(ag_axis)
+    out_dtype = jnp.result_type(x.dtype, w.dtype)
+    if d == 1:
+        out = ring_matmul_reducescatter(x, w, rs_axis, mm=mm)
+        return (out, w) if return_gathered else out
+    m_loc = w.shape[-1]
+    idx = axis_index(ag_axis)
+    q = axis_size(rs_axis)
+    rows = x.shape[0]
+    assert rows % q == 0, f"rows {rows} not divisible by rs axis size {q}"
+    out = jnp.zeros((rows // q, d * m_loc), out_dtype)
+    gath = jnp.zeros((w.shape[0], d * m_loc), w.dtype) if return_gathered \
+        else None
+    cur = w
+    for s in range(d):
+        # issue the transfer of the NEXT weight block before consuming this
+        # one — the inner ring below has no data dependence on it
+        nxt = lax.ppermute(cur, ag_axis, ring_perm(d, 1)) if s < d - 1 \
+            else None
+        src = (idx - s) % d                # originating rank of `cur`
+        blk = ring_matmul_reducescatter(x, cur, rs_axis, mm=mm)
+        out = lax.dynamic_update_slice(out, blk.astype(out_dtype),
+                                       (0, src * m_loc))
+        if return_gathered:
+            gath = lax.dynamic_update_slice(gath, cur, (0, src * m_loc))
+        cur = nxt
+    return (out, gath) if return_gathered else out
+
+
+def ring_matmul_reducescatter_2d_t(g, x, rs_axis: str, ag_axis: str, *,
+                                   mm: str = "auto"):
+    """``reduce_scatter(all_gather(g, rows over ag_axis)ᵀ @ x, rows over
+    rs_axis)`` — the TRANSPOSE 2-D schedule (the dw of the paired VJP).
+
+    g: per-shard ``[t_loc, M]`` (row block of the logical ``[q·t_loc, M]``
+    cotangent, gathered over ``q = size(ag_axis)``), x: ``[q·t_loc, K]``
+    shard-local -> ``[M/d, K]`` summed over ``rs_axis``
+    (``d = size(rs_axis)``; M divisible by d).
+
+    Relative to the forward 2-D schedule both axes swap roles AND the
+    gathered dim is CONTRACTED away (like ``matmul_accumulate`` vs the
+    row-block rings): the OUTER ring is the travelling output accumulator
+    over ``rs_axis``; per outer step the needed ``[t_loc, M/d]`` COLUMN
+    SLICE of the cotangent streams around ``ag_axis`` (inner ring,
+    issue-before-consume), so the full cotangent crosses the gather axis
+    exactly once in total.
+    """
+    d = axis_size(rs_axis)
+    out_dtype = jnp.result_type(g.dtype, x.dtype)
+    q = axis_size(ag_axis)
+    M = g.shape[-1]
+    assert M % d == 0, f"cols {M} not divisible by rs axis size {d}"
+    m_loc = M // d
+    t_loc = g.shape[0]
+    assert x.shape[0] == q * t_loc, (g.shape, x.shape, q)
+    idx_rs = axis_index(rs_axis)
+    idx_ag = axis_index(ag_axis)
+    acc = None
+    for s in range(d):
+        # travelling-accumulator target of this outer step (same block
+        # order as ring_matmul_reducescatter)
+        blk_id = (idx_rs + (d - 1 - s)) % d
+        cur = lax.dynamic_slice(g, (0, blk_id * m_loc), (t_loc, m_loc))
+        contrib = None
+        for t in range(q):
+            # inner contract-stream: cotangent slice t+1 in flight while
+            # slice t multiplies its matching x row block
+            nxt = lax.ppermute(cur, ag_axis, ring_perm(q, 1)) \
+                if t < q - 1 else None
+            src = (idx_ag - t) % q         # originating rank of `cur`
+            xblk = lax.dynamic_slice_in_dim(x, src * t_loc, t_loc, axis=0)
+            c = _local_mm(jnp.swapaxes(cur, 0, 1), xblk, mm).astype(out_dtype)
+            contrib = c if contrib is None else contrib + c
+            cur = nxt
+        acc = contrib if acc is None else acc + contrib
+        if s < d - 1:
+            acc = lax.ppermute(acc, rs_axis, ring_perm(d, 1))
+    return acc
 
 
 # ---------------------------------------------------------------------------

@@ -1,14 +1,28 @@
-"""Tier-3 collective matmul: the single-kernel RDMA ring (TPU only).
+"""Tier-3 collective matmul: the single-kernel RDMA ring (TPU only) + its
+interpret-mode CPU test tier.
 
 A Pallas kernel that drives ``make_async_remote_copy`` sends itself
 (double-buffered comm scratch, per-slot DMA semaphores, neighbour barrier) —
 the full latency-hiding schedule with no XLA scheduling dependence.
 
-This module is TPU-only and imported LAZILY: the ``fused_ring`` dispatcher
-impl (core/collectives.py) performs the backend check and only imports it
-when ``jax.default_backend() == "tpu"``, so CPU CI never loads this path
-(``make_async_remote_copy`` has no host interpret path across shard_map
-devices).
+The REAL kernel (``ring_allgather_matmul_rdma``) stays TPU-only: the
+``fused_ring`` dispatcher impl (core/collectives.py) performs the backend
+check (``on_tpu``) and only calls it on TPU — ``make_async_remote_copy``
+has no host interpret path across shard_map devices.  The module itself is
+now importable anywhere so CPU CI can exercise the ring's BLOCK logic:
+
+* ``ring_step_src`` / ``ring_step_slots`` — the per-step rank/double-buffer
+  indexing, shared verbatim by the RDMA kernel, the interpret tier, and
+  the protocol simulation (works on traced ints and Python ints alike).
+* ``ring_schedule`` — the flow-control protocol (sends, DMA waits, credit
+  waits/grants per step) as plain data, mirroring the kernel's ``pl.when``
+  predicates; the CPU test simulates it and checks credits balance and no
+  slot is overwritten before its reader consumed it.
+* ``ring_allgather_matmul_blocks`` — one rank's grid schedule as a
+  single-device Pallas kernel with the DMA arrivals emulated from the full
+  chunk array (``interpret=True`` on CPU): same src/slot/output-row
+  indexing, no semaphores or remote copies — grid/indexing equivalence vs
+  the ppermute reference without TPU hardware.
 """
 from __future__ import annotations
 
@@ -22,11 +36,50 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core._axis import axis_size
 
-__all__ = ["ring_allgather_matmul_rdma"]
+__all__ = ["ring_allgather_matmul_rdma", "ring_allgather_matmul_blocks",
+           "ring_step_src", "ring_step_slots", "ring_schedule"]
 
 # jax 0.4.x names this TPUCompilerParams; new jax uses CompilerParams
 _CompilerParams = getattr(pltpu, "CompilerParams", None) or \
     getattr(pltpu, "TPUCompilerParams")
+
+
+def ring_step_src(my, s, p: int):
+    """Originating rank of the chunk resident at ring step ``s`` on rank
+    ``my`` — the output-row placement index.  Works traced (``my``/``s``
+    jax ints inside a kernel) and as plain Python ints (simulation)."""
+    return (my - s + p) % p
+
+
+def ring_step_slots(s):
+    """(consume, send-target) double-buffer slots of ring step ``s``."""
+    return s % 2, (s + 1) % 2
+
+
+def ring_schedule(p: int) -> list[dict]:
+    """The RDMA ring's per-step flow-control protocol as data — one dict
+    per grid step, mirroring the kernel's ``pl.when`` predicates:
+
+    ``slot``/``nxt``   consume / send-target buffer slots,
+    ``send``           issue an RDMA to the right neighbour (s < p-1),
+    ``wait_credit``    burn a credit from the right neighbour before the
+                       send may re-target its slot (1 <= s < p-1),
+    ``wait_dma``       block on the send+recv semaphores (s < p-1),
+    ``grant_credit``   tell the left neighbour our slot is consumed
+                       (s < p-2 — the final slots are never reused).
+
+    The CPU protocol simulation replays this against a p-device model and
+    asserts safety (no overwrite of an unconsumed slot) and liveness
+    (credits balance to zero, every chunk delivered)."""
+    steps = []
+    for s in range(p):
+        slot, nxt = ring_step_slots(s)
+        steps.append({"s": s, "slot": slot, "nxt": nxt,
+                      "send": s < p - 1,
+                      "wait_credit": 1 <= s < p - 1,
+                      "wait_dma": s < p - 1,
+                      "grant_credit": s < p - 2})
+    return steps
 
 
 def _agmm_rdma_kernel(x_ref, w_ref, o_ref, gath_ref, comm_buf, send_sem,
@@ -57,8 +110,7 @@ def _agmm_rdma_kernel(x_ref, w_ref, o_ref, gath_ref, comm_buf, send_sem,
         pltpu.semaphore_wait(bar, 2)
         comm_buf[0] = x_ref[...]
 
-    slot = lax.rem(s, 2)
-    nxt = lax.rem(s + 1, 2)
+    slot, nxt = ring_step_slots(s)
 
     @pl.when(jnp.logical_and(s >= 1, s < p - 1))
     def _flow_control():
@@ -78,7 +130,7 @@ def _agmm_rdma_kernel(x_ref, w_ref, o_ref, gath_ref, comm_buf, send_sem,
         rdma.start()
 
     # matmul the chunk we hold while the RDMA is in flight
-    src = lax.rem(my - s + p, p)
+    src = ring_step_src(my, s, p)
     n = x_ref.shape[0]
     blk = comm_buf[slot]
     acc_scr[...] = jax.lax.dot_general(
@@ -137,3 +189,72 @@ def ring_allgather_matmul_rdma(x, w, axis: str, *,
             has_side_effects=True, collective_id=collective_id),
     )(x, w)
     return (out, gath) if return_gathered else out
+
+
+# ---------------------------------------------------------------------------
+# interpret-mode CPU tier: the same grid schedule, DMA arrivals emulated
+# ---------------------------------------------------------------------------
+
+
+def _agmm_block_kernel(xall_ref, w_ref, o_ref, gath_ref, comm_buf, acc_scr,
+                       *, p: int, my: int):
+    """One rank's view of the RDMA grid: identical slot/src/output-row
+    indexing (shared helpers), with the remote copy replaced by reading
+    the chunk the DMA WOULD deliver from the full chunk array — so a wrong
+    slot rotation or src formula scrambles the output vs the reference."""
+    s = pl.program_id(0)
+    slot, nxt = ring_step_slots(s)
+
+    @pl.when(s == 0)
+    def _seed():
+        comm_buf[0] = pl.load(
+            xall_ref, (pl.ds(my, 1), slice(None), slice(None)))[0]
+
+    @pl.when(s < p - 1)
+    def _send():
+        # the step-s RDMA targets slot `nxt` with the chunk this rank will
+        # consume at step s+1 (originated by ring_step_src(my, s+1, p))
+        arriving = pl.load(
+            xall_ref, (pl.ds(ring_step_src(my, s + 1, p), 1),
+                       slice(None), slice(None)))[0]
+        comm_buf[nxt] = arriving
+
+    src = ring_step_src(my, s, p)
+    n = xall_ref.shape[1]
+    blk = comm_buf[slot]
+    acc_scr[...] = jax.lax.dot_general(
+        blk, w_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    o_ref[pl.ds(src * n, n), :] = acc_scr[...].astype(o_ref.dtype)
+    gath_ref[pl.ds(src * n, n), :] = blk
+
+
+def ring_allgather_matmul_blocks(x_all, w, my: int, *,
+                                 interpret: bool = True):
+    """CPU tier of the RDMA ring: rank ``my``'s (p,)-grid block schedule
+    over the full chunk array ``x_all [p, n, K]`` — exercised with
+    ``interpret=True`` in CI so the block logic is covered without TPU
+    hardware.  Returns ``(out [p·n, M], gathered [p·n, K])`` exactly like
+    ``ring_allgather_matmul_rdma(..., return_gathered=True)``."""
+    p, n, k = x_all.shape
+    m = w.shape[-1]
+    out_dtype = jnp.result_type(x_all.dtype, w.dtype)
+    return pl.pallas_call(
+        functools.partial(_agmm_block_kernel, p=p, my=my),
+        grid=(p,),
+        in_specs=[pl.BlockSpec((p, n, k), lambda s: (0, 0, 0),
+                               memory_space=pltpu.VMEM),
+                  pl.BlockSpec((k, m), lambda s: (0, 0),
+                               memory_space=pltpu.VMEM)],
+        out_specs=(pl.BlockSpec((p * n, m), lambda s: (0, 0),
+                                memory_space=pltpu.VMEM),
+                   pl.BlockSpec((p * n, k), lambda s: (0, 0),
+                                memory_space=pltpu.VMEM)),
+        out_shape=(jax.ShapeDtypeStruct((p * n, m), out_dtype),
+                   jax.ShapeDtypeStruct((p * n, k), x_all.dtype)),
+        scratch_shapes=[
+            pltpu.VMEM((2, n, k), x_all.dtype),    # double-buffered chunks
+            pltpu.VMEM((n, m), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x_all, w)

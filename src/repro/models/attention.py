@@ -387,7 +387,8 @@ def attention(p: dict, cfg: ModelConfig, x, *, pos, kind: str = "causal",
                          kv_len_valid=kv_valid)
         o = _sdpa(q, k_use, v_use, mask, softcap=cfg.attn_softcap)
         o = o.reshape(*x.shape[:-1], hq_loc * hd)
-    # fsdp_dim=1 fuses the data-axis w_o gather into the o-projection
+    # fsdp_dim=1 fuses the data-axis w_o gather AND the model-axis
+    # reduce-scatter around the o-projection (the 2-D collective matmul)
     y = ops.row_matmul(o, p["w_o"], fsdp_dim=1)
     return AttnOut(y=y, cache=new_cache)
 

@@ -58,8 +58,9 @@ def mlp(params, x, *, act=jax.nn.silu):
     # matmul (matmul_accumulate — the contraction-dim ring)
     h = ops.col_matmul(x, params["w_in"], fsdp_dim=0)
     g = ops.col_matmul(x, params["w_gate"], fsdp_dim=0)
-    # fsdp_dim=1: the data-axis gather of w_out is fused into the matmul
-    # (allgather_matmul — tuner picks ring overlap vs unfused per shape)
+    # fsdp_dim=1: the data-axis w_out gather AND the model-axis
+    # reduce-scatter both fuse around the matmul (matmul_reducescatter_2d
+    # — tuner picks the nested ring vs unfused per 2-D cell)
     return ops.row_matmul(act(g) * h, params["w_out"], fsdp_dim=1)
 
 

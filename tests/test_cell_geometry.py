@@ -289,3 +289,57 @@ def test_compat_shims_probe_native_api():
     assert len(leaves) == 3
     mesh = compat.mesh_with_axis_types(np.array(jax.devices()[:1]), ("x",))
     assert mesh.shape["x"] == 1
+
+
+def test_tune_trace_geometryless_fused_cell_note_in_footer():
+    """Regression (v1-trace inf skip): a fused cell with no recorded GEMM
+    used to vanish into a generic 'default impl unmeasurable' note; the
+    report must now say WHY (no geometry — re-record) and the note must
+    surface in the tuner report's summary footer."""
+    t = Trace([TraceEntry(OpCell("allgather_matmul", measure.axis_size(),
+                                 4096), "decode", "default", 4)])
+    backend = tuner.MeasuredBackend(K=2, max_nrep=3)
+    rep = tuner.tune_trace(t, backend=backend)
+    geom_notes = [n for n in rep.notes if "no recorded GEMM geometry" in n]
+    assert geom_notes, rep.notes
+    assert "re-record" in geom_notes[0]
+    assert "v1 trace" in geom_notes[0]
+    # the note reaches the human-facing report footer
+    assert "no recorded GEMM geometry" in rep.summary()
+    # and the cell contributed nothing silently: no measurement, no est
+    assert rep.measurements == []
+    assert rep.est_default_s.get("decode", 0.0) == 0.0
+
+
+def test_opcell_2d_scaled_to_keeps_geometry_consistent():
+    """NREP probes of 2-D cells rescale the payload-tied dim: the forward
+    scales the streamed weight's width (mm_n), the transpose the streamed
+    cotangent's rows (mm_k)."""
+    fwd = OpCell("matmul_reducescatter_2d", 4, 64 * 8 * 4, "float32",
+                 mm_k=64, mm_m=32, mm_n=4 * 8, mm_role="2d", p2=2)
+    s = fwd.scaled_to(64 * 8 * 4 * 16)
+    assert s.mm_k == 64 and s.mm_m == 32 and s.p2 == 2
+    assert s.nbytes == (s.mm_n // 4) * 64 * 4
+    xp = OpCell("matmul_reducescatter_2d", 2, 6 * 32 * 4, "float32",
+                mm_k=2 * 6, mm_m=32, mm_n=16, mm_role="2dT", p2=4)
+    s2 = xp.scaled_to(6 * 32 * 4 * 8)
+    assert s2.mm_m == 32 and s2.mm_n == 16 and s2.p2 == 4
+    assert s2.nbytes == (s2.mm_k // 2) * 32 * 4
+    # minimal floor: one row/col block, never a literal byte
+    assert fwd.scaled_to(1).mm_n == 4
+    assert xp.scaled_to(1).mm_k == 2
+
+
+def test_problem_shapes_2d_cells():
+    """2-D replay shapes: the payload keeps its per-shard form (weight col
+    block / cotangent row block), the stationary operand the recorded
+    per-rank shape, rows padded to divide the inner axis."""
+    fwd = OpCell("matmul_reducescatter_2d", 2, 0, "float32",
+                 mm_k=8, mm_m=6, mm_n=2 * 5, mm_role="2d", p2=2)
+    assert measure.problem_shapes(fwd) == {"x": (8, 5), "w": (6, 8)}
+    xp = OpCell("matmul_reducescatter_2d", 2, 0, "float32",
+                mm_k=2 * 3, mm_m=8, mm_n=4, mm_role="2dT", p2=2)
+    assert measure.problem_shapes(xp) == {"x": (3, 8), "w": (6, 4)}
+    with pytest.raises(ValueError, match="no recorded matmul geometry"):
+        measure.problem_shapes(
+            OpCell("matmul_reducescatter_2d", 2, 64))

@@ -392,7 +392,7 @@ def test_tune_trace_measured_backend_skips_foreign_axis_sizes():
     assert backend.supported_axis_size == 1
     rep = tuner.tune_trace(t, backend=backend)
     assert rep.phase_profiles == {}
-    assert any("p != host axis size" in n for n in rep.notes)
+    assert any("p=4 != host axis size" in n for n in rep.notes)
     assert rep.measurements == []
 
 

@@ -1,0 +1,438 @@
+"""The weight-stationary 2-D collective matmul: ``matmul_reducescatter_2d``
+end-to-end.
+
+Nested-ring kernel (fwd + transpose) vs the dense oracle and the unfused
+composition over a REAL two-axis (vmap) mesh, interpret-mode Pallas
+blocks, the paired custom VJP (dx via allgather_matmul, dw via the fused
+2-D transpose schedule), the rewired ``row_matmul(fsdp_dim=1)`` site
+bit-exact vs the legacy ``tp_allreduce(fsdp_matmul(...))`` composition,
+and the tuner flipping ``fused_ring2d`` on modeled must-win cells.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import api, costmodel as cm, tuner
+from repro.core import collectives as C
+from repro.core.cell import OpCell
+from repro.core.profiles import ProfileStore
+from repro.core.trace import Trace, TraceEntry
+from repro.dist import ops
+from repro.kernels.collective_matmul import (
+    ring_matmul_reducescatter_2d, ring_matmul_reducescatter_2d_t)
+
+MESHES = ((2, 2), (2, 3), (4, 2))
+
+
+@pytest.fixture()
+def rng():
+    """Module-local PRNG: shadows the session-scoped fixture so this new
+    file does not shift the shared draw sequence of data-dependent tests
+    that run after it (e.g. the MoE local-capacity divergence batch)."""
+    return np.random.default_rng(20170701)
+
+
+def _int_cot(y):
+    """Integer-valued cotangent: keeps every sum exactly representable so
+    reduction ORDER cannot change bits — the bit-exactness instrument."""
+    return jnp.round(
+        jnp.cos(jnp.arange(y.size, dtype=jnp.float32)).reshape(y.shape) * 4)
+
+
+def _shard_fwd(rng, d, q, T, kl, ml, *, integer=False):
+    """(x_sh [d,q,T,kl], w_sh [d,q,kl,ml], X, W): the row_matmul layout —
+    model rank j holds x's j-th K-slice (replicated over data) and the
+    (j K-rows, i col-block) weight shard."""
+    def draw(shape):
+        a = rng.normal(size=shape)
+        return (np.round(a * 2) if integer else a).astype(np.float32)
+    X = draw((T, q * kl))
+    W = draw((q * kl, d * ml))
+    x_sh = np.stack([np.stack([X[:, j * kl:(j + 1) * kl] for j in range(q)])
+                     for i in range(d)])
+    w_sh = np.stack([np.stack([W[j * kl:(j + 1) * kl, i * ml:(i + 1) * ml]
+                               for j in range(q)]) for i in range(d)])
+    return jnp.asarray(x_sh), jnp.asarray(w_sh), X, W
+
+
+def _vmap2(f, outer="ag", inner="rs"):
+    return jax.vmap(jax.vmap(f, axis_name=inner), axis_name=outer)
+
+
+# ---------------------------------------------------------------------------
+# the nested-ring kernel vs the dense oracle (two-axis vmap mesh)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("d,q", MESHES)
+@pytest.mark.parametrize("dtype,atol", [(np.float32, 1e-4),
+                                        (np.float16, 2e-2)])
+def test_ring_2d_matches_oracle(rng, d, q, dtype, atol):
+    T, kl, ml = 2 * q, 3, 4
+    x_sh, w_sh, X, W = _shard_fwd(rng, d, q, T, kl, ml)
+    x_sh, w_sh = x_sh.astype(dtype), w_sh.astype(dtype)
+    got = _vmap2(lambda a, b: ring_matmul_reducescatter_2d(
+        a, b, "rs", "ag"))(x_sh, w_sh)
+    want = X.astype(np.float32) @ W.astype(np.float32)
+    tl = T // q
+    for i in range(d):
+        for j in range(q):
+            np.testing.assert_allclose(
+                np.asarray(got, np.float32)[i, j],
+                want[j * tl:(j + 1) * tl], atol=atol)
+
+
+def test_ring_2d_returns_gathered(rng):
+    d, q, T, kl, ml = 2, 2, 4, 3, 5
+    x_sh, w_sh, X, W = _shard_fwd(rng, d, q, T, kl, ml)
+    _, gath = _vmap2(lambda a, b: ring_matmul_reducescatter_2d(
+        a, b, "rs", "ag", return_gathered=True))(x_sh, w_sh)
+    for j in range(q):
+        np.testing.assert_allclose(np.asarray(gath)[0, j],
+                                   W[j * kl:(j + 1) * kl], atol=1e-6)
+
+
+def test_ring_2d_pallas_interpret_blocks(rng):
+    """The per-chunk matmuls of the nested ring run as interpret-mode
+    Pallas block kernels (mm='pallas') — same numbers as the jnp path."""
+    d, q, T, kl, ml = 2, 2, 4, 3, 4
+    x_sh, w_sh, X, W = _shard_fwd(rng, d, q, T, kl, ml)
+    ref = _vmap2(lambda a, b: ring_matmul_reducescatter_2d(
+        a, b, "rs", "ag", mm="jnp"))(x_sh, w_sh)
+    got = _vmap2(lambda a, b: ring_matmul_reducescatter_2d(
+        a, b, "rs", "ag", mm="pallas"))(x_sh, w_sh)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=1e-5)
+    gt = _vmap2(lambda g, b: ring_matmul_reducescatter_2d_t(
+        g, b, "rs", "ag", mm="pallas"), outer="rs", inner="ag")(
+        *_xpose_operands(rng, 2, 2)[0:2])
+    assert np.isfinite(np.asarray(gt)).all()
+
+
+def _xpose_operands(rng, d, q, T=None, kl=3, M=None):
+    T = T or 2 * q
+    M = M or 2 * d
+    tl = T // q
+    G = rng.normal(size=(T, M)).astype(np.float32)
+    Xs = [rng.normal(size=(T, kl)).astype(np.float32) for _ in range(d)]
+    g_sh = jnp.asarray(np.stack([np.stack([G[j * tl:(j + 1) * tl]
+                                           for j in range(q)])
+                                 for i in range(d)]))
+    x_sh = jnp.asarray(np.stack([np.broadcast_to(Xs[i], (q, T, kl)).copy()
+                                 for i in range(d)]))
+    want = sum(G.T @ Xs[i] for i in range(d))       # [M, kl]
+    return g_sh, x_sh, want, M // d
+
+
+@pytest.mark.parametrize("d,q", MESHES)
+def test_ring_2d_transpose_matches_oracle(rng, d, q):
+    """The dw schedule: gather axis CONTRACTED, scatter axis summing the
+    per-data-rank contributions (the FSDP gradient sum)."""
+    g_sh, x_sh, want, ml = _xpose_operands(rng, d, q)
+    got = np.asarray(jax.vmap(jax.vmap(
+        lambda g, b: ring_matmul_reducescatter_2d_t(g, b, "rs", "ag"),
+        axis_name="ag"), axis_name="rs")(g_sh, x_sh))
+    for i in range(d):
+        for j in range(q):
+            np.testing.assert_allclose(got[i, j],
+                                       want[i * ml:(i + 1) * ml], atol=1e-4)
+
+
+def test_registry_impls_semantics(rng):
+    """Every registered impl (both directions) against the dense oracle —
+    the streamed operand is the FIRST argument of the impl fn."""
+    d, q, T, kl, ml = 2, 2, 4, 3, 4
+    x_sh, w_sh, X, W = _shard_fwd(rng, d, q, T, kl, ml)
+    want = X @ W
+    tl = T // q
+    for name in C.impl_names("matmul_reducescatter_2d"):
+        fn = C.REGISTRY["matmul_reducescatter_2d"][name].fn
+        got = np.asarray(_vmap2(
+            lambda wb, xb, fn=fn: fn(wb, "ag", x=xb, rs_axis="rs"))(
+            w_sh, x_sh))
+        for i in range(d):
+            for j in range(q):
+                np.testing.assert_allclose(got[i, j],
+                                           want[j * tl:(j + 1) * tl],
+                                           atol=1e-4, err_msg=name)
+    g_sh, xg_sh, wantT, mlT = _xpose_operands(rng, d, q)
+    for name in C.impl_names("matmul_reducescatter_2d"):
+        fn = C.REGISTRY["matmul_reducescatter_2d"][name].fn
+        got = np.asarray(jax.vmap(jax.vmap(
+            lambda gb, xb, fn=fn: fn(gb, "ag", x=xb, rs_axis="rs",
+                                     xpose=True),
+            axis_name="ag"), axis_name="rs")(g_sh, xg_sh))
+        for i in range(d):
+            for j in range(q):
+                np.testing.assert_allclose(got[i, j],
+                                           wantT[i * mlT:(i + 1) * mlT],
+                                           atol=1e-4, err_msg=name)
+
+
+# ---------------------------------------------------------------------------
+# dist op: the paired VJP (sharded cotangent), fused vs default
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("impl", ["default", "fused_ring2d"])
+def test_mm2d_dist_op_grads_fused_vs_default(rng, impl):
+    d, q, T, kl, ml = 2, 2, 4, 3, 4
+    x_sh, w_sh, X, W = _shard_fwd(rng, d, q, T, kl, ml, integer=True)
+
+    def op2d(a, b):
+        return ops.matmul_reducescatter_2d(a, b, "model", "data")
+
+    def inner(a, b):
+        y = op2d(a, b)
+        g = jax.grad(lambda aa, bb: jnp.sum(op2d(aa, bb) * _int_cot(y)),
+                     argnums=(0, 1))(a, b)
+        return y, g
+
+    def run(force):
+        with api.tuned(force=force) as ctx:
+            y, g = jax.vmap(jax.vmap(inner, axis_name="model"),
+                            axis_name="data")(x_sh, w_sh)
+        return np.asarray(y), np.asarray(g[0]), np.asarray(g[1]), ctx
+
+    yd, xd, wd, _ = run({})
+    yf, xf, wf, ctx = run({"matmul_reducescatter_2d": impl,
+                           "allgather_matmul":
+                               "fused_ring" if impl != "default"
+                               else "default"})
+    # integer-valued operands: every schedule is bit-exact
+    np.testing.assert_array_equal(yd, yf)
+    np.testing.assert_array_equal(xd, xf)
+    np.testing.assert_array_equal(wd, wf)
+    recs = {(r.op, r.cell.mm_role, r.phase) for r in ctx.record}
+    assert ("matmul_reducescatter_2d", "2d", "fwd") in recs
+    assert ("matmul_reducescatter_2d", "2dT", "bwd") in recs   # fused dw
+    assert ("allgather_matmul", "gather", "bwd") in recs       # fused dx
+    cell = next(r.cell for r in ctx.record if r.cell.mm_role == "2d")
+    assert cell.p == d and cell.p2 == q and cell.world() == d * q
+
+
+def test_mm2d_grads_match_unfused_autodiff(rng):
+    """The custom VJP vs jax's own autodiff THROUGH the unfused default
+    composition (all_gather + matmul + psum_scatter) — same math."""
+    d, q, T, kl, ml = 2, 3, 6, 2, 3
+    x_sh, w_sh, X, W = _shard_fwd(rng, d, q, T, kl, ml)
+
+    fn = C.REGISTRY["matmul_reducescatter_2d"]["default"].fn
+
+    def raw(a, b):       # plain composition, default autodiff
+        return fn(b, "data", x=a, rs_axis="model")
+
+    def op2d(a, b):
+        return ops.matmul_reducescatter_2d(a, b, "model", "data")
+
+    def grads(f):
+        def inner(a, b):
+            y = f(a, b)
+            return jax.grad(lambda aa, bb: jnp.sum(f(aa, bb) * _int_cot(y)),
+                            argnums=(0, 1))(a, b)
+        return jax.vmap(jax.vmap(inner, axis_name="model"),
+                        axis_name="data")(x_sh, w_sh)
+
+    gx, gw = grads(op2d)
+    rx, rw = grads(raw)
+    np.testing.assert_allclose(np.asarray(gx), np.asarray(rx), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(gw), np.asarray(rw), atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# the rewired row_matmul(fsdp_dim=1) site
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("impl", ["default", "fused_ring2d"])
+@pytest.mark.parametrize("d,q", MESHES)
+def test_row_matmul_fsdp1_bit_exact_vs_legacy(rng, d, q, impl):
+    """Acceptance: row_matmul(fsdp_dim=1) through the 2-D op — under BOTH
+    default dispatch and fused_ring2d — must match the legacy
+    tp_allreduce(fsdp_matmul(...)) composition BIT-FOR-BIT in fwd and
+    grads (integer-valued operands make every reduction order exact)."""
+    T, kl, ml = 2 * q, 3, 4
+    x_sh, w_sh, X, W = _shard_fwd(rng, d, q, T, kl, ml, integer=True)
+
+    new = lambda a, b: ops.row_matmul(a, b, "model", fsdp_dim=1)
+    leg = lambda a, b: ops.tp_allreduce(
+        ops.fsdp_matmul(a, b, "data"), "model")
+
+    def run(fun, force):
+        def inner(a, b):
+            y = fun(a, b)
+            g = jax.grad(lambda aa, bb: jnp.sum(fun(aa, bb) * _int_cot(y)),
+                         argnums=(0, 1))(a, b)
+            return y, g
+        with api.tuned(force=force) as ctx:
+            y, g = jax.vmap(jax.vmap(inner, axis_name="model"),
+                            axis_name="data")(x_sh, w_sh)
+        return np.asarray(y), np.asarray(g[0]), np.asarray(g[1]), ctx
+
+    y0, gx0, gw0, ctx = run(new, {"matmul_reducescatter_2d": impl})
+    yl, gxl, gwl, _ = run(leg, {})
+    np.testing.assert_array_equal(y0, yl)
+    np.testing.assert_array_equal(gx0, gxl)
+    np.testing.assert_array_equal(gw0, gwl)
+    # oracle + the recorded mix: 2-D fwd cell, replicating AG, fused 2-D
+    # transpose dw in the bwd phase
+    np.testing.assert_allclose(y0[0, 0], X @ W, atol=1e-4)
+    recs = {(r.op, r.cell.mm_role, r.phase) for r in ctx.record}
+    assert ("matmul_reducescatter_2d", "2d", "fwd") in recs
+    assert ("allgather", "", "fwd") in recs
+    assert ("matmul_reducescatter_2d", "2dT", "bwd") in recs
+
+
+def test_row_matmul_fsdp1_records_no_monolithic_allreduce(rng):
+    """ROADMAP motivation: the hottest serving path used to pay a
+    model-axis allreduce no guideline could price against a fused
+    alternative — the rewired site must not emit one."""
+    d, q = 2, 2
+    x_sh, w_sh, _, _ = _shard_fwd(rng, d, q, 2 * q, 3, 4)
+    with api.tuned() as ctx:
+        jax.vmap(jax.vmap(
+            lambda a, b: ops.row_matmul(a, b, "model", fsdp_dim=1),
+            axis_name="model"), axis_name="data")(x_sh, w_sh)
+    assert not any(r.op == "allreduce" for r in ctx.record), \
+        [tuple(r) for r in ctx.record]
+    assert any(r.op == "matmul_reducescatter_2d" for r in ctx.record)
+
+
+def test_row_matmul_fsdp1_nondivisible_rows_falls_back(rng):
+    """T=3 rows on a model axis of 2: the 2-D op needs divisible rows, so
+    the site must fall back to the legacy 1-D composition — same values."""
+    d, q, T, kl, ml = 2, 2, 3, 3, 4
+    X = rng.normal(size=(T, q * kl)).astype(np.float32)
+    W = rng.normal(size=(q * kl, d * ml)).astype(np.float32)
+    x_sh = jnp.asarray(np.stack([np.stack(
+        [X[:, j * kl:(j + 1) * kl] for j in range(q)]) for i in range(d)]))
+    w_sh = jnp.asarray(np.stack([np.stack(
+        [W[j * kl:(j + 1) * kl, i * ml:(i + 1) * ml] for j in range(q)])
+        for i in range(d)]))
+    with api.tuned() as ctx:
+        y = jax.vmap(jax.vmap(
+            lambda a, b: ops.row_matmul(a, b, "model", fsdp_dim=1),
+            axis_name="model"), axis_name="data")(x_sh, w_sh)
+    np.testing.assert_allclose(np.asarray(y)[0, 0], X @ W, atol=1e-4)
+    assert not any(r.op == "matmul_reducescatter_2d" for r in ctx.record)
+    assert any(r.op == "allreduce" for r in ctx.record)   # legacy AR path
+
+
+def test_mm2d_no_axis_degrades(rng):
+    x = jnp.asarray(rng.normal(size=(4, 6)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(6, 3)).astype(np.float32))
+    np.testing.assert_array_equal(
+        np.asarray(ops.matmul_reducescatter_2d(x, w)),
+        np.asarray(jnp.matmul(x, w)))
+    # only the rs axis bound: 1-D matmul_reducescatter semantics
+    got = jax.vmap(lambda a: ops.matmul_reducescatter_2d(
+        jnp.broadcast_to(x, x.shape), w, "model", "data"),
+        axis_name="model")(jnp.zeros((2, 1)))
+    assert got.shape == (2, 2, 3)
+
+
+# ---------------------------------------------------------------------------
+# tuner: must-win 2-D cells (the EXT guideline per cell)
+# ---------------------------------------------------------------------------
+
+
+def test_tuner_selects_fused2d_large_default_small():
+    rep = tuner.tune(ops=["matmul_reducescatter_2d"],
+                     sizes=(64, 1024, 1_048_576, 16_777_216),
+                     axis_size=8, backend=tuner.CostModelBackend(cm.V5E_ICI))
+    prof = rep.profiles
+    assert prof.lookup("matmul_reducescatter_2d", 8, 16_777_216) == \
+        "fused_ring2d"
+    assert prof.lookup("matmul_reducescatter_2d", 8, 64) is None
+
+
+def test_latency_cell_prices_nested_overlap():
+    """The nested law max(outer_comm, per-step max(inner_comm, compute)):
+    a compute-heavy 2-D cell must flip to fused_ring2d, a sliver GEMM on
+    the same payload must keep the default (overhead on BOTH axes)."""
+    big = OpCell("matmul_reducescatter_2d", 8, 4_194_304, "float32",
+                 mm_k=1024, mm_m=8192, mm_n=8 * 1024, mm_role="2d", p2=8)
+    assert cm.latency_cell(big, "fused_ring2d", cm.V5E_ICI) < \
+        cm.latency_cell(big, "default", cm.V5E_ICI) * 0.9
+    sliver = OpCell("matmul_reducescatter_2d", 8, 4096, "float32",
+                    mm_k=16, mm_m=8, mm_n=8 * 8, mm_role="2d", p2=8)
+    assert not (cm.latency_cell(sliver, "fused_ring2d", cm.V5E_ICI)
+                < cm.latency_cell(sliver, "default", cm.V5E_ICI) * 0.9)
+
+
+def test_tune_trace_emits_2d_geometry_profiles():
+    """Trace-replay tuning with recorded 2-D cells (cost-model backend):
+    the emitted profile is keyed on the 2-D geometry (incl. p2) and drives
+    dispatch through lookup_cell."""
+    big = OpCell("matmul_reducescatter_2d", 8, 4_194_304, "float32",
+                 mm_k=1024, mm_m=8192, mm_n=8 * 1024, mm_role="2d", p2=8)
+    small = OpCell("matmul_reducescatter_2d", 8, 4096, "float32",
+                   mm_k=16, mm_m=8, mm_n=8 * 8, mm_role="2d", p2=8)
+    t = Trace([TraceEntry(big, "fwd", "default", 10),
+               TraceEntry(small, "fwd", "default", 10)])
+    rep = tuner.tune_trace(t, backend=tuner.CostModelBackend(cm.V5E_ICI))
+    store = rep.store("fwd")
+    assert store is not None
+    assert store.lookup_cell(big) == "fused_ring2d"
+    # the sliver cell earned NO profile of its own (default kept); any hit
+    # it gets is the nearest-geometry fallback from the big cell's profile
+    assert store.get("matmul_reducescatter_2d", 8, small.geom()) is None
+    assert store.get("matmul_reducescatter_2d", 8, big.geom()) is not None
+    # nearest-geometry fallback: an unseen near-big shape resolves to the
+    # tuned 2-D profile; a different p2 must NOT
+    near = OpCell("matmul_reducescatter_2d", 8, 4_194_304, "float32",
+                  mm_k=1024, mm_m=16384, mm_n=8 * 1024, mm_role="2d", p2=8)
+    assert store.lookup_cell(near) == "fused_ring2d"
+    other_p2 = OpCell("matmul_reducescatter_2d", 8, 4_194_304, "float32",
+                      mm_k=1024, mm_m=8192, mm_n=8 * 1024, mm_role="2d",
+                      p2=4)
+    assert store.lookup_cell(other_p2) is None
+    assert rep.est_tuned_s["fwd"] < rep.est_default_s["fwd"]
+
+
+def test_measured_backend_skips_2d_world_mismatch():
+    """A 2-D cell whose p*p2 doesn't match the host device count is
+    note-skipped by the trace tuner, not crashed on."""
+    from repro.core import measure
+    cell = OpCell("matmul_reducescatter_2d", 8, 4096, "float32",
+                  mm_k=16, mm_m=8, mm_n=8 * 8, mm_role="2d", p2=8)
+    assert cell.world() == 64 != measure.axis_size()
+    t = Trace([TraceEntry(cell, "fwd", "default", 1)])
+    rep = tuner.tune_trace(t, backend=tuner.MeasuredBackend(K=2,
+                                                            max_nrep=3))
+    assert any("host axis size" in n for n in rep.notes)
+    assert rep.measurements == []
+
+
+def test_dispatch_profile_routes_2d_cell(rng):
+    """api.tuned(profiles=...) resolves a live 2-D dispatch through its
+    geometry profile."""
+    from repro.core.profiles import Profile, Range
+    d, q, T, kl, ml = 2, 2, 4, 3, 4
+    x_sh, w_sh, _, _ = _shard_fwd(rng, d, q, T, kl, ml)
+    geom = OpCell("matmul_reducescatter_2d", d, kl * q * ml * 4, "float32",
+                  mm_k=kl, mm_m=T, mm_n=d * ml, mm_role="2d",
+                  p2=q).geom()
+    store = ProfileStore([Profile(op="matmul_reducescatter_2d",
+                                  axis_size=d,
+                                  ranges=[Range(1, 10 ** 6, "fused_ring2d")],
+                                  geom=geom)])
+    with api.tuned(profiles=store) as ctx:
+        _vmap2(lambda a, b: api.matmul_reducescatter_2d(
+            a, b, "rs", "ag"))(x_sh, w_sh)
+    assert [r.impl for r in ctx.record] == ["fused_ring2d"]
+    assert ctx.record[0].cell.geom() == geom
+
+
+def test_mm2d_standalone_ragged_rows_clear_error(rng):
+    """The standalone dist op refuses ragged rows with an actionable error
+    (the reduce-scatter contract has no well-defined output) instead of
+    the raw psum_scatter divisibility crash."""
+    d, q = 2, 2
+    x_sh = jnp.asarray(rng.normal(size=(d, q, 3, 4)).astype(np.float32))
+    w_sh = jnp.asarray(rng.normal(size=(d, q, 4, 2)).astype(np.float32))
+    with pytest.raises(ValueError, match="row_matmul"):
+        jax.vmap(jax.vmap(
+            lambda a, b: ops.matmul_reducescatter_2d(a, b, "model", "data"),
+            axis_name="model"), axis_name="data")(x_sh, w_sh)

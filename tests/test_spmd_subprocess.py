@@ -196,6 +196,70 @@ print(json.dumps(out))
 """
 
 
+ROW2D_SCRIPT = r"""
+import os, json
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+from repro._compat import shard_map
+from repro.core import api
+from repro.dist import ops
+
+# (data, model) = (2, 2) mesh; integer-valued operands + cotangent keep
+# every reduction order exactly representable -> bit-exact comparisons
+d, q = 2, 2
+mesh = Mesh(np.array(jax.devices()).reshape(d, q), ("data", "model"))
+T, Kl, ml = 4, 3, 5                  # per-shard x [T, Kl], w [Kl, ml]
+rng = np.random.default_rng(7)
+X = jnp.asarray(np.round(rng.normal(size=(d * T, q * Kl)) * 2)
+                .astype(np.float32))
+W = jnp.asarray(np.round(rng.normal(size=(q * Kl, d * ml)) * 2)
+                .astype(np.float32))
+
+def cot(y):
+    return jnp.round(jnp.cos(jnp.arange(y.size, dtype=jnp.float32))
+                     .reshape(y.shape) * 4)
+
+def run(fun, force):
+    def body(xs, ws):
+        y = fun(xs, ws)
+        gx, gw = jax.grad(lambda a, b: jnp.sum(fun(a, b) * cot(y)),
+                          argnums=(0, 1))(xs, ws)
+        return y, gx, gw
+    sm = shard_map(body, mesh=mesh,
+                   in_specs=(P("data", "model"), P("model", "data")),
+                   out_specs=(P("data", None), P("data", "model"),
+                              P("model", "data")),
+                   check_vma=False)
+    with api.tuned(force=force) as ctx:
+        y, gx, gw = jax.jit(sm)(X, W)
+    return (np.asarray(y), np.asarray(gx), np.asarray(gw),
+            [(r.op, r.cell.p, r.cell.p2, r.cell.mm_role, r.impl, r.phase)
+             for r in ctx.record])
+
+new = lambda a, b: ops.row_matmul(a, b, "model", fsdp_dim=1)
+leg = lambda a, b: ops.tp_allreduce(ops.fsdp_matmul(a, b, "data"), "model")
+
+y0, gx0, gw0, rec0 = run(new, {})
+yl, gxl, gwl, recl = run(leg, {})
+yf, gxf, gwf, recf = run(new, {"matmul_reducescatter_2d": "fused_ring2d",
+                               "allgather_matmul": "fused_ring"})
+out = {
+  "default_bitexact": bool((y0 == yl).all() and (gx0 == gxl).all()
+                           and (gw0 == gwl).all()),
+  "fused_bitexact": bool((yf == yl).all() and (gxf == gxl).all()
+                         and (gwf == gwl).all()),
+  "oracle": float(np.abs(y0 - np.asarray(X) @ np.asarray(W)).max()),
+  "cells_2d": [r for r in rec0 if r[0] == "matmul_reducescatter_2d"],
+  "fused_impls": sorted({(r[0], r[4]) for r in recf
+                         if r[0] == "matmul_reducescatter_2d"}),
+  "monolithic_ar": any(r[0] == "allreduce" for r in rec0),
+  "legacy_ar": any(r[0] == "allreduce" for r in recl),
+}
+print(json.dumps(out))
+"""
+
+
 MEASURED_REPLAY_SCRIPT = r"""
 import os, json
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
@@ -203,13 +267,20 @@ import jax
 from repro.core import tuner
 from repro.core.trace import Trace, TraceEntry
 
+# a (2,2)-world 2-D cell IS replayable on the 4 host devices (the measured
+# backend builds the 2-axis mesh); the p=8 1-D cell is not and notes out
 t = Trace([TraceEntry.of("allreduce", 4, 1024, "decode", "default", 5),
-           TraceEntry.of("allreduce", 8, 1024, "decode", "default", 5)])
+           TraceEntry.of("allreduce", 8, 1024, "decode", "default", 5),
+           TraceEntry.of("matmul_reducescatter_2d", 2, 2 * 64 * 6 * 4,
+                         "decode", "default", 3, mm_k=64, mm_m=8,
+                         mm_n=2 * 6, mm_role="2d", p2=2)])
 backend = tuner.MeasuredBackend(K=2, max_nrep=3)
 rep = tuner.tune_trace(t, backend=backend)
 print(json.dumps({
     "sup": backend.supported_axis_size,
     "n_meas": len(rep.measurements),
+    "n_meas_2d": sum(1 for m in rep.measurements
+                     if m.cell.op == "matmul_reducescatter_2d"),
     "skips": [n for n in rep.notes if "host axis size" in n],
     "est_default": rep.est_default_s.get("decode", 0.0),
 }))
@@ -236,14 +307,39 @@ def test_fused_collective_matmul_spmd_equivalence_4dev():
 
 
 @pytest.mark.slow
+def test_row_matmul_2d_spmd_equivalence_4dev():
+    """Acceptance: on a REAL (data, model) = (2, 2) shard_map mesh,
+    row_matmul(fsdp_dim=1) through `matmul_reducescatter_2d` — under
+    default dispatch AND forced fused_ring2d — is bit-exact (fwd and
+    grads) vs the legacy tp_allreduce(fsdp_matmul(...)) composition, the
+    recorded cells carry the 2-D geometry (p=2, p2=2, roles 2d/2dT), and
+    the monolithic model-axis allreduce is GONE from the rewired path."""
+    r = _run(ROW2D_SCRIPT)
+    assert r.returncode == 0, r.stdout + r.stderr[-2000:]
+    out = json.loads(r.stdout.strip().splitlines()[-1])
+    assert out["default_bitexact"] is True, out
+    assert out["fused_bitexact"] is True, out
+    assert out["oracle"] == 0.0, out
+    roles = {(c[1], c[2], c[3], c[5]) for c in out["cells_2d"]}
+    assert (2, 2, "2d", "fwd") in roles, out
+    assert (2, 2, "2dT", "bwd") in roles, out      # the fused transpose dw
+    assert out["fused_impls"] == [["matmul_reducescatter_2d",
+                                   "fused_ring2d"]], out
+    assert out["monolithic_ar"] is False, out      # ROADMAP item closed
+    assert out["legacy_ar"] is True, out           # ...and it WAS there
+
+
+@pytest.mark.slow
 def test_measured_backend_trace_replay_4dev():
     """ROADMAP item: replay a recorded trace's cells on real host devices —
-    the p=4 cell is wall-clock measured, the p=8 cell skips with a note."""
+    the p=4 cell AND the (2,2)-world 2-D cell are wall-clock measured
+    (both impls each), the p=8 cell skips with a note."""
     r = _run(MEASURED_REPLAY_SCRIPT)
     assert r.returncode == 0, r.stdout + r.stderr[-2000:]
     out = json.loads(r.stdout.strip().splitlines()[-1])
     assert out["sup"] == 4
     assert out["n_meas"] > 0                 # p=4 cell actually measured
+    assert out["n_meas_2d"] >= 2, out        # 2-D replay on the 2x2 mesh
     assert out["skips"], out                 # p=8 cell noted as skipped
     assert out["est_default"] > 0.0
 

@@ -6,6 +6,7 @@ honors the phase tag at dispatch (bwd reduce-scatters pick a different
 mock-up than fwd all-gathers).
 """
 import math
+import warnings
 
 import numpy as np
 import pytest
@@ -368,3 +369,97 @@ def test_serve_builder_record_only_inherits_ambient_context(monkeypatch):
     assert [tuple(r) for r in sink] == \
         [("allreduce", P, 32, "allreduce_as_doubling", "decode")]
     assert outer.record == []          # sink swapped, tuning inherited
+
+
+# ---------------------------------------------------------------------------
+# v1 sunset step: deprecation warnings + mixed-schema shard merging
+# ---------------------------------------------------------------------------
+
+V1_LINE = ('{"op": "allreduce", "p": 4, "nbytes": 512, "phase": "bwd", '
+           '"impl": "default", "count": 3}\n')
+
+
+def test_v1_trace_load_warns_naming_the_file(tmp_path):
+    """Satellite: loading a v1 trace file now emits a DeprecationWarning
+    that names the offending file (the sunset breadcrumb)."""
+    f = tmp_path / "old_shard.jsonl"
+    f.write_text(V1_LINE)
+    with pytest.warns(DeprecationWarning, match="old_shard.jsonl"):
+        t = Trace.load(f)
+    assert t.total() == 3
+
+
+def test_v2_trace_load_does_not_warn(tmp_path):
+    f = tmp_path / "new_shard.jsonl"
+    Trace([TraceEntry.of("allreduce", 4, 512, "bwd")]).save(f)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        Trace.load(f)
+
+
+def test_v1_profile_file_load_warns_naming_schema(tmp_path):
+    """A .pgtune file without the 'pgtune profile v2' header is schema v1:
+    ProfileStore.load warns (and still serves it)."""
+    from repro.core.profiles import Profile, ProfileStore, Range
+    d = tmp_path
+    (d / "allreduce_p4.pgtune").write_text(
+        "# pgtune profile\nMPI_Allreduce\n4 # nb. of. processes\n"
+        "1 # nb. of mock-up impl.\n2 allreduce_as_doubling\n"
+        "1 # nb. of ranges\n1 4096 2\n")
+    with pytest.warns(DeprecationWarning, match="allreduce_p4.pgtune"):
+        store = ProfileStore.load(d)
+    assert store.lookup("allreduce", 4, 64) == "allreduce_as_doubling"
+    # files re-saved by the current code carry the v2 header: no warning
+    store2 = ProfileStore([Profile(op="allreduce", axis_size=4,
+                                   ranges=[Range(1, 9, "allreduce_as_doubling")])])
+    d2 = tmp_path / "v2"
+    store2.save(d2, fmt="text")
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        ProfileStore.load(d2)
+
+
+def test_merge_mixed_v1_v2_server_shards_roundtrip(tmp_path):
+    """Satellite: cross-server shard merging with MIXED schemas — one v1
+    shard (defaulted geometry), one v2 shard (full 1-D + 2-D geometry
+    cells) — must aggregate cell-wise, and the merged trace must be stable
+    under a v2 save/load round-trip (the migration path)."""
+    v1 = tmp_path / "server_a.jsonl"
+    v1.write_text(V1_LINE + '{"op": "allgather_matmul", "p": 4, '
+                            '"nbytes": 2048, "phase": "fwd", '
+                            '"impl": "default", "count": 2}\n')
+    v2 = tmp_path / "server_b.jsonl"
+    Trace([
+        TraceEntry.of("allreduce", 4, 512, "bwd", count=5),
+        TraceEntry.of("allgather_matmul", 4, 2048, "fwd", count=1,
+                      mm_k=64, mm_m=128, mm_n=32, mm_role="gather"),
+        TraceEntry.of("matmul_reducescatter_2d", 2, 4096, "fwd", count=4,
+                      mm_k=64, mm_m=128, mm_n=32, mm_role="2d", p2=2),
+    ]).save(v2)
+    with pytest.warns(DeprecationWarning, match="server_a.jsonl"):
+        ta = Trace.load(v1)
+    tb = Trace.load(v2)
+    merged = ta.merge(tb)
+    # the v1 allreduce cell and the v2 one share geometry -> one cell
+    assert merged.cells()[OpCell("allreduce", 4, 512)] == 8
+    # the v1 geometry-less agmm cell stays DISTINCT from the v2 geometry
+    # cell (different communication problems)
+    agmm = [c for c in merged.cells() if c.op == "allgather_matmul"]
+    assert len(agmm) == 2
+    cell2d = [c for c in merged.cells()
+              if c.op == "matmul_reducescatter_2d"][0]
+    assert cell2d.p2 == 2 and cell2d.world() == 4
+    out = tmp_path / "merged.jsonl"
+    merged.save(out)
+    assert '"v": 2' in out.read_text()
+    assert Trace.load(out) == merged        # v2 round-trip is identity
+
+
+def test_trace_2d_cell_jsonl_carries_p2():
+    e = TraceEntry.of("matmul_reducescatter_2d", 4, 1 << 20, "bwd",
+                      "fused_ring2d", 2, mm_k=256, mm_m=512, mm_n=128,
+                      mm_role="2dT", p2=8)
+    line = e.to_json()
+    assert '"p2": 8' in line and '"role": "2dT"' in line
+    back = TraceEntry.from_json(line)
+    assert back == e and back.cell.world() == 32
