@@ -1,0 +1,88 @@
+"""XLA-layer tuning potential over the model zoo (report-only mode).
+
+For each zoo model, compile the real shard_map'd step on a forced host
+mesh, interpose on the compiled HLO (``analysis/interpose``), and emit the
+modeled collective totals: default lowering vs. best mock-up per site.
+The headline per model is the "X.Yx on the table" ratio — what a tuned
+library could recover without touching the model's code.
+
+Rows (CSV, via benchmarks.common): per model, the modeled default total,
+best-mock-up total, and the count of fused-matmul candidate sites the
+adjacent-dot detector found.  Artifacts (tables + JSON) are written to
+``--out`` so CI can diff them and gate on unmapped ops.
+
+  PYTHONPATH=src python benchmarks/bench_hlo_potential.py
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import pathlib
+import sys
+
+_ROOT = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(_ROOT))
+sys.path.insert(0, str(_ROOT / "src"))
+
+ARCHS = ["gemma3-1b", "llama3.2-3b"]
+KINDS = ["train", "decode"]
+MESH = (2, 4)
+
+# before any jax import: the bench always runs on forced host devices
+os.environ.setdefault(
+    "XLA_FLAGS",
+    f"--xla_force_host_platform_device_count={MESH[0] * MESH[1]}")
+
+from benchmarks.common import emit, header  # noqa: E402
+from repro.analysis.interpose import (HloParseError,  # noqa: E402
+                                      compile_zoo_hlo, scan_potential)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=str(_ROOT / "results" /
+                                         "hlo_potential"))
+    ap.add_argument("--arch", action="append", default=[])
+    args = ap.parse_args(argv)
+    archs = args.arch or ARCHS
+    out_dir = pathlib.Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    header()
+    failed = False
+    for arch in archs:
+        for kind in KINDS:
+            label = f"{arch}/{kind}"
+            try:
+                hlo, _info = compile_zoo_hlo(arch, kind=kind,
+                                             mesh_shape=MESH)
+                rep = scan_potential(hlo, label=label)
+            except HloParseError as e:
+                print(f"PARSE ERROR [{label}]: {e}", file=sys.stderr)
+                failed = True
+                continue
+            n_fused = sum(1 for r in rep.rows if r.sc.fused)
+            n_cand = sum(1 for r in rep.rows
+                         if r.sc.adjacent_dot and not r.sc.fused)
+            emit(f"hlo_potential/{arch}/{kind}/default",
+                 rep.total_default() * 1e6,
+                 f"sites={len(rep.rows)}")
+            emit(f"hlo_potential/{arch}/{kind}/best",
+                 rep.total_best() * 1e6,
+                 f"potential={rep.potential():.2f}x fused={n_fused} "
+                 f"fused_candidates={n_cand}")
+            stem = f"{arch.replace('.', '_')}_{kind}"
+            (out_dir / f"{stem}.json").write_text(
+                json.dumps(rep.to_json(), indent=1) + "\n")
+            (out_dir / f"{stem}.txt").write_text(rep.table() + "\n")
+            if not rep.ok:
+                print(f"UNMAPPED [{label}]: "
+                      f"{[s.hlo_op for s in rep.unmapped]}",
+                      file=sys.stderr)
+                failed = True
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

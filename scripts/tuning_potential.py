@@ -1,0 +1,90 @@
+"""Report-only XLA-layer interposition over the ``configs/`` zoo.
+
+Compiles each requested zoo model on a forced host-device mesh, scans the
+compiled HLO for EVERY collective instruction (sync, ``-start/-done``
+async pairs, ops inside scan/while bodies), maps each site to a tuning
+cell, and prices default vs. best mock-up — the paper's "tuning potential"
+table lifted to compiled programs.  Exits nonzero on parser errors or any
+collective the interposer could not map (CI gates on this).
+
+  python scripts/tuning_potential.py --arch gemma3-1b --arch llama3.2-3b \
+      --kind train --mesh 2x4 --out results/hlo_potential
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "src"))
+
+
+def parse_args(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--arch", action="append", default=[],
+                    help="zoo config name (repeatable; default: "
+                         "gemma3-1b + llama3.2-3b)")
+    ap.add_argument("--kind", default="train",
+                    choices=("train", "prefill", "decode"))
+    ap.add_argument("--mesh", default="2x4",
+                    help="host mesh DATAxMODEL, e.g. 2x4")
+    ap.add_argument("--out", default=str(ROOT / "results" /
+                                         "hlo_potential"))
+    ap.add_argument("--profile-dir", default=None,
+                    help="ProfileStore directory: adds a profile-tuned "
+                         "column to the report")
+    ap.add_argument("--dump-hlo", action="store_true",
+                    help="also write the compiled HLO text per model")
+    return ap.parse_args(argv)
+
+
+def main(argv=None) -> int:
+    args = parse_args(argv)
+    archs = args.arch or ["gemma3-1b", "llama3.2-3b"]
+    mesh_shape = tuple(int(x) for x in args.mesh.split("x"))
+    n_dev = 1
+    for x in mesh_shape:
+        n_dev *= x
+    # must land before jax initializes its backends
+    os.environ.setdefault(
+        "XLA_FLAGS", f"--xla_force_host_platform_device_count={n_dev}")
+
+    from repro.analysis.interpose import (HloParseError, compile_zoo_hlo,
+                                          scan_potential)
+    from repro.core.profiles import resolve_stores
+
+    profiles, _phases = resolve_stores(args.profile_dir)
+    out_dir = pathlib.Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    failed = False
+    for arch in archs:
+        label = f"{arch}/{args.kind}@{args.mesh}"
+        try:
+            hlo, info = compile_zoo_hlo(arch, kind=args.kind,
+                                        mesh_shape=mesh_shape)
+            rep = scan_potential(hlo, profiles=profiles, label=label)
+        except HloParseError as e:
+            print(f"PARSE ERROR [{label}]: {e}", file=sys.stderr)
+            failed = True
+            continue
+        print(rep.table())
+        print()
+        stem = f"{arch.replace('.', '_')}_{args.kind}"
+        (out_dir / f"{stem}.json").write_text(
+            json.dumps(rep.to_json(), indent=1) + "\n")
+        (out_dir / f"{stem}.txt").write_text(rep.table() + "\n")
+        if args.dump_hlo:
+            (out_dir / f"{stem}.hlo.txt").write_text(hlo)
+        if not rep.ok:
+            print(f"UNMAPPED COLLECTIVES [{label}]: "
+                  f"{[s.hlo_op for s in rep.unmapped]}", file=sys.stderr)
+            failed = True
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,2 +1,7 @@
-from repro.analysis.hlo import collective_bytes  # noqa: F401
+from repro.analysis.hlo import (HloParseError, collective_bytes,  # noqa: F401
+                                collective_sites, module_world,
+                                parse_instructions)
+from repro.analysis.interpose import (assert_bitexact,  # noqa: F401
+                                      compile_zoo_hlo, map_sites, rewrite,
+                                      scan_potential, tuning_potential)
 from repro.analysis.roofline import roofline_terms  # noqa: F401

@@ -6,12 +6,23 @@ bytes), then for every all-gather / all-reduce / reduce-scatter /
 all-to-all / collective-permute sum the byte sizes of its OPERANDS (the
 spec'd convention for the roofline's collective term).
 
+Async collectives print as ``<op>-start`` / ``<op>-done`` pairs; the
+``-start`` instruction carries the operands, so each pair is counted ONCE
+at its start (a ``-done`` without a matching start is a parse error — the
+bytes would silently vanish otherwise, which is exactly the historical
+``rstrip("-start")`` bug this module is tested against).
+
 Instructions inside ``while`` (scan) bodies execute once per iteration —
 multiply by the loop trip count.  Trip counts are recovered from the
 canonical XLA pattern (compare against a constant in the loop condition).
+
+Parsing conventions (operand bytes, async pairing, trip counts) and the
+interposition modes built on top of this module are documented in
+``DESIGN_HLO.md``.
 """
 from __future__ import annotations
 
+import dataclasses
 import re
 from collections import defaultdict
 
@@ -19,15 +30,44 @@ _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
     "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
     "c64": 8, "c128": 16,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1,
 }
 
-_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
-_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\(?[^)]*?\)?"
-                       r"[\w\[\],\s{}:#\*]*?)\s+([\w\-]+)\(")
+#: HLO element type -> numpy-style dtype name (OpCell.dtype convention)
+_DTYPE_NAME = {
+    "pred": "bool", "s8": "int8", "u8": "uint8", "s16": "int16",
+    "u16": "uint16", "bf16": "bfloat16", "f16": "float16", "s32": "int32",
+    "u32": "uint32", "f32": "float32", "s64": "int64", "u64": "uint64",
+    "f64": "float64", "c64": "complex64", "c128": "complex128",
+}
+
+# dims may print with spaces after commas inside tuple types
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,\s]*)\]")
 _OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_ASSIGN_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*)$")
 
 COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
                "collective-permute")
+
+_ASYNC_SUFFIXES = ("-start", "-done")
+
+
+class HloParseError(ValueError):
+    """The module text violates a parser invariant (e.g. an async ``-done``
+    with no matching ``-start``) — callers gating on 'zero dropped ops'
+    treat this as a hard failure, never a silent undercount."""
+
+
+def split_async(op: str) -> tuple[str, str]:
+    """``op`` -> (base op, async role): ``"reduce-scatter-start"`` ->
+    ``("reduce-scatter", "start")``; sync ops get role ``""``.  Uses exact
+    suffix removal — NEVER ``str.rstrip``, which strips a character CLASS
+    (``"reduce-scatter-start".rstrip("-start")`` == ``"reduce-scatte"``,
+    the bug that silently dropped every async collective's bytes)."""
+    for suf in _ASYNC_SUFFIXES:
+        if op.endswith(suf):
+            return op[: -len(suf)], suf[1:]
+    return op, ""
 
 
 def _shape_bytes(type_str: str) -> int:
@@ -37,57 +77,11 @@ def _shape_bytes(type_str: str) -> int:
         if dt not in _DTYPE_BYTES:
             continue
         n = 1
-        for d in dims.split(","):
+        for d in dims.replace(" ", "").split(","):
             if d:
                 n *= int(d)
         total += n * _DTYPE_BYTES[dt]
     return total
-
-
-def collective_bytes(hlo_text: str) -> dict:
-    """Per-op-class operand bytes (and call counts), weighted by loop trip
-    counts.  Returns {"all-gather": {"bytes": int, "count": int}, ...,
-    "total_bytes": int}."""
-    sizes: dict[str, int] = {}
-    # pass 1: symbol table over all computations
-    for line in hlo_text.splitlines():
-        m = _INSTR_RE.match(line)
-        if not m:
-            continue
-        name, type_str, _op = m.groups()
-        sizes[name] = _shape_bytes(type_str)
-
-    # pass 2: computation trip counts (while bodies)
-    comp_mult = _loop_multipliers(hlo_text)
-
-    out: dict[str, dict] = defaultdict(lambda: {"bytes": 0, "count": 0})
-    current_comp = ""
-    for line in hlo_text.splitlines():
-        ls = line.strip()
-        if _is_header(ls):
-            current_comp = _header_name(ls)
-        m = _INSTR_RE.match(line)
-        if not m:
-            continue
-        name, _type_str, op = m.groups()
-        if op.rstrip("-start") not in COLLECTIVES and op not in COLLECTIVES:
-            continue
-        # operand list = %refs in the parens, excluding the instr itself
-        paren = line[line.index(op) + len(op):]
-        operands = [o for o in _OPERAND_RE.findall(paren)
-                    if o in sizes and o != name]
-        b = sum(sizes[o] for o in operands)
-        mult = comp_mult.get(current_comp, 1)
-        key = op[:-6] if op.endswith("-start") else op
-        out[key]["bytes"] += b * mult
-        out[key]["count"] += mult
-
-    result = {k: dict(v) for k, v in out.items()}
-    result["total_bytes"] = sum(v["bytes"] for v in out.values())
-    return result
-
-
-_DOT_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
 
 
 def _shape_dims(type_str: str) -> list[tuple[str, list[int]]]:
@@ -96,8 +90,246 @@ def _shape_dims(type_str: str) -> list[tuple[str, list[int]]]:
     for dt, dims in _SHAPE_RE.findall(type_str):
         if dt not in _DTYPE_BYTES:
             continue
-        out.append((dt, [int(d) for d in dims.split(",") if d]))
+        out.append((dt, [int(d) for d in dims.replace(" ", "").split(",")
+                         if d]))
     return out
+
+
+# ---------------------------------------------------------------------------
+# instruction-level parsing
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Instr:
+    """One parsed HLO instruction line."""
+    name: str           # result name (no % sigil)
+    type_str: str       # result type text, tuple parens included
+    op: str             # opcode as printed (async suffix kept)
+    args: str           # everything from the opening '(' of the call on
+    computation: str    # enclosing computation name
+    line: str           # the raw line
+
+    def operands(self, symbols) -> list[str]:
+        """%refs in the call args that are known instructions (excludes
+        self-references and computation refs like ``to_apply=%add``)."""
+        return [o for o in _OPERAND_RE.findall(self.args)
+                if o in symbols and o != self.name]
+
+
+def _parse_instr(line: str):
+    """``(name, type_str, op, args)`` for an instruction line, else None.
+
+    Replaces the old single-regex parse, which dropped any instruction
+    whose result type nests parentheses — e.g. the canonical async form
+    ``%ar = ((f32[8]), (f32[8])) all-reduce-start(...)`` — and any scalar
+    tuple member.  We scan for the opcode: the first ``ident(`` at paren
+    AND brace depth zero with a nonempty type to its left (braces guard
+    layout annotations like ``{1,0:T(8,128)}``).
+    """
+    m = _ASSIGN_RE.match(line)
+    if not m:
+        return None
+    name, rhs = m.groups()
+    depth = brace = 0
+    for i, ch in enumerate(rhs):
+        if ch == "{":
+            brace += 1
+        elif ch == "}":
+            brace = max(0, brace - 1)
+        elif ch == "(":
+            if brace == 0 and depth == 0:
+                j = i
+                while j and (rhs[j - 1].isalnum() or rhs[j - 1] in "-_."):
+                    j -= 1
+                tok = rhs[j:i]
+                if tok and not tok[0].isdigit() and rhs[:j].strip():
+                    return name, rhs[:j].strip(), tok, rhs[i:]
+            depth += 1
+        elif ch == ")":
+            depth = max(0, depth - 1)
+    return None
+
+
+def parse_instructions(hlo_text: str) -> list[Instr]:
+    """Every instruction in the module, with computation attribution."""
+    out: list[Instr] = []
+    current = ""
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if _is_header(s):
+            current = _header_name(s)
+            continue
+        p = _parse_instr(line)
+        if p is not None:
+            name, type_str, op, args = p
+            out.append(Instr(name, type_str, op, args, current, line))
+    return out
+
+
+def module_world(hlo_text: str) -> int:
+    """Device count of the compiled module (``num_partitions`` x
+    ``replica_count`` from the HloModule header; 1 when absent)."""
+    header = ""
+    for line in hlo_text.splitlines():
+        if line.lstrip().startswith("HloModule"):
+            header = line
+            break
+    n = 1
+    for key in ("num_partitions", "replica_count"):
+        m = re.search(rf"{key}=(\d+)", header)
+        if m:
+            n *= int(m.group(1))
+    return n
+
+
+_GROUPS_EXPLICIT_RE = re.compile(r"replica_groups=\{(.*?)\}\}")
+_GROUPS_IOTA_RE = re.compile(
+    r"replica_groups=\[([\d,]+)\](?:T\([\d,]+\))?<=\[[\d,]+\]")
+_PAIRS_RE = re.compile(r"source_target_pairs=\{(.*?)\}\}")
+
+
+def _parse_groups(args: str) -> tuple[int, int]:
+    """``(n_groups, group_size)`` from a collective's attributes.
+
+    Handles both printed forms — explicit ``{{0,1},{2,3}}`` and iota
+    ``[2,4]<=[8]`` (shape = (n_groups, group_size)) — plus the
+    collective-permute ``source_target_pairs`` (groups = the permutation's
+    cycles).  ``(0, 0)`` when no group attribute is present (flat world).
+    """
+    m = _GROUPS_IOTA_RE.search(args)
+    if m:
+        dims = [int(x) for x in m.group(1).split(",")]
+        if len(dims) == 1:
+            return 1, dims[0]
+        n_groups = dims[0]
+        size = 1
+        for d in dims[1:]:
+            size *= d
+        return n_groups, size
+    m = _GROUPS_EXPLICIT_RE.search(args)
+    if m:
+        body = m.group(1) + "}"
+        groups = re.findall(r"\{([\d,\s]*)\}", body)
+        if not groups:
+            return 0, 0
+        sizes = [len([t for t in g.replace(" ", "").split(",") if t])
+                 for g in groups]
+        return len(sizes), max(sizes)
+    m = _PAIRS_RE.search(args)
+    if m:
+        pairs = re.findall(r"\{(\d+),\s*(\d+)\}", m.group(0))
+        return _permute_cycles([(int(a), int(b)) for a, b in pairs])
+    return 0, 0
+
+
+def _permute_cycles(pairs: list[tuple[int, int]]) -> tuple[int, int]:
+    """Cycle decomposition of a collective-permute: ``(n_cycles,
+    longest_cycle)`` — the permute analogue of (n_groups, group_size)."""
+    if not pairs:
+        return 0, 0
+    nxt = dict(pairs)
+    seen: set[int] = set()
+    cycles = []
+    for start in sorted(nxt):
+        if start in seen:
+            continue
+        n, cur = 0, start
+        while cur not in seen:
+            seen.add(cur)
+            n += 1
+            cur = nxt.get(cur, start)
+        cycles.append(n)
+    return len(cycles), max(cycles)
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveSite:
+    """One collective instruction (async pairs collapse onto the start)."""
+    name: str               # instruction name
+    hlo_op: str             # opcode as printed (suffix kept)
+    base_op: str            # one of COLLECTIVES
+    async_role: str         # "" | "start"  (dones are folded into starts)
+    computation: str
+    mult: int               # loop trip multiplier of the computation
+    operand_bytes: int      # payload: summed operand bytes
+    result_bytes: int
+    dtype: str              # numpy-style name of the first operand array
+    n_groups: int           # replica groups (0 = flat world)
+    group_size: int         # participants per group (0 = flat world)
+    operands: tuple[str, ...]
+    line: str
+
+
+def collective_sites(hlo_text: str) -> list[CollectiveSite]:
+    """Every collective in the module, trip-count attributed, async pairs
+    validated and collapsed onto their ``-start``.
+
+    Raises :class:`HloParseError` when a ``-done`` has no same-computation
+    ``-start`` of the same base op (or vice versa) — an unpaired async op
+    means the parse dropped bytes somewhere.
+    """
+    instrs = parse_instructions(hlo_text)
+    sizes = {i.name: _shape_bytes(i.type_str) for i in instrs}
+    type_of = {i.name: i.type_str for i in instrs}
+    comp_mult = _loop_multipliers(hlo_text)
+
+    sites: list[CollectiveSite] = []
+    async_counts: dict[tuple[str, str, str], int] = defaultdict(int)
+    for ins in instrs:
+        base, role = split_async(ins.op)
+        if base not in COLLECTIVES:
+            continue
+        if role:
+            async_counts[(ins.computation, base, role)] += 1
+        if role == "done":
+            continue            # bytes live on the paired -start
+        operands = tuple(ins.operands(sizes))
+        ob = sum(sizes[o] for o in operands)
+        dtype = ""
+        for o in operands:
+            arrs = _shape_dims(type_of[o])
+            if arrs:
+                dtype = _DTYPE_NAME.get(arrs[0][0], arrs[0][0])
+                break
+        if not dtype:
+            arrs = _shape_dims(ins.type_str)
+            dtype = _DTYPE_NAME.get(arrs[0][0], "float32") if arrs \
+                else "float32"
+        n_groups, group_size = _parse_groups(ins.args)
+        sites.append(CollectiveSite(
+            name=ins.name, hlo_op=ins.op, base_op=base, async_role=role,
+            computation=ins.computation,
+            mult=comp_mult.get(ins.computation, 1),
+            operand_bytes=ob, result_bytes=sizes[ins.name],
+            dtype=dtype, n_groups=n_groups, group_size=group_size,
+            operands=operands, line=ins.line))
+
+    for (comp, base, role), n in sorted(async_counts.items()):
+        other = "done" if role == "start" else "start"
+        if async_counts.get((comp, base, other), 0) != n:
+            raise HloParseError(
+                f"unpaired async collective: {n}x {base}-{role} vs "
+                f"{async_counts.get((comp, base, other), 0)}x {base}-{other}"
+                f" in computation {comp!r}")
+    return sites
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-op-class operand bytes (and call counts), weighted by loop trip
+    counts.  Returns {"all-gather": {"bytes": int, "count": int}, ...,
+    "total_bytes": int}.  Async ``-start``/``-done`` pairs count once,
+    under the base op name."""
+    out: dict[str, dict] = defaultdict(lambda: {"bytes": 0, "count": 0})
+    for s in collective_sites(hlo_text):
+        out[s.base_op]["bytes"] += s.operand_bytes * s.mult
+        out[s.base_op]["count"] += s.mult
+    result = {k: dict(v) for k, v in out.items()}
+    result["total_bytes"] = sum(v["bytes"] for v in out.values())
+    return result
+
+
+_DOT_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
 
 
 def program_costs(hlo_text: str) -> dict:
@@ -115,16 +347,13 @@ def program_costs(hlo_text: str) -> dict:
     and weights each computation by its loop-trip multiplier.
     """
     # symbol table: name -> (bytes, dims-of-first-array)
+    instrs = parse_instructions(hlo_text)
     sizes: dict[str, int] = {}
     dims: dict[str, list[int]] = {}
-    for line in hlo_text.splitlines():
-        m = _INSTR_RE.match(line)
-        if not m:
-            continue
-        name, type_str, _op = m.groups()
-        sizes[name] = _shape_bytes(type_str)
-        arr = _shape_dims(type_str)
-        dims[name] = arr[0][1] if arr else []
+    for ins in instrs:
+        sizes[ins.name] = _shape_bytes(ins.type_str)
+        arr = _shape_dims(ins.type_str)
+        dims[ins.name] = arr[0][1] if arr else []
 
     comp_mult = _loop_multipliers(hlo_text)
     comps = _split_computations(hlo_text)
@@ -163,41 +392,33 @@ def program_costs(hlo_text: str) -> dict:
              "tuple", "get-tuple-element", "copy"}
     _MOVE = _ZERO | {"transpose", "broadcast", "dynamic-slice", "slice",
                      "concatenate", "pad"}
+    by_comp_instrs: dict[str, list[Instr]] = defaultdict(list)
+    for ins in instrs:
+        by_comp_instrs[ins.computation].append(ins)
     for m in re.finditer(r"calls=%?([\w\.\-]+)", hlo_text):
         cname = m.group(1)
-        body = comps.get(cname, "")
-        if "dynamic-update-slice" in body:
+        body_ops = {i.op for i in by_comp_instrs.get(cname, [])}
+        if "dynamic-update-slice" in body_ops:
             dus_fusions.add(cname)
-            continue
-        ops_in = set()
-        for ln in body.splitlines():
-            mm = _INSTR_RE.match(ln)
-            if mm:
-                ops_in.add(mm.group(3))
-        if ops_in and ops_in <= _ZERO:
+        elif body_ops and body_ops <= _ZERO:
             zero_fusions.add(cname)
-        elif ops_in and ops_in <= _MOVE:
+        elif body_ops and body_ops <= _MOVE:
             move_fusions.add(cname)
-        elif ({"dynamic-slice", "slice", "gather"} & ops_in
-                and not {"reduce", "dot", "reduce-window"} & ops_in):
+        elif ({"dynamic-slice", "slice", "gather"} & body_ops
+                and not {"reduce", "dot", "reduce-window"} & body_ops):
             # slices big operands: reads are slice-sized, not buffer-sized
             slice_fusions.add(cname)
-    for comp, body in comps.items():
+    for comp in comps:
         mult = comp_mult.get(comp, 1)
         count_bytes = comp in kernel_comps
         f = 0.0
         b = 0.0
-        for line in body.splitlines():
-            m = _INSTR_RE.match(line)
-            if not m:
-                continue
-            name, type_str, op = m.groups()
+        for ins in by_comp_instrs.get(comp, []):
+            op = ins.op
             if op in skip_ops:
                 continue
-            out_b = _shape_bytes(type_str)
-            paren = line[line.index(op) + len(op):]
-            operands = [o for o in _OPERAND_RE.findall(paren)
-                        if o in sizes and o != name]
+            out_b = sizes[ins.name]
+            operands = ins.operands(sizes)
             if count_bytes:
                 if op in ("dynamic-slice", "slice", "gather"):
                     # reads only the slice, not the operand buffer
@@ -208,7 +429,7 @@ def program_costs(hlo_text: str) -> dict:
                         operands) > 1 else out_b
                     db = 2 * upd
                 elif op == "fusion":
-                    called = re.search(r"calls=%?([\w\.\-]+)", line)
+                    called = re.search(r"calls=%?([\w\.\-]+)", ins.line)
                     cname = called.group(1) if called else ""
                     aliasable = any(sizes[o] == out_b for o in operands)
                     if cname in dus_fusions and aliasable:
@@ -230,11 +451,11 @@ def program_costs(hlo_text: str) -> dict:
                 b += db
                 by_op[op] += db * mult
             if op == "dot":
-                arrs = _shape_dims(type_str)
+                arrs = _shape_dims(ins.type_str)
                 out_elems = 1
                 for d in (arrs[0][1] if arrs else []):
                     out_elems *= d
-                cm = _DOT_CONTRACT_RE.search(line)
+                cm = _DOT_CONTRACT_RE.search(ins.line)
                 contract = 1
                 if cm and operands:
                     lhs_dims = dims.get(operands[0], [])
@@ -252,6 +473,15 @@ def program_costs(hlo_text: str) -> dict:
                                        key=lambda kv: -kv[1])[:10])}
 
 
+# while operands print with their full (possibly nested-tuple) types inline:
+#   while((s32[], f32[2,16]{1,0}) %tuple.3), condition=%c, body=%b
+# so the operand part is matched lazily up to the LAST '),' before the
+# condition attribute — a greedy-on-nesting [^)]* there silently matched
+# nothing on every real module (trip counts all fell back to 1).
+_WHILE_RE = re.compile(
+    r"while\(.*?\),\s*condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)")
+
+
 def _loop_multipliers(hlo_text: str) -> dict[str, int]:
     """computation name -> estimated executions (scan trip counts).
 
@@ -259,13 +489,9 @@ def _loop_multipliers(hlo_text: str) -> dict[str, int]:
     computation's `constant(N)` compare; attribute it to the body
     computation's name.  Nested scans multiply."""
     # map condition/body comp -> while instruction line
-    body_of_while: dict[str, str] = {}
     cond_of_while: dict[str, str] = {}
-    for m in re.finditer(
-            r"while\([^)]*\),\s*condition=%?([\w\.\-]+),\s*body=%?"
-            r"([\w\.\-]+)", hlo_text):
+    for m in _WHILE_RE.finditer(hlo_text):
         cond, body = m.groups()
-        body_of_while[body] = cond
         cond_of_while[body] = cond
 
     # trip count per condition computation: look for compare with constant
@@ -292,9 +518,10 @@ def _loop_multipliers(hlo_text: str) -> dict[str, int]:
 
 def _is_header(s: str) -> bool:
     """Computation header: '%name (sig) -> type {' (may contain /*index*/
-    comments); instruction lines never END with '{'."""
+    comments); instruction lines never END with '{'.  Newer XLA prints
+    computation names without the % sigil, so only the shape is checked."""
     return s.endswith("{") and ("->" in s or s.startswith("ENTRY")) and \
-        (s.startswith("%") or s.startswith("ENTRY"))
+        "=" not in s.split("(")[0]
 
 
 def _header_name(s: str) -> str:

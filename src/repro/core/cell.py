@@ -72,6 +72,27 @@ OP_MM_ROLE = {
     "matmul_reducescatter_2d": "2d",
 }
 
+#: mm_role -> fused dispatcher op (inverse of OP_MM_ROLE; both 2-D roles
+#: fold onto the one 2-D op)
+ROLE_TO_OP = {
+    "gather": "allgather_matmul",
+    "scatter": "matmul_reducescatter",
+    "contract": "matmul_accumulate",
+    "2d": "matmul_reducescatter_2d",
+    "2dT": "matmul_reducescatter_2d",
+}
+
+#: compiled-HLO collective class -> dispatcher op name.  collective-permute
+#: has no dispatcher registry entry (no mock-ups) but still gets a cell so
+#: XLA-level scans (analysis/interpose) map EVERY collective instruction.
+HLO_TO_OP = {
+    "all-gather": "allgather",
+    "all-reduce": "allreduce",
+    "reduce-scatter": "reducescatter",
+    "all-to-all": "alltoall",
+    "collective-permute": "collective_permute",
+}
+
 
 @dataclasses.dataclass(frozen=True, order=True)
 class Geom:
@@ -199,3 +220,31 @@ class OpCell:
     def plain(cls, op: str, p: int, nbytes: int,
               dtype: str = "float32") -> "OpCell":
         return cls(op=op, p=p, nbytes=nbytes, dtype=dtype)
+
+    @classmethod
+    def from_hlo(cls, base_op: str, p: int, nbytes: int,
+                 dtype: str = "float32", *,
+                 gemm: "tuple[int, int, int] | None" = None,
+                 mm_role: str = "") -> "OpCell":
+        """The tuning cell for one compiled-HLO collective site.
+
+        ``base_op`` is the HLO opcode class with any async suffix stripped
+        (``"all-gather"``, ``"reduce-scatter"``, ...).  When the site sits
+        adjacent to a ``dot`` — an all-gather feeding a matmul, or a matmul
+        feeding a reduce-scatter — ``gemm=(mm_k, mm_m, mm_n)`` plus
+        ``mm_role`` map it to the corresponding FUSED dispatcher op, so the
+        cost model prices the fused-ring mock-ups against what XLA actually
+        emitted.  Raises ``KeyError`` for a collective class with no
+        dispatcher counterpart (callers surface these as unmapped instead
+        of silently skipping them).
+        """
+        if gemm is not None and mm_role:
+            mm_k, mm_m, mm_n = gemm
+            return cls(op=ROLE_TO_OP[mm_role], p=p, nbytes=nbytes,
+                       dtype=dtype, mm_k=mm_k, mm_m=mm_m, mm_n=mm_n,
+                       mm_role=mm_role)
+        op = HLO_TO_OP.get(base_op)
+        if op is None:
+            raise KeyError(
+                f"no dispatcher op for HLO collective {base_op!r}")
+        return cls.plain(op, p, nbytes, dtype)

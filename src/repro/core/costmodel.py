@@ -199,6 +199,13 @@ def latency(op: str, impl: str, p: int, nbytes: int, topo: Topo,
     they actually lower to (see collectives.py)."""
     if p <= 1:
         return 0.0
+    if op == "collective_permute":
+        # not a dispatcher op (no mock-ups): one neighbour hop of the whole
+        # payload — priced so HLO-level scans (analysis/interpose) can map
+        # every collective instruction, permutes included.
+        if impl != "default":
+            raise KeyError(f"no cost model for {(op, impl)}")
+        return topo.alpha + float(max(nbytes, 1)) * topo.beta
     B = float(max(nbytes, 1))
     naive = topo.default_pricing == "naive"
 
@@ -475,3 +482,25 @@ def sweep(op: str, p: int, nbytes: int, topo: Topo, *,
     """Latency of every registered impl of ``op`` at one (p, nbytes)."""
     return {name: latency(op, name, p, nbytes, topo, chunk_bytes=chunk_bytes)
             for name in REGISTRY[op]}
+
+
+def sweep_cell(cell, topo: Topo, *, chunk_bytes: int = 0) -> dict[str, float]:
+    """Latency of every priceable impl for one ``OpCell`` — the
+    geometry-aware ``sweep``.  Ops outside the dispatcher registry
+    (``collective_permute``) price their default only, so HLO-level scans
+    always get at least one number per mapped cell."""
+    impls = REGISTRY.get(cell.op)
+    if impls is None:
+        return {"default": latency(cell.op, "default", cell.p, cell.nbytes,
+                                   topo, chunk_bytes=chunk_bytes)}
+    return {name: latency_cell(cell, name, topo, chunk_bytes=chunk_bytes)
+            for name in impls}
+
+
+def best_impl_cell(cell, topo: Topo, *,
+                   chunk_bytes: int = 0) -> tuple[str, float]:
+    """``(impl, latency)`` of the fastest modeled implementation for one
+    cell — the 'best mock-up' side of the tuning-potential report."""
+    sw = sweep_cell(cell, topo, chunk_bytes=chunk_bytes)
+    name = min(sw, key=sw.get)
+    return name, sw[name]

@@ -284,9 +284,12 @@ def resolve_stores(directory: str | pathlib.Path | None = None) \
     """Profile-loading precedence: explicit ``directory`` argument >
     ``$PGTUNE_PROFILE_DIR`` > none (returns ``(None, {})``).
 
-    An explicit directory that does not exist raises (the caller asked for
-    it); a stale env var only warns and serves untuned — it must not crash
-    processes that never asked for profiles.
+    An explicit directory that is missing or malformed raises (the caller
+    asked for it); a stale or broken env var only warns and serves untuned
+    — it must not crash (or half-initialize profiles in) processes that
+    never asked for them.  The env path is all-or-nothing: any load
+    failure, including a parse error in one phase subdirectory, falls back
+    to the full no-profile mode ``(None, {})``.
     """
     if directory:
         return load_stores(directory)
@@ -299,4 +302,10 @@ def resolve_stores(directory: str | pathlib.Path | None = None) \
         import warnings
         warnings.warn(f"${PROFILE_DIR_ENV}={d} does not exist; "
                       "serving untuned defaults")
+        return None, {}
+    except Exception as e:                     # malformed profile text, ...
+        import warnings
+        warnings.warn(f"${PROFILE_DIR_ENV}={d} failed to load "
+                      f"({type(e).__name__}: {e}); serving untuned "
+                      "defaults")
         return None, {}

@@ -269,3 +269,80 @@ def test_dispatch_scratch_budget():
     with api.tuned(profiles=store, scratch_budget_bytes=10**6) as ctx2:
         jax.vmap(lambda a: api.allgather(a, "x"), axis_name="x")(x)
     assert ctx2.record[-1].impl == "allgather_as_alltoall"
+
+
+# ---------------------------------------------------------------------------
+# profile-directory resolution ($PGTUNE_PROFILE_DIR fallback behaviour)
+# ---------------------------------------------------------------------------
+
+
+def test_resolve_stores_env_missing_dir_serves_untuned(tmp_path,
+                                                       monkeypatch):
+    from repro.core.profiles import PROFILE_DIR_ENV, resolve_stores
+    monkeypatch.setenv(PROFILE_DIR_ENV, str(tmp_path / "does-not-exist"))
+    with pytest.warns(UserWarning, match="does not exist"):
+        base, phases = resolve_stores()
+    assert base is None
+    assert phases == {}
+
+
+def test_resolve_stores_env_malformed_serves_untuned(tmp_path, monkeypatch):
+    """A broken profile file behind the env var must NOT half-initialize a
+    store (or crash a process that never asked for profiles) — resolution
+    falls back to the full no-profile mode."""
+    from repro.core.profiles import PROFILE_DIR_ENV, resolve_stores
+    d = tmp_path / "profiles"
+    d.mkdir()
+    (d / "broken.json").write_text("{not valid json")
+    monkeypatch.setenv(PROFILE_DIR_ENV, str(d))
+    with pytest.warns(UserWarning, match="failed to load"):
+        base, phases = resolve_stores()
+    assert base is None
+    assert phases == {}
+
+
+def test_resolve_stores_env_malformed_phase_subdir(tmp_path, monkeypatch):
+    """Even with a VALID base store, a malformed phase subdirectory makes
+    the env path all-or-nothing: no half-initialized (base, {}) result."""
+    from repro.core.profiles import PROFILE_DIR_ENV, resolve_stores
+    d = tmp_path / "profiles"
+    d.mkdir()
+    ProfileStore([Profile(op="allreduce", axis_size=8,
+                          ranges=[Range(1, 1024, "allreduce_as_doubling")])
+                  ]).save(d, fmt="text")
+    sub = d / "decode"
+    sub.mkdir()
+    (sub / "broken.json").write_text("]")
+    monkeypatch.setenv(PROFILE_DIR_ENV, str(d))
+    with pytest.warns(UserWarning, match="failed to load"):
+        base, phases = resolve_stores()
+    assert base is None
+    assert phases == {}
+
+
+def test_resolve_stores_explicit_dir_still_raises(tmp_path, monkeypatch):
+    """The explicit argument is a user request: missing or malformed input
+    raises instead of silently serving untuned."""
+    from repro.core.profiles import PROFILE_DIR_ENV, resolve_stores
+    monkeypatch.delenv(PROFILE_DIR_ENV, raising=False)
+    with pytest.raises(FileNotFoundError):
+        resolve_stores(tmp_path / "does-not-exist")
+    d = tmp_path / "profiles"
+    d.mkdir()
+    (d / "broken.json").write_text("{not valid json")
+    with pytest.raises(Exception):
+        resolve_stores(d)
+
+
+def test_resolve_stores_env_valid_dir_loads(tmp_path, monkeypatch):
+    from repro.core.profiles import PROFILE_DIR_ENV, resolve_stores
+    d = tmp_path / "profiles"
+    d.mkdir()
+    ProfileStore([Profile(op="allreduce", axis_size=8,
+                          ranges=[Range(1, 1024, "allreduce_as_doubling")])
+                  ]).save(d, fmt="text")
+    monkeypatch.setenv(PROFILE_DIR_ENV, str(d))
+    base, phases = resolve_stores()
+    assert base is not None
+    assert base.lookup("allreduce", 8, 512) == "allreduce_as_doubling"
+    assert phases == {}

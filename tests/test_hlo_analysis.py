@@ -44,3 +44,151 @@ def test_real_lowered_module_has_collectives():
     hlo = f.lower(jnp.ones((8, 8))).compile().as_text()
     out = collective_bytes(hlo)
     assert out["total_bytes"] == 0
+
+
+# ---------------------------------------------------------------------------
+# async -start/-done pairs (the historical rstrip("-start") bug)
+# ---------------------------------------------------------------------------
+
+ASYNC_FIXTURE = """
+HloModule test_async
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %r = f32[] add(%a, %b)
+}
+
+ENTRY %main (x: f32[256,4]) -> f32[64,4] {
+  %x = f32[256,4]{1,0} parameter(0)
+  %rs = ((f32[256,4]), (f32[64,4])) reduce-scatter-start(%x), replica_groups={{0,1,2,3}}, dimensions={0}, to_apply=%add
+  %rsd = f32[64,4]{1,0} reduce-scatter-done(%rs)
+  %ag = ((f32[64,4]), (f32[256,4])) all-gather-start(%rsd), replica_groups={{0,1,2,3}}, dimensions={0}
+  %agd = f32[256,4]{1,0} all-gather-done(%ag)
+  ROOT %out = f32[64,4]{1,0} reduce-scatter(%agd), replica_groups={{0,1,2,3}}, dimensions={0}, to_apply=%add
+}
+"""
+
+
+def test_split_async_exact_suffix():
+    from repro.analysis.hlo import split_async
+    # str.rstrip("-start") strips a character CLASS:
+    # "reduce-scatter-start".rstrip("-start") == "reduce-scatte"
+    assert split_async("reduce-scatter-start") == ("reduce-scatter",
+                                                   "start")
+    assert split_async("reduce-scatter-done") == ("reduce-scatter", "done")
+    assert split_async("all-gather-start") == ("all-gather", "start")
+    assert split_async("reduce-scatter") == ("reduce-scatter", "")
+    assert split_async("all-to-all") == ("all-to-all", "")
+
+
+def test_async_reduce_scatter_bytes_counted():
+    """Regression: reduce-scatter-start's operand bytes must be counted
+    (the rstrip bug mapped it to op 'reduce-scatte' and dropped them)."""
+    out = collective_bytes(ASYNC_FIXTURE)
+    # async rs-start (256*4*4 B) + sync ROOT rs (256*4*4 B), counted once
+    assert out["reduce-scatter"]["bytes"] == 2 * 256 * 4 * 4
+    assert out["reduce-scatter"]["count"] == 2
+    assert out["all-gather"]["bytes"] == 64 * 4 * 4
+    assert out["all-gather"]["count"] == 1
+
+
+def test_async_sites_collapse_onto_start():
+    from repro.analysis.hlo import collective_sites
+    sites = collective_sites(ASYNC_FIXTURE)
+    by_name = {s.name: s for s in sites}
+    assert "rsd" not in by_name and "agd" not in by_name
+    assert by_name["rs"].async_role == "start"
+    assert by_name["rs"].operand_bytes == 256 * 4 * 4
+    assert by_name["rs"].group_size == 4
+    assert by_name["out"].async_role == ""
+
+
+def test_unpaired_async_raises():
+    import pytest
+
+    from repro.analysis.hlo import HloParseError, collective_sites
+    bad = ASYNC_FIXTURE.replace(
+        "  %rsd = f32[64,4]{1,0} reduce-scatter-done(%rs)\n", "")
+    with pytest.raises(HloParseError, match="unpaired"):
+        collective_sites(bad)
+
+
+# ---------------------------------------------------------------------------
+# shape/instr hardening: scalars, nested tuples, spaces
+# ---------------------------------------------------------------------------
+
+
+def test_parse_instr_scalar_and_tuple_types():
+    from repro.analysis.hlo import parse_instructions
+    text = """
+HloModule t
+ENTRY %main (x: f32[8,4]) -> f32[] {
+  %x = f32[8,4]{1,0} parameter(0)
+  %c = f32[] constant(0)
+  %t = (f32[8,4]{1,0}, s32[]) tuple(%x, %c)
+  %nested = ((f32[8, 4]), (f32[8, 4])) all-reduce-start(%x), to_apply=%add
+  %d = f32[8,4]{1,0} all-reduce-done(%nested)
+  ROOT %r = f32[] reduce(%x, %c), dimensions={0,1}, to_apply=%add
+}
+"""
+    ins = {i.name: i for i in parse_instructions(text)}
+    assert ins["c"].type_str == "f32[]"         # scalar result parsed
+    assert ins["t"].op == "tuple"               # tuple-typed result parsed
+    assert ins["nested"].op == "all-reduce-start"   # nested tuple + spaces
+    assert _shape_bytes(ins["nested"].type_str) == 2 * 8 * 4 * 4
+    assert ins["r"].op == "reduce"
+
+
+def test_shape_bytes_spaces_and_scalars():
+    assert _shape_bytes("(f32[8, 4], s32[])") == 8 * 4 * 4 + 4
+    assert _shape_bytes("((f32[2, 3, 4]), (bf16[2, 3, 4]))") == \
+        24 * 4 + 24 * 2
+
+
+# ---------------------------------------------------------------------------
+# loop trip-count multipliers (scanned modules)
+# ---------------------------------------------------------------------------
+
+WHILE_FIXTURE = """
+HloModule t_while
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %r = f32[] add(%a, %b)
+}
+
+%cond (s: (s32[], f32[8,4])) -> pred[] {
+  %s = (s32[], f32[8,4]{1,0}) parameter(0)
+  %i = s32[] get-tuple-element(%s), index=0
+  %n = s32[] constant(7)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+%body (s: (s32[], f32[8,4])) -> (s32[], f32[8,4]) {
+  %s = (s32[], f32[8,4]{1,0}) parameter(0)
+  %i = s32[] get-tuple-element(%s), index=0
+  %x = f32[8,4]{1,0} get-tuple-element(%s), index=1
+  %ar = f32[8,4]{1,0} all-reduce(%x), replica_groups={{0,1}}, to_apply=%add
+  %one = s32[] constant(1)
+  %ip = s32[] add(%i, %one)
+  ROOT %out = (s32[], f32[8,4]{1,0}) tuple(%ip, %ar)
+}
+
+ENTRY %main (x: f32[8,4]) -> (s32[], f32[8,4]) {
+  %x = f32[8,4]{1,0} parameter(0)
+  %z = s32[] constant(0)
+  %init = (s32[], f32[8,4]{1,0}) tuple(%z, %x)
+  ROOT %w = (s32[], f32[8,4]{1,0}) while((s32[], f32[8,4]{1,0}) %init), condition=%cond, body=%body
+}
+"""
+
+
+def test_loop_multiplier_synthetic_while():
+    """The while operand prints with its full inline tuple type — the old
+    regex could not cross the nested parens and every trip count silently
+    fell back to 1."""
+    from repro.analysis.hlo import _loop_multipliers
+    assert _loop_multipliers(WHILE_FIXTURE) == {"body": 7}
+    out = collective_bytes(WHILE_FIXTURE)
+    assert out["all-reduce"]["count"] == 7
+    assert out["all-reduce"]["bytes"] == 7 * 8 * 4 * 4
