@@ -183,6 +183,26 @@ def main(argv=None) -> int:
     emit("decode_profile/modeled_decode_collectives_tuned_us", m_tun * 1e6,
          f"{m_def / m_tun:.2f}x" if m_tun > 0 else "")
 
+    # v1-sunset criterion, machine-checked (ROADMAP "Trace v1 sunset"):
+    # artifacts freshly written by THIS pipeline must re-load without any
+    # deprecation path firing — scoped to our own artifacts so unrelated
+    # library DeprecationWarnings can't fail the job
+    import warnings
+
+    from repro.core.profiles import ProfileStore
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        try:
+            Trace.load(out / "decode_trace.jsonl")
+            for sub in sorted((out / "profiles").iterdir()):
+                if sub.is_dir():
+                    ProfileStore.load(sub)
+        except DeprecationWarning as w:
+            print(f"ERROR: freshly written artifact re-loads through a "
+                  f"deprecated parse path: {w}", file=sys.stderr)
+            return 1
+    emit("decode_profile/artifacts_current_schema", 1.0)
+
     tuned_decode = [r for r in ctx_t.record if r.phase == "decode"]
     nondefault = sorted({r.impl for r in tuned_decode if r.impl != "default"})
     emit("decode_profile/tuned_nondefault_impls", float(len(nondefault)),

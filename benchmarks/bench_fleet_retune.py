@@ -1,0 +1,329 @@
+"""Fleet-scale online retuning: shards → merged profile → live hot-swap.
+
+The continuous-retuning loop at serving scale, simulated on one host:
+
+1. FLEET RECORDING — four "servers" serve a smoke LM over emulated tensor
+   parallelism (``vmap(axis_name="model")``, the CPU stand-in for a TP
+   mesh), each with a different traffic mix (batch / prompt length), each
+   recording into a bounded ``trace.ShardRecorder`` and flushing an
+   epoch-stamped shard file.
+2. MERGE + TUNE — ``Trace.merge_shards`` folds the shard directory into
+   one fleet trace (count summation, weight preserved);
+   ``tuner.tune_trace`` emits per-phase profiles from the union workload.
+   Gate: on the union workload, the merged-trace profile's modeled cost
+   is <= every single-shard profile's (a shard only sees its own slice,
+   so its profile leaves the other servers' cells untuned).
+3. HOT SWAP — a serve loop built ONCE with ``api.tuned(store_ref=...,
+   plan=...)`` keeps stepping while the tuned generation is published to
+   ``$PGTUNE_PROFILE_DIR`` (profiles first, ``MANIFEST.json`` last).
+   ``StoreRef.poll`` adopts the new epoch, ``Plan.vector(ref)`` re-derives
+   the runtime dispatch vector, and the next steps serve the tuned impls.
+   Gate: ZERO new jit compilations across the swap (``_cache_size()``
+   instrumented) while the plan vector provably changed.
+4. STALENESS — a delayed writer regressing the manifest to an older epoch
+   is refused (warning, live generation keeps serving).
+5. EXPLORATION — an epsilon slice of steps runs ``Plan.explore`` vectors
+   (runner-up impls), latencies are fed back via
+   ``ShardRecorder.observe`` → ``#@lat`` shard lines →
+   ``tuner.FeedbackBackend``, and the next epoch is tuned from the
+   fleet's own measurements and hot-swapped in the same way.
+
+Wall-clock on this CPU container measures emulation overhead; decision
+quality is the cost-model latency (same convention as the other
+benchmarks).  Exploration "measurements" are therefore cost-model samples
+with noise — the plumbing (shards, reservoirs, feedback override) is what
+this benchmark exercises end to end.
+
+  PYTHONPATH=src python benchmarks/bench_fleet_retune.py --smoke
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import pathlib
+import sys
+import warnings
+
+_ROOT = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(_ROOT))
+sys.path.insert(0, str(_ROOT / "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from benchmarks.common import emit, header
+from repro.configs import get_config
+from repro.core import api, costmodel as cm, tuner
+from repro.core.profiles import PROFILE_DIR_ENV, resolve_stores
+from repro.core.trace import (ShardRecorder, Trace, load_shard_latencies,
+                              shard_digest)
+from repro.models import lm
+from repro.models.params import init_tree
+
+
+def make_params(cfg, tp):
+    specs = lm.model_specs(cfg, tp=tp)
+
+    def init(key):
+        return init_tree(specs, key, fold=lax.axis_index("model"))
+
+    return jax.jit(jax.vmap(init, axis_name="model", axis_size=tp,
+                            in_axes=None, out_axes=0))(jax.random.key(0))
+
+
+def make_steps(cfg, tp, s_max, batch):
+    """Prefill/decode jits with a TRAILING replicated plan-vector arg —
+    the vector must be an argument (not a closure) so new epochs are new
+    VALUES to an already-compiled step, never new constants."""
+
+    def init_c(_):
+        return lm.init_caches(cfg, batch, s_max)
+
+    def pf(p, c, prompts, vec):
+        with api.plan_input(vec):
+            return lm.prefill(p, cfg, {"tokens": prompts}, c)
+
+    def dc(p, t, c, i, vec):
+        with api.plan_input(vec):
+            return lm.decode_step(p, cfg, t, c, i)
+
+    j_init = jax.jit(jax.vmap(init_c, axis_name="model", axis_size=tp,
+                              in_axes=None, out_axes=0))
+    j_pf = jax.jit(jax.vmap(pf, axis_name="model",
+                            in_axes=(0, 0, None, None)))
+    j_dc = jax.jit(jax.vmap(dc, axis_name="model",
+                            in_axes=(0, None, 0, None, None)))
+    return j_init, j_pf, j_dc
+
+
+def serve_pass(cfg, steps, params, prompts, n_tokens, vec):
+    """One prefill + greedy decode pass, phase-tagged like launch/serve."""
+    j_init, j_pf, j_dc = steps
+    caches = j_init(0)
+    with api.phase("prefill"):
+        logits, caches = j_pf(params, caches, prompts, vec)
+    tok = (jnp.argmax(logits[0][:, -1], axis=-1).astype(jnp.int32)[:, None]
+           % cfg.vocab_size)
+    out = [tok]
+    with api.phase("decode"):
+        for step in range(n_tokens - 1):
+            lg, caches = j_dc(params, tok, caches,
+                              jnp.int32(prompts.shape[1] + step), vec)
+            tok = (jnp.argmax(lg[0][:, -1], axis=-1).astype(jnp.int32)
+                   [:, None] % cfg.vocab_size)
+            out.append(tok)
+    return jnp.concatenate(out, axis=1)
+
+
+def cache_sizes(steps):
+    return tuple(s._cache_size() for s in steps)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3-1b")
+    ap.add_argument("--tp", type=int, default=2,
+                    help="emulated model-axis size")
+    ap.add_argument("--tokens", type=int, default=6)
+    ap.add_argument("--topo", default="bgq-like", choices=sorted(cm.PRESETS))
+    ap.add_argument("--min-win", type=float, default=0.10)
+    ap.add_argument("--eps", type=float, default=0.5,
+                    help="exploration budget (fraction of plan sites)")
+    ap.add_argument("--out", default="results/fleet_retune")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run (tiny fleet / token budget)")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        # eps=1 flips every multi-impl site — the exploration gate must be
+        # deterministic in CI, not a coin flip over a handful of sites
+        args.tokens, args.eps = 4, 1.0
+
+    topo = cm.PRESETS[args.topo]
+    cfg = get_config(args.arch).smoke()
+    # four servers, four traffic mixes: (batch, prompt_len)
+    fleet = [(1, 8), (2, 16), (1, 32), (2, 8)]
+    s_max = max(pl for _, pl in fleet) + args.tokens + 8
+    backend = tuner.CostModelBackend(topo)
+
+    header()
+    out = pathlib.Path(args.out)
+    shard_dir = out / "shards"
+    live_dir = out / "live_profiles"
+    import shutil
+    for d in (shard_dir, live_dir):
+        shutil.rmtree(d, ignore_errors=True)
+    for d in (out, shard_dir, live_dir):
+        d.mkdir(parents=True, exist_ok=True)
+    failures: list[str] = []
+
+    # -- 1. fleet recording: one bounded shard per server --------------------
+    rng = np.random.default_rng(0)
+    for i, (batch, plen) in enumerate(fleet):
+        params = make_params(cfg, args.tp)
+        prompts = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (batch, plen)), jnp.int32)
+        rec = ShardRecorder(f"srv{i}", seed=i)
+        steps = make_steps(cfg, args.tp, s_max, batch)
+        with api.tuned(record=rec):
+            serve_pass(cfg, steps, params, prompts, args.tokens,
+                       jnp.zeros(1, jnp.int32))
+        path = rec.flush(shard_dir, epoch=1)
+        emit(f"fleet_retune/shard{i}/dispatches",
+             float(Trace.load(path).total()), path.name)
+
+    # -- 2. merge + tune: fleet profile must cover every server's slice ------
+    fleet_trace = Trace.merge_shards(shard_dir)
+    shard_traces = [Trace.load(p)
+                    for p in sorted(shard_dir.glob("shard-*.jsonl"))]
+    assert fleet_trace.total() == sum(t.total() for t in shard_traces)
+    emit("fleet_retune/merged/cells", float(len(fleet_trace)))
+    emit("fleet_retune/merged/dispatches", float(fleet_trace.total()))
+
+    rep = tuner.tune_trace(fleet_trace, backend=backend,
+                           min_win=args.min_win)
+    cost_merged = sum(tuner.estimate_trace_cost(
+        fleet_trace, backend, phases=rep.phase_profiles).values())
+    cost_default = sum(tuner.estimate_trace_cost(fleet_trace,
+                                                 backend).values())
+    emit("fleet_retune/union_cost_default_us", cost_default * 1e6)
+    emit("fleet_retune/union_cost_merged_us", cost_merged * 1e6,
+         f"{cost_default / cost_merged:.2f}x" if cost_merged else "")
+    for i, t in enumerate(shard_traces):
+        rep_i = tuner.tune_trace(t, backend=backend, min_win=args.min_win)
+        cost_i = sum(tuner.estimate_trace_cost(
+            fleet_trace, backend, phases=rep_i.phase_profiles).values())
+        emit(f"fleet_retune/union_cost_shard{i}_us", cost_i * 1e6)
+        if cost_merged > cost_i * (1 + 1e-9):
+            failures.append(
+                f"merged profile costs {cost_merged:.3e}s on the union "
+                f"workload, worse than shard {i}'s profile ({cost_i:.3e}s)")
+
+    # -- 3. live serve + hot swap (zero re-jits) -----------------------------
+    os.environ[PROFILE_DIR_ENV] = str(live_dir)
+    ref = resolve_stores(watch=True)
+    if ref.epoch >= 0:
+        failures.append(f"empty live dir resolved to epoch {ref.epoch}")
+    plan = api.Plan(capacity=64)
+    batch, plen = fleet[1]
+    params = make_params(cfg, args.tp)
+    prompts = jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (batch, plen)), jnp.int32)
+    steps = make_steps(cfg, args.tp, s_max, batch)
+    rec2 = ShardRecorder("live", seed=99)
+
+    with api.tuned(store_ref=ref, plan=plan, record=rec2):
+        vec0 = jnp.asarray(plan.vector(ref))
+        gen0 = serve_pass(cfg, steps, params, prompts, args.tokens, vec0)
+        gen0.block_until_ready()
+        sizes0 = cache_sizes(steps)
+        emit("fleet_retune/plan_sites", float(len(plan)),
+             f"capacity {plan.capacity}")
+        if len(plan) == 0:
+            failures.append("no dispatch sites registered on the plan")
+
+        # publish epoch 1 (profiles first, MANIFEST last), then poll
+        rep.save(live_dir, epoch=1,
+                 source_digest=shard_digest(shard_dir))
+        swapped = ref.poll()
+        if not swapped or ref.epoch != 1:
+            failures.append(f"poll did not adopt epoch 1 "
+                            f"(swapped={swapped}, epoch={ref.epoch})")
+        vec1 = jnp.asarray(plan.vector(ref))
+        if bool(jnp.array_equal(vec0, vec1)):
+            failures.append("plan vector unchanged by the new epoch "
+                            "(no tuned selection reached a plan site)")
+        gen1 = serve_pass(cfg, steps, params, prompts, args.tokens, vec1)
+        gen1.block_until_ready()
+        sizes1 = cache_sizes(steps)
+        recompiles = sum(b - a for a, b in zip(sizes0, sizes1))
+        emit("fleet_retune/hotswap_recompilations", float(recompiles),
+             f"cache sizes {sizes0} -> {sizes1}")
+        if recompiles != 0:
+            failures.append(f"hot swap triggered {recompiles} "
+                            "recompilation(s); must be zero")
+        if not bool(jnp.array_equal(gen0, gen1)):
+            failures.append("tuned epoch changed the generated tokens")
+
+        # -- 4. staleness: a delayed epoch-0 writer must be refused ----------
+        from repro.core import profiles as profiles_mod
+        profiles_mod.write_manifest(live_dir, 0)
+        with warnings.catch_warnings(record=True) as wlog:
+            warnings.simplefilter("always")
+            stale_swapped = ref.poll()
+        if stale_swapped or ref.epoch != 1:
+            failures.append("stale epoch 0 manifest was adopted")
+        if not any("stale" in str(w.message) for w in wlog):
+            failures.append("stale manifest refused without a warning")
+        emit("fleet_retune/stale_epoch_refused",
+             float(not stale_swapped and ref.epoch == 1))
+
+        # -- 5. exploration budget -> feedback -> epoch 2 --------------------
+        ex_rng = np.random.default_rng(1)
+        vec2, explored = plan.explore(ref, eps=args.eps, rng=ex_rng)
+        vec2 = jnp.asarray(vec2)
+        serve_pass(cfg, steps, params, prompts, args.tokens,
+                   vec2).block_until_ready()
+        sizes2 = cache_sizes(steps)
+        if sizes2 != sizes1:
+            failures.append("exploration vector triggered recompilation")
+        emit("fleet_retune/explored_sites", float(len(explored)),
+             f"eps={args.eps}")
+        if args.eps >= 1.0 and len(plan) and not explored:
+            failures.append("eps=1 exploration flipped no site")
+        # stand-in for wall clock: cost-model latency + measurement noise
+        for (cell, _ph), impl in explored.items():
+            base_t = backend.latency(cell, impl)
+            for _ in range(4):
+                rec2.observe(cell, impl,
+                             base_t * float(ex_rng.normal(1.0, 0.02)))
+        rec2.flush(shard_dir, epoch=2)
+        observed = load_shard_latencies(shard_dir)
+        if explored and not observed:
+            failures.append("exploration measurements did not round-trip "
+                            "through the shard files")
+        emit("fleet_retune/feedback_pairs", float(len(observed)))
+
+        fb = tuner.FeedbackBackend(backend, observed)
+        rep2 = tuner.tune_trace(Trace.merge_shards(shard_dir), backend=fb,
+                                min_win=args.min_win)
+        rep2.save(live_dir, epoch=2,
+                  source_digest=shard_digest(shard_dir))
+        if not ref.poll() or ref.epoch != 2:
+            failures.append(f"epoch 2 not adopted (epoch={ref.epoch})")
+        vec3 = jnp.asarray(plan.vector(ref))
+        serve_pass(cfg, steps, params, prompts, args.tokens,
+                   vec3).block_until_ready()
+        if cache_sizes(steps) != sizes2:
+            failures.append("epoch 2 hot swap triggered recompilation")
+        emit("fleet_retune/final_epoch", float(ref.epoch))
+
+    (out / "summary.json").write_text(json.dumps({
+        "arch": cfg.name, "tp": args.tp, "topo": args.topo,
+        "fleet": fleet, "merged_cells": len(fleet_trace),
+        "merged_dispatches": fleet_trace.total(),
+        "union_cost_us": {"default": cost_default * 1e6,
+                          "merged": cost_merged * 1e6},
+        "plan_sites": len(plan), "explored_sites": len(explored),
+        "feedback_pairs": len(observed), "final_epoch": ref.epoch,
+        "hotswap_recompilations": recompiles,
+        "failures": failures,
+    }, indent=1))
+
+    for f in failures:
+        print(f"ERROR: {f}", file=sys.stderr)
+    return 1 if failures else 0
+
+
+def run():
+    # benchmarks/run.py entry point: smoke-sized so the suite stays fast
+    rc = main(["--smoke"])
+    if rc:
+        raise RuntimeError("bench_fleet_retune smoke failed")
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

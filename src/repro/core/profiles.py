@@ -15,6 +15,15 @@ over the sorted ranges — the paper's "combination of hash functions and
 binary searches".  ``lookup_cell`` adds the geometry resolution order:
 exact geometry > nearest tuned geometry (same role + dtype, log-space shape
 distance) > the geometry-less (op, p) profile.
+
+Fleet retuning adds an EPOCH to a saved profile directory: ``save(epoch=)``
+writes a ``MANIFEST.json`` (generation number, source-shard digest,
+geometry census) LAST, so a watcher that sees a new manifest sees complete
+profiles.  ``resolve_stores(watch=True)`` returns a ``StoreRef`` — a
+mutable, atomically-swappable reference running ``api.tuned`` contexts
+read through — whose ``poll()`` re-stats the manifest and hot-swaps the
+stores in place; ``swap`` refuses epochs older than the live one (the
+staleness guard).
 """
 from __future__ import annotations
 
@@ -25,6 +34,8 @@ import os
 import pathlib
 
 from repro.core.cell import Geom, OpCell
+
+PROFILE_JSON_VERSION = 2
 
 OP_TO_MPI = {
     "allgather": "MPI_Allgather",
@@ -142,6 +153,7 @@ class Profile:
     # -- JSON ----------------------------------------------------------------
     def to_json(self) -> str:
         d = {
+            "version": PROFILE_JSON_VERSION,
             "op": self.op, "axis_size": self.axis_size,
             "ranges": [dataclasses.asdict(r) for r in self.ranges],
             "meta": self.meta,
@@ -189,10 +201,16 @@ class ProfileStore:
         return p.lookup(nbytes) if p else None
 
     def lookup_cell(self, cell: OpCell) -> str | None:
-        """Resolve a dispatch cell: exact geometry profile first, then the
-        nearest tuned geometry (same role + dtype, minimal log-space shape
-        distance — the unseen-shape fallback), then the geometry-less
-        (op, axis_size) profile."""
+        """Resolve a dispatch cell: exact geometry profile first; on an
+        exact MISS — no profile for this geometry, OR the exact profile's
+        tuned ranges don't cover ``cell.nbytes`` — the nearest OTHER tuned
+        geometry (same role + dtype + p2, minimal log-space shape
+        distance); then the geometry-less (op, axis_size) profile.
+
+        The middle step must run on BOTH kinds of exact miss: an exact
+        profile whose ranges miss the size used to fall straight through
+        to the geometry-less lookup, silently shadowing a tuned
+        near-geometry profile that did cover it."""
         g = cell.geom()
         if g is not None:
             prof = self._by_key.get((cell.op, cell.p, g))
@@ -200,15 +218,18 @@ class ProfileStore:
                 hit = prof.lookup(cell.nbytes)
                 if hit is not None:
                     return hit
-            else:
-                near = [(geom, p) for (op, ax, geom), p in self._by_key.items()
-                        if op == cell.op and ax == cell.p and geom is not None
-                        and geom.mm_role == g.mm_role
-                        and geom.dtype == g.dtype
-                        and geom.p2 == g.p2]
-                if near:
-                    _, prof = min(near, key=lambda kv: g.distance(kv[0]))
-                    return prof.lookup_nearest(cell.nbytes)
+            near = [(geom, p) for (op, ax, geom), p in self._by_key.items()
+                    if op == cell.op and ax == cell.p and geom is not None
+                    and geom != g
+                    and geom.mm_role == g.mm_role
+                    and geom.dtype == g.dtype
+                    and geom.p2 == g.p2]
+            if near:
+                _, nprof = min(near,
+                               key=lambda kv: (g.distance(kv[0]), kv[0]))
+                hit = nprof.lookup_nearest(cell.nbytes)
+                if hit is not None:
+                    return hit
         return self.lookup(cell.op, cell.p, cell.nbytes)
 
     def __len__(self) -> int:
@@ -218,7 +239,13 @@ class ProfileStore:
         return iter(self._by_key.values())
 
     # -- disk ----------------------------------------------------------------
-    def save(self, directory: str | pathlib.Path, *, fmt: str = "text") -> None:
+    def save(self, directory: str | pathlib.Path, *, fmt: str = "text",
+             epoch: int | None = None,
+             source_digest: str | None = None) -> None:
+        """Write one file per profile; with ``epoch=`` also stamp the
+        directory as that fleet generation by writing ``MANIFEST.json``
+        LAST (see ``write_manifest``) so watchers never observe a new
+        epoch before its profiles are complete."""
         d = pathlib.Path(directory)
         d.mkdir(parents=True, exist_ok=True)
         for (op, p_size, geom), prof in sorted(
@@ -231,6 +258,8 @@ class ProfileStore:
                 (d / f"{stem}.pgtune").write_text(prof.to_text())
             else:
                 (d / f"{stem}.json").write_text(prof.to_json())
+        if epoch is not None:
+            write_manifest(d, epoch, source_digest=source_digest, base=self)
 
     @classmethod
     def load(cls, directory: str | pathlib.Path) -> "ProfileStore":
@@ -247,8 +276,202 @@ class ProfileStore:
                     DeprecationWarning, stacklevel=2)
             store.add(Profile.from_text(text))
         for f in sorted(d.glob("*.json")):
-            store.add(Profile.from_json(f.read_text()))
+            if f.name == MANIFEST_NAME:
+                continue
+            text = f.read_text()
+            if "version" not in json.loads(text):
+                # symmetric with the headerless-.pgtune warning above: the
+                # v1 sunset criterion can only trip if BOTH formats warn
+                import warnings
+                warnings.warn(
+                    f"profile file {f} is schema v1 (no 'version' field); "
+                    "v1 parse paths are deprecated — re-save with the "
+                    "current tuner (see ROADMAP 'Trace v1 sunset')",
+                    DeprecationWarning, stacklevel=2)
+            store.add(Profile.from_json(text))
         return store
+
+
+# ---------------------------------------------------------------------------
+# fleet epochs: the profile-directory MANIFEST
+# ---------------------------------------------------------------------------
+
+MANIFEST_NAME = "MANIFEST.json"
+
+
+def _census(stores) -> dict:
+    """Per-op profile/geometry counts across the given stores — the
+    manifest's quick sanity view of what a generation covers."""
+    out: dict[str, dict[str, int]] = {}
+    geoms: dict[str, set] = {}
+    for store in stores:
+        if store is None:
+            continue
+        for prof in store:
+            c = out.setdefault(prof.op, {"profiles": 0, "geometries": 0})
+            c["profiles"] += 1
+            if prof.geom is not None:
+                geoms.setdefault(prof.op, set()).add(prof.geom)
+    for op, gs in geoms.items():
+        out[op]["geometries"] = len(gs)
+    return out
+
+
+def write_manifest(directory: str | pathlib.Path, epoch: int, *,
+                   source_digest: str | None = None,
+                   base: "ProfileStore | None" = None,
+                   phases: "dict[str, ProfileStore] | None" = None) \
+        -> pathlib.Path:
+    """Stamp a profile directory as fleet generation ``epoch``.
+
+    The manifest is the hot-swap unit: ``StoreRef.poll`` re-stats THIS
+    file and reloads only when its epoch advances.  Callers must write
+    all profile files first and the manifest last (this function writes
+    via tmp + ``os.replace``, so the manifest itself appears atomically).
+    ``source_digest`` records provenance — the digest of the trace shards
+    the generation was tuned from (``trace.shard_digest``).
+    """
+    d = pathlib.Path(directory)
+    d.mkdir(parents=True, exist_ok=True)
+    man = {
+        "manifest_version": 1,
+        "epoch": int(epoch),
+        "source": source_digest,
+        "base_profiles": len(base) if base is not None else 0,
+        "phases": {ph: len(st) for ph, st in sorted((phases or {}).items())},
+        "geometry_census": _census([base, *(phases or {}).values()]),
+    }
+    path = d / MANIFEST_NAME
+    tmp = d / (MANIFEST_NAME + ".tmp")
+    tmp.write_text(json.dumps(man, indent=1) + "\n")
+    os.replace(tmp, path)
+    return path
+
+
+def read_manifest(directory: str | pathlib.Path) -> dict | None:
+    """The directory's manifest dict, or None (absent / unreadable —
+    legacy pre-epoch profile directories have no manifest)."""
+    path = pathlib.Path(directory) / MANIFEST_NAME
+    try:
+        man = json.loads(path.read_text())
+    except (OSError, ValueError):
+        return None
+    return man if isinstance(man, dict) and "epoch" in man else None
+
+
+class StoreRef:
+    """A mutable, atomically-swappable reference to resolved profile
+    stores plus their epoch — the hot-swap unit of fleet retuning.
+
+    ``api.tuned(store_ref=ref)`` contexts read impl choices through the
+    ref at dispatch time, and ``api.Plan.vector(ref)`` re-derives runtime
+    dispatch plans from it — so swapping in a new generation changes what
+    a running server serves WITHOUT a re-jit.  State is one tuple
+    attribute assigned in a single store, so readers never observe a
+    half-swapped generation.  ``swap`` refuses epochs older than the live
+    one (the staleness rule: a delayed writer must not roll a fleet
+    back); ``poll`` re-stats ``MANIFEST.json`` in the watched directory
+    and swaps when a newer epoch has landed.
+    """
+
+    def __init__(self, base: "ProfileStore | None" = None,
+                 phases: "dict[str, ProfileStore] | None" = None,
+                 epoch: int = -1,
+                 directory: str | pathlib.Path | None = None):
+        self._state = (int(epoch), base, dict(phases or {}))
+        self.directory = pathlib.Path(directory) if directory else None
+        self._stamp: tuple | None = None
+
+    # -- reads (each reads the state tuple once; no torn views) -------------
+    @property
+    def epoch(self) -> int:
+        return self._state[0]
+
+    @property
+    def base(self) -> "ProfileStore | None":
+        return self._state[1]
+
+    @property
+    def phases(self) -> "dict[str, ProfileStore]":
+        return self._state[2]
+
+    def lookup(self, cell: OpCell, phase: str) -> str | None:
+        """One consistent-generation resolution: the phase store for
+        ``phase`` first, then the base store (same precedence as
+        ``api.tuned(phase_profiles=..., profiles=...)``)."""
+        _epoch, base, phases = self._state
+        store = phases.get(phase)
+        name = store.lookup_cell(cell) if store is not None else None
+        if name is None and base is not None:
+            name = base.lookup_cell(cell)
+        return name
+
+    # -- writes --------------------------------------------------------------
+    def swap(self, base: "ProfileStore | None",
+             phases: "dict[str, ProfileStore] | None",
+             epoch: int) -> bool:
+        """Atomically install a new generation; refuse stale or
+        already-live epochs (returns False, live state unchanged)."""
+        live = self.epoch
+        if int(epoch) < live:
+            import warnings
+            warnings.warn(
+                f"StoreRef.swap: refusing stale epoch {epoch} "
+                f"(live epoch is {live})")
+            return False
+        if int(epoch) == live:
+            return False
+        self._state = (int(epoch), base, dict(phases or {}))
+        return True
+
+    def poll(self) -> bool:
+        """Re-stat the watched directory's manifest; reload + swap when a
+        NEWER epoch has landed.  Returns True iff a swap happened.  All
+        failures (no directory, no/bad manifest, profile load errors)
+        leave the live generation serving and return False — a broken
+        push must not take a fleet down."""
+        if self.directory is None:
+            return False
+        man_path = self.directory / MANIFEST_NAME
+        try:
+            st = man_path.stat()
+            stamp = (st.st_mtime_ns, st.st_size)
+        except OSError:
+            # legacy manifest-less directory: adopt it once as epoch 0
+            if self.epoch < 0 and self.directory.is_dir():
+                try:
+                    base, phases = load_stores(self.directory)
+                except Exception:
+                    return False
+                if base is None and not phases:
+                    return False
+                return self.swap(base, phases, 0)
+            return False
+        if stamp == self._stamp:
+            return False
+        self._stamp = stamp
+        man = read_manifest(self.directory)
+        if man is None:
+            return False
+        epoch = int(man["epoch"])
+        if epoch <= self.epoch:
+            if epoch < self.epoch:
+                import warnings
+                warnings.warn(
+                    f"StoreRef.poll: {man_path} regressed to epoch "
+                    f"{epoch} (live epoch is {self.epoch}); refusing "
+                    "the stale generation")
+            return False
+        try:
+            base, phases = load_stores(self.directory)
+        except Exception as e:
+            import warnings
+            warnings.warn(f"StoreRef.poll: epoch {epoch} at "
+                          f"{self.directory} failed to load "
+                          f"({type(e).__name__}: {e}); keeping epoch "
+                          f"{self.epoch}")
+            return False
+        return self.swap(base, phases, epoch)
 
 
 # ---------------------------------------------------------------------------
@@ -279,8 +502,8 @@ def load_stores(directory: str | pathlib.Path) \
     return (base if len(base) else None), phases
 
 
-def resolve_stores(directory: str | pathlib.Path | None = None) \
-        -> tuple["ProfileStore | None", dict[str, "ProfileStore"]]:
+def resolve_stores(directory: str | pathlib.Path | None = None, *,
+                   watch: bool = False):
     """Profile-loading precedence: explicit ``directory`` argument >
     ``$PGTUNE_PROFILE_DIR`` > none (returns ``(None, {})``).
 
@@ -290,7 +513,21 @@ def resolve_stores(directory: str | pathlib.Path | None = None) \
     never asked for them.  The env path is all-or-nothing: any load
     failure, including a parse error in one phase subdirectory, falls back
     to the full no-profile mode ``(None, {})``.
+
+    With ``watch=True`` the return value is a ``StoreRef`` instead: the
+    resolved directory's current generation (epoch from ``MANIFEST.json``;
+    0 for a legacy manifest-less directory; -1 when nothing is loadable
+    yet), watching the directory — call ``ref.poll()`` periodically to
+    pick up new epochs, and hand the ref to ``api.tuned(store_ref=...)``
+    / ``api.Plan.vector(ref)``.  A missing-or-empty directory is NOT an
+    error in watch mode: the ref starts empty and the first poll after a
+    push adopts it.
     """
+    if watch:
+        d = directory or os.environ.get(PROFILE_DIR_ENV, "")
+        ref = StoreRef(directory=d or None)
+        ref.poll()
+        return ref
     if directory:
         return load_stores(directory)
     d = os.environ.get(PROFILE_DIR_ENV, "")

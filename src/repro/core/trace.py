@@ -85,29 +85,43 @@ class TraceEntry:
         return cls(OpCell(op, axis_size, nbytes, **geom), phase, impl, count)
 
     def to_json(self) -> str:
-        d = {"v": SCHEMA_VERSION, "op": self.cell.op, "p": self.cell.p,
-             "nbytes": self.cell.nbytes, "dtype": self.cell.dtype}
-        if self.cell.fused:
-            d["mm"] = [self.cell.mm_k, self.cell.mm_m, self.cell.mm_n]
-            d["role"] = self.cell.mm_role
-        if self.cell.p2:
-            d["p2"] = self.cell.p2      # inner axis of a 2-D cell
+        d = _cell_dict(self.cell)
         d.update(phase=self.phase, impl=self.impl, count=self.count)
         return json.dumps(d)
 
     @classmethod
-    def from_json(cls, line: str) -> "TraceEntry":
-        """Parse a v2 line; v1 lines (no ``v`` key) load with defaulted
-        geometry — fused ops come back with unknown GEMM dims."""
-        d = json.loads(line)
-        mm = d.get("mm") or (0, 0, 0)
-        cell = OpCell(op=d["op"], p=int(d["p"]), nbytes=int(d["nbytes"]),
-                      dtype=d.get("dtype", "float32"),
-                      mm_k=int(mm[0]), mm_m=int(mm[1]), mm_n=int(mm[2]),
-                      mm_role=d.get("role", ""), p2=int(d.get("p2", 0)))
-        return cls(cell=cell, phase=d.get("phase", "fwd"),
+    def from_dict(cls, d: dict) -> "TraceEntry":
+        """Build from a decoded JSONL object; v1 objects (no ``v`` key)
+        load with defaulted geometry — fused ops come back with unknown
+        GEMM dims."""
+        return cls(cell=_cell_from_dict(d), phase=d.get("phase", "fwd"),
                    impl=d.get("impl", "default"),
                    count=int(d.get("count", 1)))
+
+    @classmethod
+    def from_json(cls, line: str) -> "TraceEntry":
+        return cls.from_dict(json.loads(line))
+
+
+def _cell_dict(cell: OpCell) -> dict:
+    """The schema-v2 JSON object for one cell (shared by trace entry
+    lines and shard ``#@lat`` measurement lines)."""
+    d = {"v": SCHEMA_VERSION, "op": cell.op, "p": cell.p,
+         "nbytes": cell.nbytes, "dtype": cell.dtype}
+    if cell.fused:
+        d["mm"] = [cell.mm_k, cell.mm_m, cell.mm_n]
+        d["role"] = cell.mm_role
+    if cell.p2:
+        d["p2"] = cell.p2      # inner axis of a 2-D cell
+    return d
+
+
+def _cell_from_dict(d: dict) -> OpCell:
+    mm = d.get("mm") or (0, 0, 0)
+    return OpCell(op=d["op"], p=int(d["p"]), nbytes=int(d["nbytes"]),
+                  dtype=d.get("dtype", "float32"),
+                  mm_k=int(mm[0]), mm_m=int(mm[1]), mm_n=int(mm[2]),
+                  mm_role=d.get("role", ""), p2=int(d.get("p2", 0)))
 
 
 class Trace:
@@ -200,6 +214,33 @@ class Trace:
                 out._add(e.key(), e.count)
         return out
 
+    @classmethod
+    def merge_shards(cls, directory, *,
+                     pattern: str = "shard-*.jsonl") -> "Trace":
+        """Merge a fleet directory of per-server trace shards (the files
+        ``ShardRecorder.flush`` writes) into one fleet trace.
+
+        Cells are deduplicated by key with count SUMMATION, so the merged
+        trace preserves total dispatch weight exactly: ``merged.total()``
+        equals the sum of the shards' totals, and re-merging any
+        partition of a trace reproduces its ``_cells`` map bit-for-bit.
+        Shards from mixed schema generations merge fine (v1-origin
+        geometry-less fused cells stay distinct problems from their v2
+        geometry twins).  Raises ``FileNotFoundError`` when no shard
+        matches — an empty fleet is a configuration error, not an empty
+        profile generation.
+        """
+        d = pathlib.Path(directory)
+        paths = sorted(d.glob(pattern))
+        if not paths:
+            raise FileNotFoundError(
+                f"no trace shards matching {pattern!r} under {d}")
+        out = cls()
+        for p in paths:
+            for e in cls.load(p):
+                out._add(e.key(), e.count)
+        return out
+
     def summary(self) -> str:
         lines = [f"trace: {len(self)} cells, {self.total()} dispatches"]
         for ph in self.phases():
@@ -216,13 +257,15 @@ class Trace:
 
     @classmethod
     def from_jsonl(cls, text: str, *, source: str | None = None) -> "Trace":
-        """Parse JSONL; any v1 line (no ``"v"`` key) triggers ONE
-        ``DeprecationWarning`` naming ``source`` (the v1 sunset step — the
-        lines still load with defaulted geometry, but fused cells lose
-        their GEMM and the measured backend note-skips them; re-record)."""
-        lines = [ln for ln in text.splitlines()
-                 if ln.strip() and not ln.lstrip().startswith("#")]
-        n_v1 = sum(1 for ln in lines if '"v"' not in ln)
+        """Parse JSONL; any v1 line (no ``"v"`` KEY in the decoded object
+        — substring tests misclassify lines whose string values contain
+        ``"v"``) triggers ONE ``DeprecationWarning`` naming ``source``
+        (the v1 sunset step — the lines still load with defaulted
+        geometry, but fused cells lose their GEMM and the measured
+        backend note-skips them; re-record)."""
+        objs = [json.loads(ln) for ln in text.splitlines()
+                if ln.strip() and not ln.lstrip().startswith("#")]
+        n_v1 = sum(1 for d in objs if "v" not in d)
         if n_v1:
             import warnings
             warnings.warn(
@@ -230,7 +273,7 @@ class Trace:
                 "line(s) (no 'v' key); v1 parse paths are deprecated — "
                 "re-record with the current dispatcher (see ROADMAP "
                 "'Trace v1 sunset')", DeprecationWarning, stacklevel=2)
-        return cls([TraceEntry.from_json(ln) for ln in lines])
+        return cls([TraceEntry.from_dict(d) for d in objs])
 
     def save(self, path: str | pathlib.Path) -> None:
         p = pathlib.Path(path)
@@ -241,3 +284,179 @@ class Trace:
     def load(cls, path: str | pathlib.Path) -> "Trace":
         p = pathlib.Path(path)
         return cls.from_jsonl(p.read_text(), source=str(p))
+
+
+# ---------------------------------------------------------------------------
+# fleet shards: per-server sampled recording + epoch-stamped shard files
+# ---------------------------------------------------------------------------
+
+SHARD_HEADER = "#@shard "
+LAT_PREFIX = "#@lat "
+
+
+class ShardRecorder:
+    """A ``record=`` sink for ``api.tuned`` that samples dispatches across
+    recompilations into a bounded cell multiset and flushes epoch-stamped
+    per-server shard files — one fleet server's contribution to the next
+    tuning generation.
+
+    A plain ``record=[]`` list grows with every re-trace (new shapes,
+    donation misses) for the life of a serving process; the recorder
+    instead aggregates ``(cell, phase, impl) -> count`` with two bounds:
+
+    * counts for admitted cells are exact (an int per cell is cheap);
+    * DISTINCT cells are admitted by reservoir sampling (Algorithm R over
+      the stream of first-seen cells): once ``max_cells`` are held, the
+      ``i``-th new cell replaces a uniformly random incumbent with
+      probability ``max_cells / i``, so under shape churn the shard is a
+      uniform sample of the cell population and memory stays bounded.
+      Evicted/undrawn dispatch weight is accounted in the shard header's
+      ``dropped`` field — sampling is explicit, never silent.
+
+    Exploration measurements (``observe``) keep at most ``reservoir``
+    latency samples per (cell, impl), also via Algorithm R; they ride in
+    the shard as ``#@lat`` comment lines (invisible to ``Trace`` parsers,
+    read back by ``load_shard_latencies``) and feed the next epoch's
+    tuning via ``tuner.FeedbackBackend``.
+
+    ``flush(directory, epoch)`` writes ``shard-<server>-e<epoch>.jsonl``
+    atomically (tmp + rename) and RESETS the recorder — each shard is one
+    epoch's window, not a cumulative history.
+    """
+
+    def __init__(self, server: str, *, max_cells: int = 4096,
+                 reservoir: int = 32, seed: int = 0):
+        import random
+        self.server = str(server)
+        self.max_cells = int(max_cells)
+        self.reservoir = int(reservoir)
+        self._rng = random.Random(seed)
+        self._reset()
+
+    def _reset(self) -> None:
+        self._counts: dict[tuple[OpCell, str, str], int] = {}
+        self._keys: list[tuple[OpCell, str, str]] = []
+        self._seen_keys = 0
+        self.dropped = 0
+        self._lat: dict[tuple[OpCell, str], list[float]] = {}
+        self._lat_n: dict[tuple[OpCell, str], int] = {}
+
+    # -- the api.tuned record sink -------------------------------------------
+    def append(self, rec) -> None:
+        """Record one dispatch (``DispatchRecord`` or legacy 5-tuple)."""
+        if hasattr(rec, "cell"):
+            key = (rec.cell, rec.phase, rec.impl)
+        else:
+            op, p, nbytes, impl, phase = rec
+            key = (OpCell(op, p, nbytes), phase, impl)
+        if key in self._counts:
+            self._counts[key] += 1
+            return
+        self._seen_keys += 1
+        if len(self._counts) < self.max_cells:
+            self._counts[key] = 1
+            self._keys.append(key)
+            return
+        j = self._rng.randrange(self._seen_keys)
+        if j < self.max_cells:
+            victim = self._keys[j]
+            self.dropped += self._counts.pop(victim)
+            self._keys[j] = key
+            self._counts[key] = 1
+        else:
+            self.dropped += 1
+
+    # -- exploration feedback ------------------------------------------------
+    def observe(self, cell: OpCell, impl: str, latency_s: float) -> None:
+        """Feed one live latency measurement for (cell, impl) — the
+        exploration budget's signal back into the next epoch."""
+        key = (cell, impl)
+        n = self._lat_n.get(key, 0) + 1
+        self._lat_n[key] = n
+        buf = self._lat.setdefault(key, [])
+        if len(buf) < self.reservoir:
+            buf.append(float(latency_s))
+            return
+        j = self._rng.randrange(n)
+        if j < self.reservoir:
+            buf[j] = float(latency_s)
+
+    # -- views ---------------------------------------------------------------
+    def trace(self) -> Trace:
+        return Trace(TraceEntry(c, ph, im, n)
+                     for (c, ph, im), n in self._counts.items())
+
+    def total(self) -> int:
+        return sum(self._counts.values())
+
+    def __len__(self) -> int:
+        return len(self._counts)
+
+    # -- disk ----------------------------------------------------------------
+    def flush(self, directory: str | pathlib.Path,
+              epoch: int) -> pathlib.Path:
+        """Write this window's epoch-stamped shard file and reset."""
+        d = pathlib.Path(directory)
+        d.mkdir(parents=True, exist_ok=True)
+        path = d / f"shard-{self.server}-e{int(epoch):06d}.jsonl"
+        header = {"server": self.server, "epoch": int(epoch),
+                  "cells": len(self._counts), "dispatches": self.total(),
+                  "dropped": self.dropped}
+        lines = [SHARD_HEADER + json.dumps(header)]
+        lines += [e.to_json() for e in self.trace().entries]
+        for (cell, impl), buf in sorted(self._lat.items(),
+                                        key=lambda kv: (kv[0][0], kv[0][1])):
+            m = _cell_dict(cell)
+            m.update(impl=impl, lat_s=buf,
+                     observed=self._lat_n[(cell, impl)])
+            lines.append(LAT_PREFIX + json.dumps(m))
+        tmp = path.with_name(path.name + ".tmp")
+        tmp.write_text("\n".join(lines) + "\n")
+        import os
+        os.replace(tmp, path)
+        self._reset()
+        return path
+
+
+def shard_meta(path: str | pathlib.Path) -> dict | None:
+    """The ``#@shard`` header of one shard file, or None."""
+    with open(path) as f:
+        first = f.readline()
+    if not first.startswith(SHARD_HEADER):
+        return None
+    try:
+        return json.loads(first[len(SHARD_HEADER):])
+    except ValueError:
+        return None
+
+
+def shard_digest(directory: str | pathlib.Path, *,
+                 pattern: str = "shard-*.jsonl") -> str:
+    """Content digest over the shard set (sorted by filename) — the
+    provenance a profile generation's MANIFEST records as ``source``."""
+    import hashlib
+    d = pathlib.Path(directory)
+    h = hashlib.sha256()
+    for p in sorted(d.glob(pattern)):
+        h.update(p.name.encode())
+        h.update(b"\0")
+        h.update(p.read_bytes())
+    return "sha256:" + h.hexdigest()
+
+
+def load_shard_latencies(directory: str | pathlib.Path, *,
+                         pattern: str = "shard-*.jsonl") \
+        -> dict[tuple[OpCell, str], list[float]]:
+    """All exploration measurements across a fleet's shard files:
+    ``(cell, impl) -> [latency_s, ...]`` (samples concatenated across
+    servers; feed to ``tuner.FeedbackBackend``)."""
+    out: dict[tuple[OpCell, str], list[float]] = {}
+    d = pathlib.Path(directory)
+    for p in sorted(d.glob(pattern)):
+        for ln in p.read_text().splitlines():
+            if not ln.startswith(LAT_PREFIX):
+                continue
+            m = json.loads(ln[len(LAT_PREFIX):])
+            key = (_cell_from_dict(m), m["impl"])
+            out.setdefault(key, []).extend(float(t) for t in m["lat_s"])
+    return out

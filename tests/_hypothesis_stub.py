@@ -3,7 +3,7 @@ this container; conftest.py registers this module in ``sys.modules`` only
 when the real package is missing).
 
 Implements exactly the surface the suite uses — ``@given`` over
-``integers`` / ``sampled_from`` / ``lists`` strategies and
+``integers`` / ``sampled_from`` / ``lists`` / ``tuples`` strategies and
 ``@settings(max_examples=..., deadline=...)``.  Draws come from a
 fixed-seed PRNG, so the property tests become deterministic sweeps:
 weaker than real hypothesis (no shrinking, no adaptive search) but the
@@ -55,10 +55,15 @@ def _lists(elements, min_size=0, max_size=None, unique=False):
     return _Strategy(draw)
 
 
+def _tuples(*strats):
+    return _Strategy(lambda r: tuple(s.example(r) for s in strats))
+
+
 strategies = types.ModuleType("hypothesis.strategies")
 strategies.integers = _integers
 strategies.sampled_from = _sampled_from
 strategies.lists = _lists
+strategies.tuples = _tuples
 
 
 def settings(max_examples: int = 20, deadline=None, **_ignored):

@@ -1,0 +1,446 @@
+"""Fleet-scale online retuning: shard recording, epochal profiles,
+store-ref hot swap, and runtime dispatch plans.
+
+Covers the ISSUE-7 tentpole end to end at unit scale: bounded per-server
+``ShardRecorder``s, weight-preserving ``Trace.merge_shards``, MANIFEST
+epochs with the staleness rule, and the zero-re-jit hot swap (a jitted
+step's impl choice provably changes at RUNTIME through the plan vector
+while the jit cache stays at one entry).
+"""
+import json
+import warnings
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import api, collectives as C, tuner
+from repro.core.cell import OpCell
+from repro.core.profiles import (MANIFEST_NAME, Profile, ProfileStore,
+                                 Range, StoreRef, read_manifest,
+                                 resolve_stores, write_manifest)
+from repro.core.trace import (ShardRecorder, Trace, TraceEntry,
+                              load_shard_latencies, shard_digest,
+                              shard_meta)
+from repro.core.tuner import FeedbackBackend, estimate_trace_cost
+
+
+# ---------------------------------------------------------------------------
+# ShardRecorder: bounded sampling across recompilations
+# ---------------------------------------------------------------------------
+
+
+def _rec(op="allreduce", p=4, nbytes=512, impl="default", phase="fwd"):
+    return api.DispatchRecord(OpCell(op, p, nbytes), impl, phase)
+
+
+def test_shard_recorder_aggregates_and_accepts_both_record_shapes():
+    r = ShardRecorder("srv0")
+    r.append(_rec())
+    r.append(_rec())
+    r.append(("allreduce", 4, 512, "default", "fwd"))   # legacy 5-tuple
+    r.append(_rec(phase="bwd"))
+    assert len(r) == 2
+    assert r.total() == 4
+    assert r.trace().cells() == {OpCell("allreduce", 4, 512): 4}
+
+
+def test_shard_recorder_bounds_distinct_cells_and_accounts_drops():
+    r = ShardRecorder("srv0", max_cells=4, seed=7)
+    for i in range(50):
+        r.append(_rec(nbytes=8 * (i + 1)))
+    assert len(r) <= 4
+    # every dispatch is either held in a cell count or accounted dropped
+    assert r.total() + r.dropped == 50
+    # held counts stay exact: re-dispatching a held cell never drops
+    held = next(iter(r.trace().cells()))
+    before = r.total()
+    r.append(_rec(nbytes=held.nbytes))
+    assert r.total() == before + 1
+
+
+def test_shard_recorder_flush_writes_header_and_resets(tmp_path):
+    r = ShardRecorder("srv3")
+    for _ in range(5):
+        r.append(_rec())
+    r.observe(OpCell("allreduce", 4, 512), "allreduce_as_doubling", 1e-4)
+    path = r.flush(tmp_path, epoch=2)
+    assert path.name == "shard-srv3-e000002.jsonl"
+    meta = shard_meta(path)
+    assert meta["server"] == "srv3" and meta["epoch"] == 2
+    assert meta["dispatches"] == 5 and meta["dropped"] == 0
+    # comment-prefixed header/#@lat lines are invisible to Trace parsers
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        t = Trace.load(path)
+    assert t.total() == 5
+    # flush resets the window — the next epoch starts empty
+    assert len(r) == 0 and r.total() == 0 and r.dropped == 0
+
+
+def test_latency_reservoir_bounds_samples_keeps_observed_count(tmp_path):
+    r = ShardRecorder("srv0", reservoir=8, seed=1)
+    cell = OpCell("allreduce", 4, 512)
+    for i in range(100):
+        r.observe(cell, "allreduce_as_doubling", 1e-6 * (i + 1))
+    r.append(_rec())
+    path = r.flush(tmp_path, epoch=1)
+    lat_lines = [ln for ln in path.read_text().splitlines()
+                 if ln.startswith("#@lat ")]
+    assert len(lat_lines) == 1
+    m = json.loads(lat_lines[0][len("#@lat "):])
+    assert len(m["lat_s"]) == 8            # reservoir bound
+    assert m["observed"] == 100            # true sample count preserved
+    back = load_shard_latencies(tmp_path)
+    assert len(back[(cell, "allreduce_as_doubling")]) == 8
+
+
+# ---------------------------------------------------------------------------
+# merge_shards: fleet weight conservation
+# ---------------------------------------------------------------------------
+
+
+def test_merge_shards_preserves_total_weight(tmp_path):
+    recs = [ShardRecorder(f"srv{i}") for i in range(3)]
+    for i, r in enumerate(recs):
+        for j in range(i + 1):
+            r.append(_rec(nbytes=256 * (j + 1)))
+            r.append(_rec(op="allgather", phase="decode"))
+        r.flush(tmp_path, epoch=1)
+    merged = Trace.merge_shards(tmp_path)
+    assert merged.total() == sum(i + 1 for i in range(3)) * 2
+    assert merged.cells(phase="decode") == {OpCell("allgather", 4, 512): 6}
+
+
+def test_merge_shards_empty_directory_raises(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        Trace.merge_shards(tmp_path)
+
+
+def test_shard_digest_tracks_content(tmp_path):
+    r = ShardRecorder("a")
+    r.append(_rec())
+    r.flush(tmp_path, epoch=1)
+    d1 = shard_digest(tmp_path)
+    assert d1.startswith("sha256:")
+    r.append(_rec(nbytes=4096))
+    r.flush(tmp_path, epoch=2)
+    assert shard_digest(tmp_path) != d1
+
+
+# ---------------------------------------------------------------------------
+# MANIFEST + epochs
+# ---------------------------------------------------------------------------
+
+
+def _store(impl="allreduce_as_doubling", lo=1, hi=1 << 20):
+    return ProfileStore([Profile(op="allreduce", axis_size=4,
+                                 ranges=[Range(lo, hi, impl)])])
+
+
+def test_manifest_roundtrip_with_census(tmp_path):
+    write_manifest(tmp_path, 3, source_digest="sha256:abc",
+                   base=_store(), phases={"decode": _store()})
+    man = read_manifest(tmp_path)
+    assert man["epoch"] == 3
+    assert man["source"] == "sha256:abc"
+    assert man["phases"] == {"decode": 1}
+    assert man["geometry_census"]["allreduce"]["profiles"] == 2
+
+
+def test_profile_store_save_with_epoch_writes_manifest(tmp_path):
+    _store().save(tmp_path, epoch=5, source_digest="sha256:xyz")
+    man = read_manifest(tmp_path)
+    assert man["epoch"] == 5 and man["source"] == "sha256:xyz"
+    # the MANIFEST must not be mistaken for a JSON profile on re-load
+    back = ProfileStore.load(tmp_path)
+    assert len(back) == 1
+
+
+def test_trace_tune_report_save_with_epoch(tmp_path):
+    rep = tuner.TraceTuneReport(
+        phase_profiles={"decode": _store()}, measurements=[],
+        est_default_s={"decode": 1.0}, est_tuned_s={"decode": 0.5})
+    rep.save(tmp_path, epoch=7, source_digest="sha256:s")
+    man = read_manifest(tmp_path)
+    assert man["epoch"] == 7 and man["phases"] == {"decode": 1}
+    assert (tmp_path / "decode").is_dir()
+
+
+# ---------------------------------------------------------------------------
+# StoreRef: atomic swap, staleness, watch/poll
+# ---------------------------------------------------------------------------
+
+
+def test_store_ref_lookup_phase_over_base():
+    ref = StoreRef(base=_store("implBase"),
+                   phases={"decode": _store("implDecode")}, epoch=0)
+    cell = OpCell("allreduce", 4, 512)
+    assert ref.lookup(cell, "decode") == "implDecode"
+    assert ref.lookup(cell, "prefill") == "implBase"
+
+
+def test_store_ref_swap_refuses_stale_epoch():
+    ref = StoreRef(base=_store("implA"), epoch=4)
+    with pytest.warns(UserWarning, match="stale"):
+        assert not ref.swap(_store("implB"), None, 3)
+    assert ref.epoch == 4
+    assert ref.lookup(OpCell("allreduce", 4, 512), "fwd") == "implA"
+    assert not ref.swap(_store("implB"), None, 4)    # same epoch: no-op
+    assert ref.swap(_store("implB"), None, 5)
+    assert ref.lookup(OpCell("allreduce", 4, 512), "fwd") == "implB"
+
+
+def test_store_ref_poll_adopts_new_epoch_and_refuses_regression(tmp_path):
+    ref = StoreRef(directory=tmp_path)
+    assert not ref.poll()                  # empty dir: nothing to adopt
+    _store("implA").save(tmp_path, epoch=1)
+    assert ref.poll()
+    assert ref.epoch == 1
+    assert ref.lookup(OpCell("allreduce", 4, 512), "fwd") == "implA"
+    assert not ref.poll()                  # unchanged manifest: no re-stat
+    # a delayed writer regressing the manifest must be refused
+    write_manifest(tmp_path, 0)
+    with pytest.warns(UserWarning, match="stale"):
+        assert not ref.poll()
+    assert ref.epoch == 1
+    # a newer epoch lands: adopted
+    _store("implB").save(tmp_path, epoch=2)
+    assert ref.poll()
+    assert ref.epoch == 2
+    assert ref.lookup(OpCell("allreduce", 4, 512), "fwd") == "implB"
+
+
+def test_store_ref_poll_adopts_legacy_manifestless_dir_once(tmp_path):
+    _store("implA").save(tmp_path)         # no epoch, no MANIFEST
+    ref = StoreRef(directory=tmp_path)
+    assert ref.poll()
+    assert ref.epoch == 0
+    assert not ref.poll()                  # adopted once, not re-adopted
+
+
+def test_resolve_stores_watch_mode_returns_ref(tmp_path, monkeypatch):
+    _store("implA").save(tmp_path, epoch=4)
+    monkeypatch.setenv("PGTUNE_PROFILE_DIR", str(tmp_path))
+    ref = resolve_stores(watch=True)
+    assert isinstance(ref, StoreRef)
+    assert ref.epoch == 4                  # first poll happens at resolve
+    assert ref.lookup(OpCell("allreduce", 4, 512), "fwd") == "implA"
+
+
+def test_resolve_stores_watch_mode_unset_env(monkeypatch):
+    monkeypatch.delenv("PGTUNE_PROFILE_DIR", raising=False)
+    ref = resolve_stores(watch=True)
+    assert ref.epoch == -1 and not ref.poll()
+
+
+# ---------------------------------------------------------------------------
+# Plan: stable slots, capacity, vectors, exploration
+# ---------------------------------------------------------------------------
+
+
+def test_plan_slots_stable_across_reregistration():
+    plan = api.Plan(capacity=8)
+    cell = OpCell("allreduce", 4, 512)
+    impls = ("default", "a", "b")
+    s = plan.slot(cell, "fwd", impls)
+    assert plan.slot(cell, "fwd", impls) == s      # recompilation: same slot
+    assert plan.slot(cell, "bwd", impls) == s + 1  # new phase: new site
+    # admissible-set drift disables the site rather than mis-indexing
+    assert plan.slot(cell, "fwd", ("default", "a")) is None
+
+
+def test_plan_capacity_exhaustion_returns_none():
+    plan = api.Plan(capacity=2)
+    impls = ("default", "a")
+    assert plan.slot(OpCell("allreduce", 4, 8), "fwd", impls) == 0
+    assert plan.slot(OpCell("allreduce", 4, 16), "fwd", impls) == 1
+    assert plan.slot(OpCell("allreduce", 4, 32), "fwd", impls) is None
+    assert len(plan) == 2
+
+
+def test_plan_vector_resolves_through_stores_and_ref():
+    plan = api.Plan(capacity=4)
+    cell = OpCell("allreduce", 4, 512)
+    impls = ("default", "allreduce_as_doubling", "allreduce_as_rsb_allgather")
+    s = plan.slot(cell, "decode", impls)
+    vec = plan.vector(base=_store("allreduce_as_doubling"))
+    assert vec.dtype == np.int32 and vec.shape == (4,)
+    assert vec[s] == 1
+    # unknown selection (not admissible at this site) falls back to 0
+    assert plan.vector(base=_store("not_an_impl"))[s] == 0
+    ref = StoreRef(phases={"decode": _store("allreduce_as_rsb_allgather")},
+                   epoch=1)
+    assert plan.vector(ref)[s] == 2
+    assert plan.vector()[s] == 0           # no stores: default
+
+
+def test_plan_explore_flips_to_cyclic_next():
+    plan = api.Plan(capacity=4)
+    cell = OpCell("allreduce", 4, 512)
+    impls = ("default", "allreduce_as_doubling", "allreduce_as_rsb_allgather")
+    s = plan.slot(cell, "fwd", impls)
+    rng = np.random.default_rng(0)
+    vec, explored = plan.explore(eps=1.0, rng=rng,
+                                 base=_store("allreduce_as_doubling"))
+    assert vec[s] == 2                     # 1 -> next in the ring
+    assert explored[(cell, "fwd")] == "allreduce_as_rsb_allgather"
+    vec0, explored0 = plan.explore(eps=0.0, rng=rng,
+                                   base=_store("allreduce_as_doubling"))
+    assert vec0[s] == 1 and not explored0  # eps=0: pure exploitation
+
+
+# ---------------------------------------------------------------------------
+# runtime dispatch: the hot swap happens with ZERO re-jits
+# ---------------------------------------------------------------------------
+
+
+P = 4
+
+
+@pytest.fixture
+def probe_impl(monkeypatch):
+    """A marker impl whose output is distinguishable from any real
+    allreduce — proof of which switch branch RAN (not which was traced)."""
+    probe = C.Impl(name="probe_marker", op="allreduce",
+                   fn=lambda x, axis, **kw: jnp.full_like(x, 42.0),
+                   guideline="EXT", extra_bytes=lambda n, p: 0)
+    monkeypatch.setitem(C.REGISTRY["allreduce"], "probe_marker", probe)
+    return probe
+
+
+def test_plan_dispatch_switches_impl_at_runtime_zero_retrace(probe_impl):
+    plan = api.Plan(capacity=8)
+    ref = StoreRef()
+
+    def step(x, vec):
+        with api.plan_input(vec):
+            return api.allreduce(x, "ax")
+
+    f = jax.jit(jax.vmap(step, axis_name="ax", in_axes=(0, None)))
+    x = jnp.ones((P, 4), jnp.float32)
+    with api.tuned(store_ref=ref, plan=plan):
+        out0 = f(x, jnp.zeros(plan.capacity, jnp.int32))
+        assert f._cache_size() == 1
+        sites = plan.sites()
+        assert len(sites) == 1
+        cell, phase, impls = sites[0]
+        assert "probe_marker" in impls
+        np.testing.assert_allclose(out0, np.full((P, 4), float(P)))
+
+        # hot-swap: a generation that selects the probe impl
+        ref.swap(ProfileStore([Profile(op="allreduce", axis_size=P,
+                                       ranges=[Range(1, 1 << 20,
+                                                     "probe_marker")])]),
+                 None, epoch=1)
+        vec1 = jnp.asarray(plan.vector(ref))
+        assert int(vec1.sum()) > 0
+        out1 = f(x, vec1)
+        np.testing.assert_allclose(out1, np.full((P, 4), 42.0))
+        # the defining property: the impl CHANGED, the jit cache did not
+        assert f._cache_size() == 1
+
+
+def test_plan_dispatch_all_real_impls_agree_under_vmap():
+    """Every admissible branch of the runtime switch is a correct
+    allreduce: cycling the plan vector through all of them must
+    reproduce the default's numbers (and never re-trace)."""
+    plan = api.Plan(capacity=8)
+
+    def step(x, vec):
+        with api.plan_input(vec):
+            return api.allreduce(x, "ax")
+
+    f = jax.jit(jax.vmap(step, axis_name="ax", in_axes=(0, None)))
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(P, 8)), jnp.float32)
+    with api.tuned(store_ref=StoreRef(), plan=plan):
+        ref_out = f(x, jnp.zeros(plan.capacity, jnp.int32))
+        ((_cell, _ph, impls),) = plan.sites()
+        for i in range(1, len(impls)):
+            vec = np.zeros(plan.capacity, np.int32)
+            vec[0] = i
+            out = f(x, jnp.asarray(vec))
+            np.testing.assert_allclose(out, ref_out, rtol=2e-5,
+                                       err_msg=impls[i])
+        assert f._cache_size() == 1
+
+
+def test_plan_dispatch_respects_force_and_static_fallback(probe_impl):
+    """Forced ops and capacity-exhausted sites bypass the plan: they
+    dispatch statically like before (recorded with their real impl, not
+    the 'plan' marker)."""
+    plan = api.Plan(capacity=0)            # no capacity: every site static
+
+    def step(x, vec):
+        with api.plan_input(vec):
+            return api.allreduce(x, "ax")
+
+    f = jax.jit(jax.vmap(step, axis_name="ax", in_axes=(0, None)))
+    x = jnp.ones((P, 2), jnp.float32)
+    with api.tuned(store_ref=StoreRef(), plan=plan) as ctx:
+        out = f(x, jnp.zeros(4, jnp.int32))
+    np.testing.assert_allclose(out, np.full((P, 2), float(P)))
+    assert len(plan) == 0
+    assert [r.impl for r in ctx.record] == ["default"]
+
+    plan2 = api.Plan(capacity=8)
+    with api.tuned(force={"allreduce": "probe_marker"}, plan=plan2) as ctx2:
+        out2 = jax.jit(jax.vmap(
+            lambda x, v: step(x, v), axis_name="ax",
+            in_axes=(0, None)))(x, jnp.zeros(8, jnp.int32))
+    np.testing.assert_allclose(out2, np.full((P, 2), 42.0))
+    assert len(plan2) == 0                 # forced op never joins the plan
+    assert [r.impl for r in ctx2.record] == ["probe_marker"]
+
+
+def test_plan_dispatch_records_plan_marker(probe_impl):
+    plan = api.Plan(capacity=8)
+
+    def step(x, vec):
+        with api.plan_input(vec):
+            return api.allreduce(x, "ax")
+
+    with api.tuned(store_ref=StoreRef(), plan=plan) as ctx:
+        jax.jit(jax.vmap(step, axis_name="ax", in_axes=(0, None)))(
+            jnp.ones((P, 2), jnp.float32), jnp.zeros(8, jnp.int32))
+    assert [r.impl for r in ctx.record] == [api.PLAN_IMPL]
+
+
+# ---------------------------------------------------------------------------
+# feedback: exploration measurements drive the next epoch
+# ---------------------------------------------------------------------------
+
+
+def test_feedback_backend_overrides_with_observed_median():
+    from repro.core import costmodel
+    base = tuner.CostModelBackend(costmodel.V5E_ICI)
+    cell = OpCell("allreduce", 4, 4096)
+    obs = {(cell, "default"): [3e-6, 1e-6, 2e-6]}
+    fb = FeedbackBackend(base, obs, min_samples=3)
+    assert fb.latency(cell, "default") == 2e-6            # median
+    assert fb.nrep_for(cell, "default") == 3
+    # under-sampled pairs and unseen cells fall back to the base model
+    fb2 = FeedbackBackend(base, obs, min_samples=5)
+    assert fb2.latency(cell, "default") == base.latency(cell, "default")
+    other = OpCell("allreduce", 4, 128)
+    assert fb.latency(other, "default") == base.latency(other, "default")
+
+
+def test_estimate_trace_cost_prices_profile_selection():
+    from repro.core import costmodel
+    backend = tuner.CostModelBackend(costmodel.V5E_ICI)
+    t = Trace([TraceEntry.of("allreduce", 16, 1 << 20, "decode", count=10)])
+    untuned = estimate_trace_cost(t, backend)
+    rep = tuner.tune_trace(t, backend=backend)
+    tuned = estimate_trace_cost(t, backend, phases=rep.phase_profiles)
+    assert set(untuned) == {"decode"}
+    if rep.phase_profiles:                 # a violation was found
+        assert tuned["decode"] < untuned["decode"]
+    # an inadmissible selection silently degrades to the default price
+    bad = {"decode": _store("not_an_impl", hi=1 << 30)}
+    cell16 = Trace([TraceEntry.of("allreduce", 16, 1 << 20, "decode")])
+    assert (estimate_trace_cost(cell16, backend, phases=bad)["decode"]
+            == estimate_trace_cost(cell16, backend)["decode"])

@@ -11,12 +11,17 @@ paper applies to hand-picked cells, here swept across the cell space:
    cost model — neither below the pure-compute term nor below the ring's
    communication-only term (and the unfused default never below either);
 4. profile text/JSON round-trips are identities (incl. 2-D ``#@geom``
-   headers with the trailing p2 token).
+   headers with the trailing p2 token);
+5. ``Trace.merge`` conserves dispatch weight under ANY partition of a
+   fleet trace into per-server shards — even when one shard round-trips
+   through schema-v1 JSONL (the migration path for old recorders).
 
 Each invariant must see >= 8 generated cells per run (asserted at the end
 — the deterministic stub makes the draw sequence reproducible).
 """
+import json
 import math
+import warnings
 
 import pytest
 from hypothesis import given, settings, strategies as st
@@ -25,6 +30,7 @@ from repro.core import costmodel as cm
 from repro.core.cell import Geom, OpCell
 from repro.core.collectives import REGISTRY
 from repro.core.profiles import Profile, ProfileStore, Range
+from repro.core.trace import Trace, TraceEntry
 
 TOPO = cm.V5E_ICI
 DTYPES = ("float32", "bfloat16", "float16")
@@ -34,7 +40,8 @@ ROLE_OF_OP = {"allgather_matmul": ("gather",),
               "matmul_reducescatter_2d": ("2d", "2dT")}
 FUSED_OPS = tuple(ROLE_OF_OP)
 
-_SEEN = {"nearest": 0, "monotone": 0, "floor": 0, "roundtrip": 0}
+_SEEN = {"nearest": 0, "monotone": 0, "floor": 0, "roundtrip": 0,
+         "merge": 0}
 
 
 def _mk_cell(op, role_i, p, p2, dt_i, k, m, n, nbytes):
@@ -197,6 +204,79 @@ def test_profile_roundtrip_identity(bounds, op_i, role_i, dt_i, k, m, n,
     assert (j1.op, j1.axis_size, j1.ranges, j1.geom) == \
         (prof.op, prof.axis_size, prof.ranges, prof.geom)
     _SEEN["roundtrip"] += 1
+
+
+# ---------------------------------------------------------------------------
+# 5. Trace.merge conserves dispatch weight across arbitrary shardings
+# ---------------------------------------------------------------------------
+
+PLAIN_OPS = ("allreduce", "allgather", "reducescatter", "alltoall")
+PHASES = ("fwd", "prefill", "decode")
+IMPLS = ("default", "allreduce_as_doubling")
+
+
+def _v1_line(entry):
+    """Re-encode a geometry-less entry the way a pre-v2 recorder wrote it:
+    bare fields, no ``v`` key, no geometry."""
+    return json.dumps({"op": entry.op, "p": entry.axis_size,
+                       "nbytes": entry.nbytes, "phase": entry.phase,
+                       "impl": entry.impl, "count": entry.count})
+
+
+@settings(max_examples=24, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, len(PLAIN_OPS) + len(FUSED_OPS) - 1),
+                          st.integers(1, 4),            # log2 axis size
+                          st.integers(1, 10 ** 8),      # nbytes
+                          st.integers(0, len(PHASES) - 1),
+                          st.integers(0, len(IMPLS) - 1),
+                          st.integers(1, 60)),          # count
+                min_size=1, max_size=8),
+       st.integers(2, 4))                               # fleet size
+def test_trace_merge_conserves_weight_across_shards(cells, n_shards):
+    entries = []
+    for op_i, logp, nbytes, ph_i, impl_i, count in cells:
+        if op_i < len(PLAIN_OPS):                       # geometry-less cell
+            entries.append(TraceEntry.of(
+                PLAIN_OPS[op_i], 2 ** logp, nbytes, PHASES[ph_i],
+                IMPLS[impl_i], count))
+        else:                                           # fused 1-D GEMM cell
+            op = FUSED_OPS[op_i - len(PLAIN_OPS)]
+            role = ROLE_OF_OP[op][0]
+            entries.append(TraceEntry.of(
+                op, 2 ** logp, nbytes, PHASES[ph_i], IMPLS[impl_i], count,
+                mm_k=64, mm_m=128, mm_n=32, mm_role=role,
+                p2=4 if role in ("2d", "2dT") else 0))
+    fleet = Trace(entries)
+
+    # partition every cell's count across the fleet (uneven on purpose:
+    # server 0 takes the remainder), each server becoming one shard
+    shard_entries = [[] for _ in range(n_shards)]
+    for e in fleet.entries:
+        per, rem = divmod(e.count, n_shards)
+        for s in range(n_shards):
+            c = per + (rem if s == 0 else 0)
+            if c:
+                shard_entries[s].append(TraceEntry(e.cell, e.phase,
+                                                   e.impl, c))
+
+    # shard 0 additionally round-trips through JSONL with its
+    # geometry-less cells re-encoded as schema v1 (mixed-schema shard);
+    # the deprecation warning must fire exactly when v1 lines exist
+    lines = [(_v1_line(e) if not e.cell.fused else e.to_json())
+             for e in shard_entries[0]]
+    n_v1 = sum(1 for e in shard_entries[0] if not e.cell.fused)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        shard0 = Trace.from_jsonl("\n".join(lines))
+    warned = any(issubclass(w.category, DeprecationWarning) for w in caught)
+    assert warned == bool(n_v1)
+
+    shards = [shard0] + [Trace(es) for es in shard_entries[1:]]
+    merged = shards[0].merge(*shards[1:])
+    assert merged.total() == fleet.total()              # global conservation
+    assert merged == fleet                              # per-(cell,phase,impl)
+    assert sum(s.total() for s in shards) == fleet.total()
+    _SEEN["merge"] += 1
 
 
 # ---------------------------------------------------------------------------

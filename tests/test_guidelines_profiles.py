@@ -184,6 +184,101 @@ def test_store_save_load(tmp_path):
     assert back.lookup("allreduce", 8, 512) is None   # wrong axis size
 
 
+def _geom_cell(nbytes, mm_m=128):
+    from repro.core.cell import OpCell
+    return OpCell("allgather_matmul", 4, nbytes, mm_k=64, mm_m=mm_m,
+                  mm_n=32, mm_role="gather")
+
+
+def test_lookup_cell_exact_geom_range_miss_falls_to_nearest_geom():
+    """Satellite regression: an exact-geometry profile whose ranges miss
+    ``cell.nbytes`` must fall through to the NEAREST-geometry profile,
+    not jump straight to the geometry-less store.  On the pre-fix code
+    the nearest-geometry consultation lived in the ``else`` branch of
+    the exact-profile hit, so exactly this store shadowed implB with
+    implC."""
+    exact = _geom_cell(5000)                      # geom G, nbytes miss
+    near = _geom_cell(5000, mm_m=256)             # geom G' (distance 1)
+    store = ProfileStore([
+        Profile(op="allgather_matmul", axis_size=4,
+                ranges=[Range(1000, 2000, "implA")], geom=exact.geom()),
+        Profile(op="allgather_matmul", axis_size=4,
+                ranges=[Range(1, 10 ** 9, "implB")], geom=near.geom()),
+        Profile(op="allgather_matmul", axis_size=4,
+                ranges=[Range(1, 10 ** 9, "implC")]),   # geometry-less
+    ])
+    # in-range queries still hit the exact-geometry profile first
+    assert store.lookup_cell(_geom_cell(1500)) == "implA"
+    # out-of-range: nearest geometry, NOT the geometry-less store
+    assert store.lookup_cell(exact) == "implB"
+
+
+def test_lookup_cell_exact_geom_miss_no_near_falls_to_geomless():
+    """Without any other same-role geometry the old geometry-less
+    fallback still applies (the fix must not widen beyond the shadow)."""
+    exact = _geom_cell(5000)
+    store = ProfileStore([
+        Profile(op="allgather_matmul", axis_size=4,
+                ranges=[Range(1000, 2000, "implA")], geom=exact.geom()),
+        Profile(op="allgather_matmul", axis_size=4,
+                ranges=[Range(1, 10 ** 9, "implC")]),
+    ])
+    assert store.lookup_cell(exact) == "implC"
+
+
+def test_lookup_cell_nearest_geom_skips_other_role_dtype_axes():
+    """The nearest-geometry fallback only consults profiles that share
+    role, dtype, and inner axis — a scatter-role or 2-D profile is a
+    different communication problem, never a fallback target."""
+    from repro.core.cell import Geom
+    exact = _geom_cell(5000)
+    store = ProfileStore([
+        Profile(op="allgather_matmul", axis_size=4,
+                ranges=[Range(1000, 2000, "implA")], geom=exact.geom()),
+        Profile(op="allgather_matmul", axis_size=4,
+                ranges=[Range(1, 10 ** 9, "implR")],
+                geom=Geom("float32", 64, 256, 32, "scatter")),
+        Profile(op="allgather_matmul", axis_size=4,
+                ranges=[Range(1, 10 ** 9, "implP")],
+                geom=Geom("float32", 64, 256, 32, "gather", p2=2)),
+    ])
+    assert store.lookup_cell(exact) is None
+
+
+def test_profile_json_roundtrip_carries_version_and_loads_silently(
+        tmp_path):
+    """Satellite: the JSON round-trip now carries a schema version, so
+    current-code artifacts re-load without any deprecation path."""
+    import json
+    import warnings
+
+    from repro.core.profiles import PROFILE_JSON_VERSION
+    store = ProfileStore([Profile(op="allreduce", axis_size=8,
+                                  ranges=[Range(1, 99, "allreduce_as_doubling")])])
+    store.save(tmp_path, fmt="json")
+    f = next(tmp_path.glob("*.json"))
+    assert json.loads(f.read_text())["version"] == PROFILE_JSON_VERSION
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        back = ProfileStore.load(tmp_path)
+    assert back.lookup("allreduce", 8, 50) == "allreduce_as_doubling"
+
+
+def test_versionless_json_profile_warns_naming_the_file(tmp_path):
+    """Satellite: a .json profile with NO version field is a legacy
+    artifact — warn symmetrically with headerless .pgtune files (both
+    feed the ROADMAP v1-sunset removal criterion)."""
+    import json
+    f = tmp_path / "allreduce_p8.json"
+    f.write_text(json.dumps({
+        "op": "allreduce", "axis_size": 8,
+        "ranges": [{"lo": 1, "hi": 99, "impl": "allreduce_as_doubling"}],
+        "meta": {}}))
+    with pytest.warns(DeprecationWarning, match="allreduce_p8.json"):
+        store = ProfileStore.load(tmp_path)
+    assert store.lookup("allreduce", 8, 50) == "allreduce_as_doubling"
+
+
 # ---------------------------------------------------------------------------
 # NREP (Alg. 1 / Eq. 1)
 # ---------------------------------------------------------------------------

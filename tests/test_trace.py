@@ -397,6 +397,33 @@ def test_v2_trace_load_does_not_warn(tmp_path):
         Trace.load(f)
 
 
+def test_v1_line_with_v_in_string_value_still_warns():
+    """Satellite regression (false negative): a v1 line whose IMPL string
+    happens to be the single character "v" satisfied the old substring
+    test ('\"v\"' in line) and was silently treated as v2.  Detection must
+    key on the decoded object's keys, not the raw text."""
+    sneaky_v1 = ('{"op": "allreduce", "p": 4, "nbytes": 512, '
+                 '"phase": "bwd", "impl": "v", "count": 3}\n')
+    with pytest.warns(DeprecationWarning, match="schema-v1"):
+        t = Trace.from_jsonl(sneaky_v1)
+    assert t.total() == 3
+    assert t.entries[0].impl == "v"
+
+
+def test_v2_line_with_v_valued_strings_parses_cleanly():
+    """The complementary shape: a REAL v2 line carrying "v" inside string
+    values must parse without any deprecation path firing and keep its
+    recorded geometry."""
+    e = TraceEntry.of("allgather_matmul", 4, 2048, "fwd", impl="v",
+                      count=2, mm_k=64, mm_m=128, mm_n=32,
+                      mm_role="gather")
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        back = Trace.from_jsonl(e.to_json() + "\n")
+    assert back.entries[0] == e
+    assert back.entries[0].cell.mm_k == 64
+
+
 def test_v1_profile_file_load_warns_naming_schema(tmp_path):
     """A .pgtune file without the 'pgtune profile v2' header is schema v1:
     ProfileStore.load warns (and still serves it)."""
