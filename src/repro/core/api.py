@@ -404,6 +404,72 @@ def plan_input(vec):
         _TLS.plan_vec = prev
 
 
+class EpochTripwire:
+    """Plan-level auto-rollback: revert a freshly adopted epoch whose
+    OBSERVED cost regresses past the prior epoch's.
+
+    The tuner's staleness/digest guards stop bad *publishes*; nothing on
+    the read side stops a *well-formed but wrong* epoch — profiles tuned
+    from poisoned measurements that make every step slower.  The tripwire
+    closes that hole at the one place regression is observable: the serve
+    loop's per-step cost.  Feed it each step's observed cost (wall-clock
+    delta, or the modeled cost the bench synthesizes) via ``observe``;
+    it buckets costs by the ``StoreRef``'s live epoch, takes the median
+    of a finished epoch's window as the next epoch's baseline, and when
+    the current epoch's windowed median exceeds ``threshold ×`` baseline
+    it calls ``ref.rollback()`` — vector contents only, zero re-jit,
+    and the bad epoch is poisoned against re-adoption.
+
+    The window is a deque of the last ``window`` costs; medians make a
+    single exploration spike or latency outlier unable to trip it (the
+    same robustness argument as ``tuner.FeedbackBackend``'s MAD filter).
+    """
+
+    def __init__(self, ref, *, threshold: float = 1.5, window: int = 8,
+                 min_samples: int = 4):
+        self.ref = ref
+        self.threshold = float(threshold)
+        self.window = int(window)
+        self.min_samples = int(min_samples)
+        self._epoch = ref.epoch
+        self._costs: list[float] = []
+        self._baseline: float | None = None   # prior epoch's median cost
+        self.fired: list[tuple[int, int]] = []  # (bad epoch, restored)
+
+    @property
+    def baseline(self) -> float | None:
+        return self._baseline
+
+    def observe(self, cost: float) -> bool:
+        """Record one observed step cost under the CURRENT live epoch;
+        returns True iff this observation fired a rollback."""
+        import statistics
+        epoch = self.ref.epoch
+        if epoch != self._epoch:
+            if epoch > self._epoch and len(self._costs) >= self.min_samples:
+                # the finished epoch's steady-state cost becomes the new
+                # epoch's yardstick
+                self._baseline = statistics.median(self._costs)
+            # on epoch < self._epoch (a rollback we didn't fire) the
+            # baseline stays: it IS the restored epoch's own median
+            self._costs = []
+            self._epoch = epoch
+        self._costs.append(float(cost))
+        del self._costs[:-self.window]
+        if self._baseline is None or len(self._costs) < self.min_samples:
+            return False
+        med = statistics.median(self._costs)
+        if med <= self.threshold * self._baseline:
+            return False
+        restored = self.ref.rollback()
+        if restored is None:
+            return False   # nothing retained; keep serving + observing
+        self.fired.append((epoch, restored))
+        self._epoch = restored
+        self._costs = []
+        return True
+
+
 def _admissible_impls(op: str, cell: OpCell,
                       ctx: TuneContext) -> tuple[str, ...]:
     """The impls a runtime plan may switch between for one site, in a

@@ -21,9 +21,12 @@ writes a ``MANIFEST.json`` (generation number, source-shard digest,
 geometry census) LAST, so a watcher that sees a new manifest sees complete
 profiles.  ``resolve_stores(watch=True)`` returns a ``StoreRef`` — a
 mutable, atomically-swappable reference running ``api.tuned`` contexts
-read through — whose ``poll()`` re-stats the manifest and hot-swaps the
-stores in place; ``swap`` refuses epochs older than the live one (the
-staleness guard).
+read through — whose ``poll()`` re-reads the manifest (content-hash
+staleness stamp) and hot-swaps the stores in place; ``swap`` refuses
+epochs older than the live one (the staleness guard), verifies the
+manifest's ``profiles_digest`` against the files on disk, retains the
+last N generations, and ``rollback()`` reverts a regressing epoch and
+poisons it against re-adoption.
 """
 from __future__ import annotations
 
@@ -317,6 +320,28 @@ def _census(stores) -> dict:
     return out
 
 
+def profiles_digest(directory: str | pathlib.Path) -> str:
+    """sha256 over every profile file under ``directory`` (recursive:
+    base files + phase subdirectories; the manifest itself and tmp files
+    excluded) — the manifest records this at publish time and
+    ``StoreRef.poll`` recomputes it at adoption, so manifest↔profile
+    skew (a manifest paired with profiles it was not written for) is
+    detected instead of served."""
+    import hashlib
+    d = pathlib.Path(directory)
+    h = hashlib.sha256()
+    for p in sorted(d.rglob("*")):
+        if (not p.is_file() or p.suffix not in (".pgtune", ".json")
+                or p.name == MANIFEST_NAME
+                or p.name.endswith(".tmp")):
+            continue
+        h.update(str(p.relative_to(d)).encode())
+        h.update(b"\0")
+        h.update(p.read_bytes())
+        h.update(b"\0")
+    return "sha256:" + h.hexdigest()
+
+
 def write_manifest(directory: str | pathlib.Path, epoch: int, *,
                    source_digest: str | None = None,
                    base: "ProfileStore | None" = None,
@@ -324,12 +349,15 @@ def write_manifest(directory: str | pathlib.Path, epoch: int, *,
         -> pathlib.Path:
     """Stamp a profile directory as fleet generation ``epoch``.
 
-    The manifest is the hot-swap unit: ``StoreRef.poll`` re-stats THIS
-    file and reloads only when its epoch advances.  Callers must write
+    The manifest is the hot-swap unit: ``StoreRef.poll`` re-reads THIS
+    file and reloads only when its content changes.  Callers must write
     all profile files first and the manifest last (this function writes
     via tmp + ``os.replace``, so the manifest itself appears atomically).
     ``source_digest`` records provenance — the digest of the trace shards
-    the generation was tuned from (``trace.shard_digest``).
+    the generation was tuned from (``trace.shard_digest``) — and
+    ``profiles_digest`` is computed HERE, over the already-written
+    profile files, so an adopting reader can verify the manifest and the
+    profiles belong to the same generation.
     """
     d = pathlib.Path(directory)
     d.mkdir(parents=True, exist_ok=True)
@@ -337,6 +365,7 @@ def write_manifest(directory: str | pathlib.Path, epoch: int, *,
         "manifest_version": 1,
         "epoch": int(epoch),
         "source": source_digest,
+        "profiles_digest": profiles_digest(d),
         "base_profiles": len(base) if base is not None else 0,
         "phases": {ph: len(st) for ph, st in sorted((phases or {}).items())},
         "geometry_census": _census([base, *(phases or {}).values()]),
@@ -370,17 +399,29 @@ class StoreRef:
     attribute assigned in a single store, so readers never observe a
     half-swapped generation.  ``swap`` refuses epochs older than the live
     one (the staleness rule: a delayed writer must not roll a fleet
-    back); ``poll`` re-stats ``MANIFEST.json`` in the watched directory
+    back); ``poll`` re-reads ``MANIFEST.json`` in the watched directory
     and swaps when a newer epoch has landed.
+
+    Fault tolerance: the last ``history`` adopted generations are
+    RETAINED in memory, so ``rollback()`` can revert a regressing epoch
+    without touching disk (the ``api.EpochTripwire`` path).  A rolled-
+    back epoch is POISONED — ``poll``/``swap`` refuse to re-adopt it even
+    though its manifest is still the newest on disk — and adoption
+    verifies the manifest's ``profiles_digest`` against the profile
+    files actually present, refusing manifest↔profile skew.
     """
 
     def __init__(self, base: "ProfileStore | None" = None,
                  phases: "dict[str, ProfileStore] | None" = None,
                  epoch: int = -1,
-                 directory: str | pathlib.Path | None = None):
+                 directory: str | pathlib.Path | None = None,
+                 history: int = 4):
         self._state = (int(epoch), base, dict(phases or {}))
         self.directory = pathlib.Path(directory) if directory else None
-        self._stamp: tuple | None = None
+        self._stamp: str | None = None
+        self.history = int(history)
+        self._history: list[tuple] = []      # prior (epoch, base, phases)
+        self._poisoned: set[int] = set()
 
     # -- reads (each reads the state tuple once; no torn views) -------------
     @property
@@ -410,32 +451,73 @@ class StoreRef:
     def swap(self, base: "ProfileStore | None",
              phases: "dict[str, ProfileStore] | None",
              epoch: int) -> bool:
-        """Atomically install a new generation; refuse stale or
-        already-live epochs (returns False, live state unchanged)."""
+        """Atomically install a new generation; refuse stale,
+        already-live, or poisoned (rolled-back) epochs (returns False,
+        live state unchanged).  The outgoing generation is pushed onto
+        the retained history so ``rollback`` can revert to it."""
+        import warnings
         live = self.epoch
         if int(epoch) < live:
-            import warnings
             warnings.warn(
                 f"StoreRef.swap: refusing stale epoch {epoch} "
                 f"(live epoch is {live})")
             return False
         if int(epoch) == live:
             return False
+        if int(epoch) in self._poisoned:
+            warnings.warn(
+                f"StoreRef.swap: refusing poisoned epoch {epoch} "
+                "(rolled back earlier; publish a fresh epoch instead)")
+            return False
+        if live >= 0:
+            self._history.append(self._state)
+            del self._history[:-self.history]
         self._state = (int(epoch), base, dict(phases or {}))
         return True
 
+    def rollback(self) -> int | None:
+        """Revert to the most recently retained generation — the
+        auto-rollback path when a freshly adopted epoch regresses in the
+        field.  The abandoned epoch is POISONED (never re-adopted by
+        ``poll`` even though its manifest still looks newest) and the
+        previous generation's stores become live again in one atomic
+        assignment: readers and ``Plan.vector`` re-derivation see the
+        reverted generation immediately, with zero re-jits.  Returns the
+        restored epoch, or None when no history is retained."""
+        import warnings
+        if not self._history:
+            warnings.warn("StoreRef.rollback: no retained generation to "
+                          "roll back to; keeping the live epoch")
+            return None
+        bad = self.epoch
+        if bad >= 0:
+            self._poisoned.add(bad)
+        self._state = self._history.pop()
+        warnings.warn(f"StoreRef.rollback: epoch {bad} rolled back; "
+                      f"serving epoch {self.epoch} again (epoch {bad} "
+                      "poisoned)")
+        return self.epoch
+
     def poll(self) -> bool:
-        """Re-stat the watched directory's manifest; reload + swap when a
+        """Re-read the watched directory's manifest; reload + swap when a
         NEWER epoch has landed.  Returns True iff a swap happened.  All
-        failures (no directory, no/bad manifest, profile load errors)
-        leave the live generation serving and return False — a broken
-        push must not take a fleet down."""
+        failures (no directory, no/bad manifest, profile load errors,
+        manifest↔profile digest skew, a poisoned epoch) leave the live
+        generation serving and return False — a broken push must not
+        take a fleet down.
+
+        The staleness stamp is CONTENT-based (a hash of the manifest
+        text): a same-size, same-mtime manifest replacement — which a
+        ``(st_mtime_ns, st_size)`` stat stamp provably misses, since
+        consecutive epochs usually serialize to the same byte length —
+        still triggers adoption.  The manifest is a few hundred bytes,
+        so the read-per-poll costs less than the bug did."""
         if self.directory is None:
             return False
         man_path = self.directory / MANIFEST_NAME
+        import warnings
         try:
-            st = man_path.stat()
-            stamp = (st.st_mtime_ns, st.st_size)
+            text = man_path.read_text()
         except OSError:
             # legacy manifest-less directory: adopt it once as epoch 0
             if self.epoch < 0 and self.directory.is_dir():
@@ -447,25 +529,50 @@ class StoreRef:
                     return False
                 return self.swap(base, phases, 0)
             return False
+        import hashlib
+        stamp = hashlib.sha256(text.encode()).hexdigest()
         if stamp == self._stamp:
             return False
         self._stamp = stamp
-        man = read_manifest(self.directory)
-        if man is None:
+        try:
+            man = json.loads(text)
+        except ValueError:
+            man = None
+        if not isinstance(man, dict) or "epoch" not in man:
             return False
         epoch = int(man["epoch"])
+        if epoch in self._poisoned:
+            warnings.warn(
+                f"StoreRef.poll: manifest at {man_path} still carries "
+                f"poisoned epoch {epoch}; keeping epoch {self.epoch} "
+                "(publish a fresh epoch to recover)")
+            return False
         if epoch <= self.epoch:
             if epoch < self.epoch:
-                import warnings
                 warnings.warn(
                     f"StoreRef.poll: {man_path} regressed to epoch "
                     f"{epoch} (live epoch is {self.epoch}); refusing "
                     "the stale generation")
             return False
+        want = man.get("profiles_digest")
+        if want is not None:
+            have = profiles_digest(self.directory)
+            if have != want:
+                # clear the stamp: the PROFILES may be repaired without
+                # the manifest changing, and an unchanged-stamp
+                # short-circuit would never look again (re-warning each
+                # poll until the skew is fixed is the point)
+                self._stamp = None
+                warnings.warn(
+                    f"StoreRef.poll: epoch {epoch} at {self.directory} "
+                    f"has manifest/profile skew (manifest records "
+                    f"{want[:18]}…, files hash to {have[:18]}…); "
+                    f"keeping epoch {self.epoch}")
+                return False
         try:
             base, phases = load_stores(self.directory)
         except Exception as e:
-            import warnings
+            self._stamp = None     # same repair-without-manifest logic
             warnings.warn(f"StoreRef.poll: epoch {epoch} at "
                           f"{self.directory} failed to load "
                           f"({type(e).__name__}: {e}); keeping epoch "

@@ -451,6 +451,21 @@ def tune_trace(trace, backend=None, *, min_win: float = 0.10,
 # ---------------------------------------------------------------------------
 
 
+def _mad_filter(samples: list[float], k: float) -> list[float]:
+    """Median/MAD outlier rejection: keep samples within ``k`` robust
+    deviations of the median.  The scale is floored at 5% of |median|
+    (and an absolute epsilon) because the MAD of near-identical samples
+    is 0, which would reject every sample but the exact median.  Returns
+    at least ``[median]`` so a cell never loses ALL its observations."""
+    if len(samples) < 3 or k <= 0:
+        return list(samples)
+    med = statistics.median(samples)
+    mad = statistics.median([abs(x - med) for x in samples])
+    scale = max(mad, 0.05 * abs(med), 1e-12)
+    kept = [x for x in samples if abs(x - med) <= k * scale]
+    return kept or [med]
+
+
 class FeedbackBackend:
     """A backend that prefers LIVE fleet measurements over its base estimate.
 
@@ -461,16 +476,32 @@ class FeedbackBackend:
     any (cell, impl) with enough observed samples from the fleet's own wall
     clock — the loop that lets profiles track hardware/load drift — while
     everything unexplored still falls back to the base backend.
+
+    Fleet measurements are HOSTILE inputs: one explored step that landed
+    on a network hiccup can be 100× the true latency, and with only a
+    handful of samples per (cell, impl) even a median shifts.  Samples
+    are therefore filtered at construction with median/MAD outlier
+    rejection (drop anything more than ``mad_k`` robust deviations from
+    the median; the MAD is floored at 5% of the median so near-identical
+    samples don't reject everything); ``rejected`` counts the dropped
+    samples for the chaos gates.  Set ``mad_k=0`` to disable.
     """
 
     def __init__(self, base, observed: dict[tuple[OpCell, str],
                                             Sequence[float]],
-                 *, min_samples: int = 3):
+                 *, min_samples: int = 3, mad_k: float = 4.0):
         self.base = base
         self.name = f"feedback+{base.name}"
         self.min_samples = min_samples
-        self._obs = {k: [float(x) for x in v]
-                     for k, v in observed.items() if len(v) > 0}
+        self.mad_k = float(mad_k)
+        self.rejected = 0
+        self._obs: dict[tuple[OpCell, str], list[float]] = {}
+        for k, v in observed.items():
+            if len(v) == 0:
+                continue
+            kept = _mad_filter([float(x) for x in v], self.mad_k)
+            self.rejected += len(v) - len(kept)
+            self._obs[k] = kept
 
     @property
     def supported_axis_size(self) -> int | None:

@@ -1,2 +1,4 @@
-from repro.ft.watchdog import StepWatchdog  # noqa: F401
+from repro.ft.watchdog import Heartbeats, StepWatchdog  # noqa: F401
 from repro.ft.restart import run_with_restarts  # noqa: F401
+from repro.ft.chaos import ChaosEvent, ChaosMonkey  # noqa: F401
+from repro.ft.coordinator import FleetCoordinator, FleetStatus  # noqa: F401

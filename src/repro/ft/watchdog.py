@@ -1,4 +1,4 @@
-"""Straggler / hang detection.
+"""Straggler / hang / liveness detection.
 
 At thousand-node scale a single slow host drags every collective; detection
 must be local and cheap.  ``StepWatchdog`` tracks a robust running median of
@@ -7,12 +7,57 @@ event, and ``hang_timeout`` arms a background timer that fires if a step
 never completes (collective deadlock after a peer died).  Upstream, the
 launcher maps these events to: reroute traffic off the slow host (straggler)
 or kill + restart from the last checkpoint (hang) — see ft/restart.py.
+
+``Heartbeats`` is the FLEET-level counterpart: passive liveness from
+periodic beats (``ft.coordinator`` beats a server whenever its shard
+output advances), with an injectable clock so death detection is
+deterministic in tests and the chaos bench.
 """
 from __future__ import annotations
 
 import statistics
 import threading
 import time
+
+
+class Heartbeats:
+    """Last-beat liveness tracking over named peers.
+
+    ``beat(name)`` stamps a peer at the current clock; ``dead()`` lists
+    peers whose last beat is older than ``timeout``.  The clock is
+    injectable (any zero-arg callable returning seconds) because real
+    wall clocks make death detection a flake: the chaos bench advances a
+    fake clock by exact amounts and asserts exactly which server died.
+    A beat can carry the peer's current ``epoch`` so epoch-lag
+    stragglers fall out of the same bookkeeping.
+    """
+
+    def __init__(self, *, timeout: float, clock=time.monotonic):
+        self.timeout = float(timeout)
+        self._clock = clock
+        self._last: dict[str, float] = {}
+        self._epoch: dict[str, int] = {}
+
+    def beat(self, name: str, *, epoch: int | None = None) -> None:
+        self._last[name] = float(self._clock())
+        if epoch is not None:
+            self._epoch[name] = int(epoch)
+
+    def seen(self) -> list[str]:
+        return sorted(self._last)
+
+    def epoch_of(self, name: str) -> int | None:
+        return self._epoch.get(name)
+
+    def dead(self) -> list[str]:
+        now = float(self._clock())
+        return sorted(n for n, t in self._last.items()
+                      if now - t > self.timeout)
+
+    def alive(self) -> list[str]:
+        now = float(self._clock())
+        return sorted(n for n, t in self._last.items()
+                      if now - t <= self.timeout)
 
 
 class StepWatchdog:

@@ -109,14 +109,22 @@ def test_merge_shards_preserves_total_weight(tmp_path):
             r.append(_rec(nbytes=256 * (j + 1)))
             r.append(_rec(op="allgather", phase="decode"))
         r.flush(tmp_path, epoch=1)
-    merged = Trace.merge_shards(tmp_path)
+    report = Trace.merge_shards(tmp_path)
+    merged = report.trace
+    assert len(report.merged) == 3 and not report.quarantined
     assert merged.total() == sum(i + 1 for i in range(3)) * 2
     assert merged.cells(phase="decode") == {OpCell("allgather", 4, 512): 6}
 
 
-def test_merge_shards_empty_directory_raises(tmp_path):
-    with pytest.raises(FileNotFoundError):
-        Trace.merge_shards(tmp_path)
+def test_merge_shards_empty_directory_warns_empty_report(tmp_path):
+    # a cold-started fleet's first merge is a no-op, not a crash (the
+    # old behavior raised FileNotFoundError); absent dir same deal
+    with pytest.warns(UserWarning, match="cold start"):
+        report = Trace.merge_shards(tmp_path)
+    assert report.trace.total() == 0 and not report.shards
+    with pytest.warns(UserWarning, match="no trace shards"):
+        report = Trace.merge_shards(tmp_path / "never-created")
+    assert report.trace.total() == 0 and len(report) == 0
 
 
 def test_shard_digest_tracks_content(tmp_path):

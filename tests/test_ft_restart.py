@@ -1,0 +1,146 @@
+"""ft/restart.py + ft/watchdog.py: the elastic-restart path and the
+step watchdog, previously only exercised by examples/elastic_restart.py.
+
+The restart contract under test: a run that crashes (injected faults)
+and resumes from checkpoints must end in the SAME final state as an
+uninterrupted run — determinism comes from keying the step computation
+by step number, so a resumed run replays the exact sequence.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.ft import Heartbeats, StepWatchdog, run_with_restarts
+
+
+def _init_state():
+    return {"w": jnp.zeros((4,), jnp.float32),
+            "step_sum": jnp.zeros((), jnp.float32)}
+
+
+def _step(state, i):
+    # keyed by step number: replayable after restore
+    g = jnp.full((4,), float(i + 1), jnp.float32)
+    return {"w": state["w"] + 0.1 * g,
+            "step_sum": state["step_sum"] + float(i)}
+
+
+# ---------------------------------------------------------------------------
+# run_with_restarts
+# ---------------------------------------------------------------------------
+
+
+def test_restart_resumes_to_identical_state(tmp_path):
+    clean, clean_stats = run_with_restarts(
+        _init_state, _step, n_steps=20, ckpt_dir=tmp_path / "clean",
+        ckpt_every=4)
+    assert clean_stats["restarts"] == 0
+    assert clean_stats["completed"] == 20
+
+    crashes = {5: True, 13: True}    # consumed on first hit
+
+    def faulty_step(state, i):
+        if crashes.pop(i, None):
+            raise RuntimeError(f"injected fault at step {i}")
+        return _step(state, i)
+
+    faulted, stats = run_with_restarts(
+        _init_state, faulty_step, n_steps=20,
+        ckpt_dir=tmp_path / "faulty", ckpt_every=4)
+    assert stats["restarts"] == 2
+    # resumed from the newest checkpoint BEFORE each crash site
+    assert stats["resumed_from"] == [4, 12]
+    # the recovery replayed steps, so completed > 20 — but the final
+    # state is bit-identical to the uninterrupted run
+    assert stats["completed"] > 20
+    np.testing.assert_array_equal(np.asarray(faulted["w"]),
+                                  np.asarray(clean["w"]))
+    np.testing.assert_array_equal(np.asarray(faulted["step_sum"]),
+                                  np.asarray(clean["step_sum"]))
+
+
+def test_restart_cold_resume_from_existing_checkpoints(tmp_path):
+    # first run writes checkpoints; a brand-new invocation (fresh
+    # process after a crash) picks up from the newest one
+    run_with_restarts(_init_state, _step, n_steps=10, ckpt_dir=tmp_path,
+                      ckpt_every=5)
+    state, stats = run_with_restarts(_init_state, _step, n_steps=20,
+                                     ckpt_dir=tmp_path, ckpt_every=5)
+    assert stats["resumed_from"] == [10]
+    assert stats["completed"] == 10    # only the remaining steps ran
+    clean, _ = run_with_restarts(_init_state, _step, n_steps=20,
+                                 ckpt_dir=tmp_path / "clean", ckpt_every=5)
+    np.testing.assert_array_equal(np.asarray(state["w"]),
+                                  np.asarray(clean["w"]))
+
+
+def test_restart_gives_up_past_max_restarts(tmp_path):
+    def always_fails(state, i):
+        raise RuntimeError("permanent fault")
+
+    with pytest.raises(RuntimeError, match="permanent fault"):
+        run_with_restarts(_init_state, always_fails, n_steps=5,
+                          ckpt_dir=tmp_path, max_restarts=3)
+
+
+# ---------------------------------------------------------------------------
+# StepWatchdog
+# ---------------------------------------------------------------------------
+
+
+def test_watchdog_flags_straggler_step():
+    wd = StepWatchdog(ratio=3.0, window=8)
+    real_clock = [0.0]
+    # drive perf_counter-free: feed times via start/end with sleeps kept
+    # tiny — 6 fast steps to warm the median, then one 10x-slower step
+    for _ in range(6):
+        wd.start_step()
+        time.sleep(0.002)
+        assert wd.end_step() is False
+    wd.start_step()
+    time.sleep(0.05)
+    assert wd.end_step() is True
+    assert wd.straggler_steps == [6]
+    assert real_clock == [0.0]      # no hidden global state touched
+
+
+def test_watchdog_hang_timeout_fires():
+    fired = threading.Event()
+    wd = StepWatchdog(hang_timeout=0.05, on_hang=fired.set)
+    wd.start_step()
+    # never call end_step before the timeout: the step "hung"
+    assert fired.wait(timeout=2.0), "hang timer never fired"
+    wd.end_step()
+
+
+def test_watchdog_completed_step_cancels_hang_timer():
+    fired = threading.Event()
+    wd = StepWatchdog(hang_timeout=0.1, on_hang=fired.set)
+    wd.start_step()
+    wd.end_step()
+    time.sleep(0.25)
+    assert not fired.is_set()
+
+
+# ---------------------------------------------------------------------------
+# Heartbeats (fleet liveness; deterministic via injected clock)
+# ---------------------------------------------------------------------------
+
+
+def test_heartbeats_death_by_silence():
+    now = [0.0]
+    hb = Heartbeats(timeout=10.0, clock=lambda: now[0])
+    hb.beat("a", epoch=1)
+    hb.beat("b", epoch=1)
+    assert hb.dead() == [] and hb.alive() == ["a", "b"]
+    now[0] = 8.0
+    hb.beat("b", epoch=2)
+    now[0] = 12.0                   # a silent for 12s, b for 4s
+    assert hb.dead() == ["a"]
+    assert hb.alive() == ["b"]
+    assert hb.epoch_of("b") == 2 and hb.epoch_of("a") == 1
+    assert hb.epoch_of("never-seen") is None
