@@ -14,18 +14,32 @@ composition, the 1-D status quo (data-gather fused + monolithic model
 allreduce — what ``row_matmul(fsdp_dim=1)`` emitted before the 2-D op)
 and the nested ``fused_ring2d`` — replays the cells through
 ``tuner.tune_trace`` and verifies the per-cell selection matches every
-modeled must-win.  Emits ``BENCH_collective_matmul.json`` for the CI
-artifact; exits non-zero (via ``run()`` raising) when the tuner misses a
-must-win shape in either section.
+modeled must-win.
+
+The quantized-wire section re-prices the fused grid at DCN-tier
+bandwidth, where the wire bytes are the bill: every comm-bound cell
+whose best 8-bit wire impl models >= ``WIRE_MUST_WIN``x over the same
+cell's f32-wire ``fused_ring`` must be SELECTED as a wire impl by the
+tuner, slivers must keep the default, and every selected wire impl must
+pass the selfcheck numeric-tolerance gate (``selfcheck.run_gate``) with
+an empty demotion ledger.  The swept cells are also written as a
+schema-v2 trace artifact and reloaded with ``DeprecationWarning``
+promoted to an error (the v1-sunset check on newly-produced artifacts).
+
+Emits ``BENCH_collective_matmul.json`` for the CI artifact; exits
+non-zero (via ``run()`` raising) when the tuner misses a must-win shape
+in any section.
 """
 from __future__ import annotations
 
 import json
 import pathlib
+import warnings
 
 from benchmarks.common import emit
+from repro.core import collectives as C
 from repro.core import costmodel as cm
-from repro.core import tuner
+from repro.core import selfcheck, tuner
 from repro.core.cell import OpCell
 from repro.core.trace import Trace, TraceEntry
 
@@ -33,6 +47,13 @@ OPS = ("allgather_matmul", "matmul_reducescatter", "matmul_accumulate")
 AXIS_SIZES = (4, 8, 16, 64)
 SIZES = (64, 1024, 32768, 262_144, 1_048_576, 4_194_304, 16_777_216)
 MIN_WIN = 0.10
+WIRE_IMPLS = ("wire_q8", "wire_fp8")
+#: fused-overlap selections the 1-D must-win gate accepts: the wire impls
+#: run the same (p-1)-step overlap schedule with a compressed wire
+RING_FAMILY = ("fused_ring",) + WIRE_IMPLS
+#: comm-bound quantized cells must model at least this speedup over the
+#: same cell's f32-wire fused impl — and then the tuner must pick them
+WIRE_MUST_WIN = 1.5
 #: 2-D section: (data, model) meshes x per-callsite GEMMs (T, K, M) — the
 #: row_matmul(fsdp_dim=1) w_out shapes of serving-sized LMs, plus slivers
 #: that must keep the default
@@ -43,6 +64,7 @@ GEMMS_2D = ((8192, 4096, 14336),      # mlp w_out, prefill batch
             (8, 512, 256))            # sliver: overhead must win
 OUT = pathlib.Path(__file__).resolve().parents[1] / "results" / \
     "BENCH_collective_matmul.json"
+TRACE_OUT = OUT.with_name("BENCH_collective_matmul_cells.jsonl")
 
 
 def sweep_cells(topo=cm.V5E_ICI):
@@ -58,9 +80,101 @@ def sweep_cells(topo=cm.V5E_ICI):
                 pick = rep.profiles.lookup(op, p, nbytes) or "default"
                 cells.append({"op": op, "p": p, "nbytes": nbytes,
                               "t_default_s": t_def, "t_fused_s": t_fus,
+                              "t_wire_q8_s": cm.latency(op, "wire_q8", p,
+                                                        nbytes, topo),
+                              "t_wire_fp8_s": cm.latency(op, "wire_fp8", p,
+                                                         nbytes, topo),
                               "model_win": t_def / t_fus,
-                              "tuner_pick": pick})
+                              "tuner_pick": pick,
+                              "wire_dtype": C.REGISTRY[op][pick].wire_dtype})
     return cells
+
+
+def sweep_cells_wire(topo=cm.V5E_DCN):
+    """The fused grid re-priced where the wire bytes dominate (DCN tier):
+    per cell, the f32-wire fused ring vs both 8-bit wire impls, plus the
+    tuner's pick on the same topo."""
+    rows = []
+    for op in OPS:
+        for p in AXIS_SIZES:
+            rep = tuner.tune(ops=[op], sizes=SIZES, axis_size=p,
+                             backend=tuner.CostModelBackend(topo),
+                             min_win=MIN_WIN)
+            for nbytes in SIZES:
+                t_fus = cm.latency(op, "fused_ring", p, nbytes, topo)
+                t_wire = {nm: cm.latency(op, nm, p, nbytes, topo)
+                          for nm in WIRE_IMPLS}
+                pick = rep.profiles.lookup(op, p, nbytes) or "default"
+                rows.append({"op": op, "p": p, "nbytes": nbytes,
+                             "t_default_s": cm.latency(op, "default", p,
+                                                       nbytes, topo),
+                             "t_fused_s": t_fus,
+                             "t_wire_q8_s": t_wire["wire_q8"],
+                             "t_wire_fp8_s": t_wire["wire_fp8"],
+                             "wire_win": t_fus / min(t_wire.values()),
+                             "tuner_pick": pick,
+                             "wire_dtype": C.REGISTRY[op][pick].wire_dtype})
+    return rows
+
+
+def _gate_payload(op: str, p: int):
+    """A small representative payload for ``selfcheck.run_gate`` — the
+    shapes mirror selfcheck's SPMD suite, scaled down per p."""
+    import numpy as np
+    rng = np.random.default_rng(11)
+    if op == "allgather_matmul":
+        return (rng.normal(size=(p, 4, 16)).astype(np.float32),
+                rng.normal(size=(16, 8)).astype(np.float32))
+    if op == "matmul_reducescatter":
+        # per-rank rows must divide by p for the scatter
+        return (rng.normal(size=(p, 2 * p, 16)).astype(np.float32),
+                rng.normal(size=(16, 8)).astype(np.float32))
+    if op == "matmul_accumulate":
+        # x = stacked weight K-blocks [p, k_loc, m]; w = stationary [T, K]
+        return (rng.normal(size=(p, 2, 8)).astype(np.float32),
+                rng.normal(size=(4, 2 * p)).astype(np.float32))
+    raise KeyError(op)
+
+
+def gate_selected_wire(cells_wire):
+    """Run the selfcheck tolerance gate on every DISTINCT wire selection
+    of the DCN sweep; any break demotes (and fails the bench)."""
+    gates = []
+    seen = set()
+    for c in cells_wire:
+        key = (c["op"], c["tuner_pick"], c["p"])
+        if c["tuner_pick"] not in WIRE_IMPLS or key in seen:
+            continue
+        seen.add(key)
+        x, w = _gate_payload(c["op"], c["p"])
+        ok, rel, tol = selfcheck.run_gate(c["op"], c["tuner_pick"], x, w=w)
+        gates.append({"op": c["op"], "impl": c["tuner_pick"], "p": c["p"],
+                      "rel_err": rel, "tol": tol, "ok": ok})
+    return gates
+
+
+def _trace_artifact_check(cells_wire):
+    """Write the swept cells as a schema-v2 trace artifact (with a non-f32
+    geometry cell in the mix) and reload it with DeprecationWarning
+    promoted to an error — newly-produced artifacts must never trip the
+    v1-sunset path."""
+    entries = [TraceEntry.of(c["op"], c["p"], c["nbytes"], "fwd",
+                             c["tuner_pick"], 1)
+               for c in cells_wire]
+    entries.append(TraceEntry.of("allgather_matmul", 8, 262_144, "fwd",
+                                 "wire_q8", 1, dtype="bfloat16",
+                                 mm_k=512, mm_m=2048, mm_n=64,
+                                 mm_role="gather"))
+    t = Trace(entries)
+    t.save(TRACE_OUT)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        back = Trace.load(TRACE_OUT)
+    if back != t:
+        raise AssertionError(f"{TRACE_OUT.name} did not round-trip")
+    bf16 = [cell for cell in back.cells() if cell.dtype == "bfloat16"]
+    if not bf16:
+        raise AssertionError("non-f32 dtype lost in the trace artifact")
 
 
 def _cell_2d(d: int, q: int, t: int, k: int, m: int) -> OpCell:
@@ -125,11 +239,18 @@ def run():
     cells = sweep_cells()
     must_win = [c for c in cells if c["t_fused_s"]
                 < c["t_default_s"] * (1.0 - MIN_WIN)]
-    missed = [c for c in must_win if c["tuner_pick"] != "fused_ring"]
-    n_fused = sum(1 for c in cells if c["tuner_pick"] == "fused_ring")
+    missed = [c for c in must_win if c["tuner_pick"] not in RING_FAMILY]
+    n_fused = sum(1 for c in cells if c["tuner_pick"] in RING_FAMILY)
     n_default_small = sum(1 for c in cells
                           if c["nbytes"] <= 1024
                           and c["tuner_pick"] == "default")
+    cells_wire = sweep_cells_wire()
+    wire_must = [c for c in cells_wire if c["wire_win"] >= WIRE_MUST_WIN]
+    missed_wire = [c for c in wire_must
+                   if c["tuner_pick"] not in WIRE_IMPLS]
+    wire_slivers = [c for c in cells_wire
+                    if c["nbytes"] <= 1024 and c["tuner_pick"] != "default"]
+    wire_gates = gate_selected_wire(cells_wire)
     cells_2d = sweep_cells_2d()
     must_win_2d = [c for c in cells_2d
                    if c["t_fused2d_s"] < min(c["t_unfused_s"],
@@ -144,7 +265,11 @@ def run():
         "must_win_cells": len(must_win), "missed": missed,
         "cells_2d": cells_2d, "must_win_cells_2d": len(must_win_2d),
         "missed_2d": missed_2d,
+        "wire_must_win": WIRE_MUST_WIN, "cells_wire": cells_wire,
+        "wire_must_win_cells": len(wire_must),
+        "missed_wire": missed_wire, "wire_gates": wire_gates,
     }, indent=1))
+    _trace_artifact_check(cells_wire)
     for op in OPS:
         best = max((c["model_win"] for c in cells if c["op"] == op),
                    default=0.0)
@@ -182,9 +307,38 @@ def run():
         raise AssertionError("fused_ring2d selected even on sliver GEMMs — "
                              "the per-step overhead on both axes is lost "
                              "from the model")
+    n_wire = sum(1 for c in cells_wire if c["tuner_pick"] in WIRE_IMPLS)
+    best_wire = max((c["wire_win"] for c in cells_wire), default=0.0)
+    emit("collective_matmul/wire",
+         0.0,
+         f"wire_selected={n_wire}/{len(cells_wire)} "
+         f"best_wire_win=x{best_wire:.2f} must_win={len(wire_must)} "
+         f"gated={len(wire_gates)}")
+    if missed_wire:
+        raise AssertionError(
+            f"tuner missed {len(missed_wire)} comm-bound quantized cells "
+            f"(wire models >= {WIRE_MUST_WIN}x over fused_ring), e.g. "
+            f"{missed_wire[0]}")
+    if not wire_must:
+        raise AssertionError(
+            f"no DCN cell models a >= {WIRE_MUST_WIN}x quantized-wire win "
+            f"over fused_ring — wire cost model regression")
+    if wire_slivers:
+        raise AssertionError(
+            f"{len(wire_slivers)} sliver cells (<= 1KiB) did not keep the "
+            f"default on the DCN sweep, e.g. {wire_slivers[0]}")
+    bad_gates = [g for g in wire_gates if not g["ok"]]
+    if bad_gates or C.demotions():
+        raise AssertionError(
+            f"selected wire impls broke the selfcheck tolerance gate: "
+            f"{bad_gates or C.demotions()}")
+    if not wire_gates:
+        raise AssertionError("no wire selection was tolerance-gated — "
+                             "selection plumbing regression")
     emit("collective_matmul/consistency", 0.0,
          f"must_win={len(must_win)} missed=0 must_win_2d={len(must_win_2d)} "
-         f"missed_2d=0 json={OUT.name}")
+         f"missed_2d=0 wire_must_win={len(wire_must)} missed_wire=0 "
+         f"json={OUT.name}")
 
 
 def main():

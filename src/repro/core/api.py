@@ -277,7 +277,10 @@ def _select(op: str, payload, axis: str, impl: str | None, kw) -> str:
     if cand is None:
         raise KeyError(f"unknown impl {name!r} for op {op!r}")
     # pow2 guard + scratch budget (paper's size_msg_buffer_bytes semantics)
+    # + demotion ledger (a quantized-wire impl that broke its tolerance)
     if cand.requires_pow2 and (p & (p - 1)) != 0:
+        name, cand = "default", C.REGISTRY[op]["default"]
+    if name != "default" and C.is_demoted(op, name):
         name, cand = "default", C.REGISTRY[op]["default"]
     if (ctx is not None and ctx.scratch_budget_bytes is not None
             and name != "default"
@@ -482,6 +485,8 @@ def _admissible_impls(op: str, cell: OpCell,
     for name in ["default"] + sorted(n for n in reg if n != "default"):
         impl = reg[name]
         if impl.requires_pow2 and (p & (p - 1)) != 0:
+            continue
+        if name != "default" and C.is_demoted(op, name):
             continue
         if (ctx.scratch_budget_bytes is not None and name != "default"
                 and impl.extra_bytes(nbytes, p) > ctx.scratch_budget_bytes):

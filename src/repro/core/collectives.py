@@ -670,6 +670,106 @@ def matmul_reducescatter_2d_fused_ring(w, axis: str, *, x, rs_axis: str,
 
 
 # ---------------------------------------------------------------------------
+# quantized-wire mock-ups (wire_q8 / wire_fp8): the ring schedules with the
+# travelling operand compressed to an 8-bit wire dtype + per-block scales
+# (kernels/quant.py).  Quantize-on-send, dequantize-on-receive, reductions
+# accumulate in f32 after dequant.  These are APPROXIMATE impls: their
+# admissibility is gated by the selfcheck numeric-tolerance check (a cell
+# that breaks its wire tolerance demotes the impl via ``demote`` below,
+# exactly like a failed guideline).
+# ---------------------------------------------------------------------------
+
+
+def allgather_wire(x, axis: str, *, wire_dtype: str = "int8", **_):
+    """(⊕) ring allgather over the quantized wire: each rank's chunk is
+    quantized ONCE at its origin and the (values, scales) pair travels the
+    ring unchanged; the own chunk never crosses the wire and stays exact."""
+    from repro.kernels import quant as Q
+    p = axis_size(axis)
+    if p == 1:
+        return x
+    n = _n_rows(x)
+    idx = axis_index(axis)
+    zeros = (0,) * (x.ndim - 1)
+    out = jnp.zeros((p * n,) + x.shape[1:], x.dtype)
+    out = lax.dynamic_update_slice(out, x, (idx * n,) + zeros)
+    q, sc = Q.quantize(x, wire_dtype)
+    for s in range(1, p):
+        q = pshift(q, axis, ring_perm(p, 1))
+        sc = pshift(sc, axis, ring_perm(p, 1))
+        src = (idx - s) % p
+        out = lax.dynamic_update_slice(out, Q.dequantize(q, sc, x.dtype),
+                                       (src * n,) + zeros)
+    return out
+
+
+def reducescatter_wire(x, axis: str, *, wire_dtype: str = "int8", **_):
+    """(⊕) ring reduce-scatter over the quantized wire: the travelling
+    accumulator is requantized before every hop; local contributions are
+    added to the DEQUANTIZED f32 accumulator (accumulate-in-f32 rule)."""
+    from repro.kernels import quant as Q
+    p = axis_size(axis)
+    if p == 1:
+        return x
+    rows = _n_rows(x)
+    n = rows // p
+    idx = axis_index(axis)
+    acc = None
+    for s in range(p):
+        blk_id = (idx + (p - 1 - s)) % p
+        blk = lax.dynamic_slice(x, (blk_id * n,) + (0,) * (x.ndim - 1),
+                                (n,) + x.shape[1:])
+        contrib = blk.astype(jnp.float32)
+        acc = contrib if acc is None else acc + contrib
+        if s < p - 1:
+            q, sc = Q.quantize(acc, wire_dtype)
+            q = pshift(q, axis, ring_perm(p, 1))
+            sc = pshift(sc, axis, ring_perm(p, 1))
+            acc = Q.dequantize(q, sc, jnp.float32)
+    return acc.astype(x.dtype)
+
+
+def allreduce_wire(x, axis: str, *, wire_dtype: str = "int8", **_):
+    """(⊕) quantized-wire allreduce = padded wire reduce-scatter + wire
+    allgather (the GL6 decomposition with both phases on the 8-bit wire)."""
+    p = axis_size(axis)
+    if p == 1:
+        return x
+    n = _n_rows(x)
+    k = -(-n // p)
+    xp = _pad_rows(x, k * p)
+    red = reducescatter_wire(xp, axis, wire_dtype=wire_dtype)
+    out = allgather_wire(red, axis, wire_dtype=wire_dtype)
+    return out[:n] if out.shape[0] != n else out
+
+
+def allgather_matmul_wire(x, axis: str, *, w, wire_dtype: str = "int8",
+                          return_gathered: bool = False, **_):
+    """(⊕) ring allgather-matmul with the activation chunk on the
+    quantized wire (kernels/collective_matmul.py tier-1c)."""
+    from repro.kernels import collective_matmul as cmm
+    return cmm.ring_allgather_matmul_wire(
+        x, w, axis, wire_dtype=wire_dtype, return_gathered=return_gathered)
+
+
+def matmul_reducescatter_wire(x, axis: str, *, w, wire_dtype: str = "int8",
+                              **_):
+    """(⊕) ring matmul-reducescatter with the travelling accumulator on
+    the quantized wire (requantized per hop, f32 accumulate)."""
+    from repro.kernels import collective_matmul as cmm
+    return cmm.ring_matmul_reducescatter_wire(x, w, axis,
+                                              wire_dtype=wire_dtype)
+
+
+def matmul_accumulate_wire(w, axis: str, *, x, wire_dtype: str = "int8",
+                           return_gathered: bool = False, **_):
+    """(⊕) accumulate ring with the weight block on the quantized wire."""
+    from repro.kernels import collective_matmul as cmm
+    return cmm.ring_matmul_accumulate_wire(
+        x, w, axis, wire_dtype=wire_dtype, return_gathered=return_gathered)
+
+
+# ---------------------------------------------------------------------------
 # registry
 # ---------------------------------------------------------------------------
 
@@ -685,6 +785,10 @@ class Impl:
     extra_bytes: Callable[[int, int], int]
     requires_pow2: bool = False
     desc: str = ""
+    # wire dtype of a quantized-wire mock-up ("int8" / "float8_e4m3fn");
+    # None = the wire carries the compute dtype.  Non-None marks the impl
+    # accuracy-conditional: selfcheck's tolerance gate may demote it.
+    wire_dtype: str | None = None
 
     def __call__(self, x, axis, **kw):
         return self.fn(x, axis, **kw)
@@ -699,8 +803,19 @@ def _nb0(nbytes: int, p: int) -> int:  # no extra memory
 
 
 def _reg() -> dict[str, dict[str, Impl]]:
-    def mk(name, op, fn, gl, extra, pow2=False, desc=""):
-        return Impl(name, op, fn, gl, extra, pow2, desc)
+    def mk(name, op, fn, gl, extra, pow2=False, desc="", wire=None):
+        return Impl(name, op, fn, gl, extra, pow2, desc, wire)
+
+    # quantized-wire mock-ups share one family shape: MPIX_-style name
+    # (wire_q8 / wire_fp8 — the MPIX_ prefix marks a beyond-the-standard
+    # extension, like MPIX_Allreduce_q8), EXT guideline, wire_dtype bound
+    # via partial and recorded on the Impl for the costmodel / selfcheck.
+    _WIRES = (("wire_q8", "int8"), ("wire_fp8", "float8_e4m3fn"))
+
+    def mk_wire(op, fn, extra, desc):
+        return [mk(nm, op, partial(fn, wire_dtype=wd), "EXT", extra,
+                   desc=f"MPIX_{op}_{nm[5:]}: {desc}", wire=wd)
+                for nm, wd in _WIRES]
 
     r: dict[str, dict[str, Impl]] = {}
 
@@ -719,6 +834,10 @@ def _reg() -> dict[str, dict[str, Impl]]:
            "EXT", lambda n, p: p * n),
         mk("allgather_as_doubling", "allgather", allgather_as_doubling,
            "EXT", lambda n, p: p * n, pow2=True),
+        *mk_wire("allgather", allgather_wire,
+                 lambda n, p: p * n + n // 2,
+                 desc="ring with the chunk on the 8-bit wire "
+                      "(quantized once at origin)"),
     ]}
 
     r["allreduce"] = {i.name: i for i in [
@@ -738,6 +857,9 @@ def _reg() -> dict[str, dict[str, Impl]]:
            desc="chunked RS + AGv (Fig.7 winner)"),
         mk("allreduce_as_doubling", "allreduce", allreduce_as_doubling,
            "EXT", _nb0, pow2=True, desc="recursive doubling (latency-opt)"),
+        *mk_wire("allreduce", allreduce_wire,
+                 lambda n, p: (n + p) + (n + p) // p,
+                 desc="padded wire RS + wire AG (GL6 shape, 8-bit wire)"),
     ]}
 
     r["alltoall"] = {i.name: i for i in [
@@ -795,6 +917,10 @@ def _reg() -> dict[str, dict[str, Impl]]:
            rsb_as_reduce_scatter_irr, "GL18", lambda n, p: p * _I),
         mk("rsb_as_allreduce", "reducescatter", rsb_as_allreduce,
            "GL19", lambda n, p: n),
+        *mk_wire("reducescatter", reducescatter_wire,
+                 lambda n, p: 2 * max(n // p, 1),
+                 desc="ring with the travelling accumulator requantized "
+                      "per hop (f32 accumulate)"),
     ]}
 
     r["scan"] = {i.name: i for i in [
@@ -814,6 +940,9 @@ def _reg() -> dict[str, dict[str, Impl]]:
         mk("fused_ring", "allgather_matmul", allgather_matmul_fused_ring,
            "EXT", lambda n, p: p * n + 2 * n,
            desc="ring overlap: chunk matmul while next chunk in flight"),
+        *mk_wire("allgather_matmul", allgather_matmul_wire,
+                 lambda n, p: p * n + 2 * n + n // 2,
+                 desc="fused ring, activation chunk on the 8-bit wire"),
     ]}
 
     r["matmul_reducescatter"] = {i.name: i for i in [
@@ -823,6 +952,10 @@ def _reg() -> dict[str, dict[str, Impl]]:
            matmul_reducescatter_fused_ring, "EXT",
            lambda n, p: 2 * max(n // p, 1),
            desc="ring overlap: travelling accumulator hides matmul"),
+        *mk_wire("matmul_reducescatter", matmul_reducescatter_wire,
+                 lambda n, p: 2 * max(n // p, 1),
+                 desc="fused ring, partial-product accumulator on the "
+                      "8-bit wire (requantized per hop)"),
     ]}
 
     r["matmul_accumulate"] = {i.name: i for i in [
@@ -833,6 +966,10 @@ def _reg() -> dict[str, dict[str, Impl]]:
            "EXT", lambda n, p: p * n + 2 * n,
            desc="ring overlap: weight block in flight while partials "
                 "accumulate"),
+        *mk_wire("matmul_accumulate", matmul_accumulate_wire,
+                 lambda n, p: p * n + 2 * n + n // 2,
+                 desc="fused ring, weight block on the 8-bit wire "
+                      "(quantized once at origin)"),
     ]}
 
     r["matmul_reducescatter_2d"] = {i.name: i for i in [
@@ -865,6 +1002,39 @@ def _reg() -> dict[str, dict[str, Impl]]:
 REGISTRY: dict[str, dict[str, Impl]] = _reg()
 
 OPS = tuple(REGISTRY.keys())
+
+# ---------------------------------------------------------------------------
+# demotion ledger: impls removed from the admissible set at runtime.
+# A quantized-wire impl whose numeric error exceeds its wire tolerance on a
+# representative payload (core/selfcheck.py) is demoted here and from then on
+# is treated exactly like a failed guideline: api._select falls back to the
+# default, api._admissible_impls / tuner skip it, plan vectors never carry
+# it.  Process-local state, keyed (op, impl name).
+# ---------------------------------------------------------------------------
+
+_DEMOTED: dict[tuple[str, str], str] = {}
+
+
+def demote(op: str, name: str, reason: str = "tolerance") -> None:
+    """Remove ``(op, name)`` from the admissible set for this process."""
+    if name == "default":
+        raise ValueError("the default impl cannot be demoted")
+    if name not in REGISTRY[op]:
+        raise KeyError(f"unknown impl {op}.{name}")
+    _DEMOTED[(op, name)] = reason
+
+
+def is_demoted(op: str, name: str) -> bool:
+    return (op, name) in _DEMOTED
+
+
+def demotions() -> dict[tuple[str, str], str]:
+    """Snapshot of the current demotion ledger (copy)."""
+    return dict(_DEMOTED)
+
+
+def clear_demotions() -> None:
+    _DEMOTED.clear()
 
 
 def get_impl(op: str, name: str | None = None) -> Impl:

@@ -33,6 +33,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+from functools import partial
 
 from repro.core.collectives import REGISTRY
 
@@ -61,6 +62,10 @@ class Topo:
     matmul_flops: float = 2.0e14
     fused_mm_cols: int = 8192
     fused_step_overhead: float = 1.5e-6
+    # quantize/dequantize bandwidth of the wire_q8/wire_fp8 mock-ups: the
+    # per-block scale kernels are HBM-bound streaming passes, so they run at
+    # HBM speed (v5e ≈ 819 GB/s).  One pass reads + writes the payload.
+    quant_bw: float = 819e9
 
     @property
     def beta(self) -> float:
@@ -184,6 +189,38 @@ def t_linear_rooted(p, B, t: Topo, *, reduce: bool = False):
     """Naive rooted gather/scatter/reduce: root talks to p-1 peers serially."""
     per = t.alpha + B * t.beta + (B * t.gamma if reduce else 0.0)
     return (p - 1) * per
+
+
+# ---------------------------------------------------------------------------
+# quantized-wire pricing (wire_q8 / wire_fp8 mock-ups, kernels/quant.py)
+# ---------------------------------------------------------------------------
+
+#: bytes per wire element (mirrors kernels.quant.WIRE_ITEMSIZE without
+#: importing jax at costmodel-import time)
+WIRE_ITEMSIZE = {"int8": 1, "float8_e4m3fn": 1}
+
+#: on-wire overhead of the per-block scales: one f32 scale per BLOCK_ROWS=8
+#: rows.  A wire row is >= 32 B for any realistic width, so the fraction is
+#: bounded by 4/(8*32) * 8 = 1/16 — priced at that conservative bound.
+SCALE_FRAC = 1.0 / 16.0
+
+
+def wire_factor(wire_dtype: str, itemsize: int) -> float:
+    """Bytes-on-wire ratio vs the compute dtype (never > 1: quantizing an
+    already-8-bit payload does not shrink it)."""
+    return min(1.0, WIRE_ITEMSIZE[wire_dtype] / float(max(itemsize, 1)))
+
+
+def wire_bytes(B: float, itemsize: int, wire_dtype: str) -> float:
+    """Bytes a ``B``-byte compute-dtype payload occupies on the wire:
+    payload x wire_width/compute_width plus the per-block scale stream."""
+    return B * wire_factor(wire_dtype, itemsize) * (1.0 + SCALE_FRAC)
+
+
+def t_quant(B: float, t: Topo) -> float:
+    """One quantize (or dequantize) pass over ``B`` payload bytes: an
+    HBM-bound read+write stream at ``quant_bw``."""
+    return 2.0 * B / t.quant_bw
 
 
 # ---------------------------------------------------------------------------
@@ -389,6 +426,53 @@ def latency(op: str, impl: str, p: int, nbytes: int, topo: Topo,
         ("scatter", "scatter_as_tree"):
             lambda: t_tree_scatter_gather(p, B, topo),
     }
+    # ---- quantized-wire mock-ups (wire_q8 / wire_fp8) ----
+    # Same ring schedules with the travelling operand at wire width (+ scale
+    # overhead) plus quant/dequant HBM passes at quant_bw.  The canonical
+    # table carries no dtype (latency_cell does), so the compute dtype is
+    # assumed f32 (itemsize 4) — consistent with the /4.0 element counts of
+    # the fused-matmul entries above.  Gather-style wires quantize once and
+    # dequantize p-1 received chunks (p passes of B); travelling
+    # accumulators requantize + dequantize each hop (2(p-1) passes of B/p).
+    _it = 4
+    for _nm, _wd in (("wire_q8", "int8"), ("wire_fp8", "float8_e4m3fn")):
+        Bw = wire_bytes(B, _it, _wd)
+        Bwp = wire_bytes(B / p, _it, _wd)
+
+        def rs_wire(Bt, Btw, _p=p, _t=topo):
+            # ring reduce-scatter on the wire: bytes move at wire width,
+            # the f32 accumulate (γ) is full-width, 2 quant passes per hop.
+            return ((_p - 1) * _t.alpha
+                    + (_p - 1) / _p * Btw * _t.beta
+                    + (_p - 1) / _p * Bt * _t.gamma
+                    + 2 * (_p - 1) / _p * t_quant(Bt, _t))
+
+        def ag_wire(Bc, Bcw, _p=p, _t=topo):
+            # ring allgather on the wire: 1 quant + (p-1) dequant passes.
+            return t_ring_allgather(_p, Bcw, _t) + _p * t_quant(Bc, _t)
+
+        table.update({
+            ("allgather", _nm): partial(ag_wire, B, Bw),
+            ("reducescatter", _nm): partial(rs_wire, B, Bw),
+            ("allreduce", _nm):
+                lambda rs=partial(rs_wire, B, Bw),
+                       ag=partial(ag_wire, B / p, Bwp): rs() + ag(),
+            ("allgather_matmul", _nm):
+                lambda Bw=Bw: t_overlapped_ring(
+                    p, topo.alpha + Bw * topo.beta,
+                    t_fused_matmul(p * B / 4.0, topo)
+                    + p * t_quant(B, topo), topo),
+            ("matmul_accumulate", _nm):
+                lambda Bw=Bw: t_overlapped_ring(
+                    p, topo.alpha + Bw * topo.beta,
+                    t_fused_matmul(p * B / 4.0, topo)
+                    + p * t_quant(B, topo), topo),
+            ("matmul_reducescatter", _nm):
+                lambda Bwp=Bwp: t_overlapped_ring(
+                    p, topo.alpha + Bwp * topo.beta + (B / p) * topo.gamma,
+                    t_fused_matmul(B / 4.0, topo)
+                    + 2 * p * t_quant(B / p, topo), topo),
+        })
     key = (op, impl)
     if key not in table:
         raise KeyError(f"no cost model for {key}")
@@ -458,15 +542,29 @@ def latency_cell(cell, impl: str, topo: Topo, *,
         # streamed operand all-gathered over the axis; steps move B bytes
         if impl == "default":
             return latency("allgather", "default", p, cell.nbytes, topo) + mm
-        return t_overlapped_ring(p, topo.alpha + B * topo.beta, mm, topo)
+        step_b = B
+        if imp.wire_dtype:
+            # gather-style wire: steps move wire bytes; 1 quant + (p-1)
+            # dequant HBM passes fold into the overlappable compute.
+            step_b = wire_bytes(B, cell.itemsize, imp.wire_dtype)
+            mm = mm + p * t_quant(B, topo)
+        return t_overlapped_ring(p, topo.alpha + step_b * topo.beta, mm, topo)
     if cell.op == "matmul_reducescatter":
         bt_out = float(cell.mm_m * cell.mm_n * cell.itemsize)
         if impl == "default":
             return mm + latency("reducescatter", "default", p,
                                 int(bt_out), topo)
-        return t_overlapped_ring(
-            p, topo.alpha + (bt_out / p) * (topo.beta + topo.gamma),
-            mm, topo)
+        blk = bt_out / p
+        step = topo.alpha + blk * (topo.beta + topo.gamma)
+        if imp.wire_dtype:
+            # travelling accumulator on the wire: block bytes shrink, the
+            # f32 accumulate (γ) stays full-width, requantize+dequantize
+            # per hop folds into the overlappable compute.
+            step = (topo.alpha
+                    + wire_bytes(blk, cell.itemsize, imp.wire_dtype)
+                    * topo.beta + blk * topo.gamma)
+            mm = mm + 2 * p * t_quant(blk, topo)
+        return t_overlapped_ring(p, step, mm, topo)
     raise KeyError(f"no geometry cost model for {cell.op!r}")
 
 

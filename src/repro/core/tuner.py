@@ -29,7 +29,7 @@ from typing import Sequence
 from repro.core import costmodel, measure, nrep
 from repro.core import profiles as profiles_mod
 from repro.core.cell import OpCell
-from repro.core.collectives import REGISTRY
+from repro.core.collectives import REGISTRY, is_demoted
 from repro.core.profiles import Profile, ProfileStore, Range
 
 DEFAULT_SIZES = (1, 8, 32, 64, 100, 512, 1024, 4096, 8192, 32768,
@@ -275,6 +275,8 @@ def _measure_cell(cell: OpCell, backend,
     p, nbytes = cell.p, cell.nbytes
     for impl_name, impl in REGISTRY[cell.op].items():
         if impl.requires_pow2 and (p & (p - 1)) != 0:
+            continue
+        if impl_name != "default" and is_demoted(cell.op, impl_name):
             continue
         if (scratch_budget_bytes is not None
                 and impl_name != "default"
@@ -559,6 +561,7 @@ def estimate_trace_cost(trace, backend=None, *,
             p, nbytes = cell.p, cell.nbytes
             if name != "default" and (
                     (impl.requires_pow2 and (p & (p - 1)) != 0)
+                    or is_demoted(cell.op, name)
                     or (scratch_budget_bytes is not None
                         and impl.extra_bytes(nbytes, p)
                         > scratch_budget_bytes)):

@@ -79,7 +79,8 @@ from repro.core._axis import axis_index, axis_size, ring_perm
 __all__ = ["pallas_matmul", "ring_allgather_matmul",
            "ring_matmul_reducescatter", "ring_matmul_accumulate",
            "ring_matmul_reducescatter_2d", "ring_matmul_reducescatter_2d_t",
-           "on_tpu"]
+           "ring_allgather_matmul_wire", "ring_matmul_reducescatter_wire",
+           "ring_matmul_accumulate_wire", "on_tpu"]
 
 
 def _cdiv(a: int, b: int) -> int:
@@ -388,6 +389,129 @@ def ring_matmul_reducescatter_2d_t(g, x, rs_axis: str, ag_axis: str, *,
         if s < d - 1:
             acc = lax.ppermute(acc, rs_axis, ring_perm(d, 1))
     return acc
+
+
+# ---------------------------------------------------------------------------
+# tier 1c: quantized-wire rings (wire_q8 / wire_fp8 mock-up families)
+#
+# Same (p-1)-step issue-before-consume schedules as the f32 rings above, but
+# the TRAVELLING operand crosses the wire in an 8-bit format with per-block
+# scales (kernels/quant.py).  Two regimes:
+#
+# * gather-style (allgather-matmul, accumulate): the payload is quantized
+#   ONCE at its origin and the (values, scales) pair travels unchanged —
+#   every receiver dequantizes the same single-roundtrip approximation, and
+#   the resident chunk (which never crossed the wire) stays exact.
+# * travelling accumulator (matmul-reducescatter): the accumulator must be
+#   requantized before every hop; dequantized contributions are ALWAYS
+#   summed in f32 (the accumulate-in-f32 rule the selfcheck tolerance gate
+#   assumes), so errors add per hop but never compound multiplicatively.
+# ---------------------------------------------------------------------------
+
+
+def ring_allgather_matmul_wire(x, w, axis: str, *, wire_dtype: str = "int8",
+                               return_gathered: bool = False,
+                               mm: str = "auto"):
+    """``ring_allgather_matmul`` with the travelling activation chunk sent
+    as (8-bit values, per-block scales); dequantize-on-receive feeds the
+    per-chunk matmul.  ``return_gathered`` returns the wire-approximate
+    gathered operand (own chunk exact)."""
+    from repro.kernels import quant as Qz
+    p = axis_size(axis)
+    n = x.shape[0]
+    out_dtype = jnp.result_type(x.dtype, w.dtype)
+    if p == 1:
+        out = _local_mm(x, w, mm).astype(out_dtype)
+        return (out, x) if return_gathered else out
+    idx = axis_index(axis)
+    zeros = (0,) * (x.ndim - 1)
+    out = jnp.zeros((p * n, w.shape[-1]), out_dtype)
+    gath = jnp.zeros((p * n,) + x.shape[1:], x.dtype) if return_gathered \
+        else None
+    q, sc = Qz.quantize(x, wire_dtype)
+    cur = x                                 # resident chunk: never on the wire
+    for s in range(p):
+        # issue the transfer of the NEXT chunk's wire pair before consuming
+        # this one (same overlap exposure as the f32 ring)
+        nxt = (lax.ppermute(q, axis, ring_perm(p, 1)),
+               lax.ppermute(sc, axis, ring_perm(p, 1))) if s < p - 1 else None
+        src = (idx - s) % p                 # originating rank of `cur`
+        blk = _local_mm(cur, w, mm).astype(out_dtype)
+        out = lax.dynamic_update_slice(out, blk, (src * n, 0))
+        if return_gathered:
+            gath = lax.dynamic_update_slice(gath, cur.astype(x.dtype),
+                                            (src * n,) + zeros)
+        if nxt is not None:
+            q, sc = nxt
+            cur = Qz.dequantize(q, sc, x.dtype)
+    return (out, gath) if return_gathered else out
+
+
+def ring_matmul_reducescatter_wire(x, w, axis: str, *,
+                                   wire_dtype: str = "int8",
+                                   mm: str = "auto"):
+    """``ring_matmul_reducescatter`` with the travelling accumulator
+    requantized per hop; contributions accumulate in f32 after dequant."""
+    from repro.kernels import quant as Qz
+    p = axis_size(axis)
+    out_dtype = jnp.result_type(x.dtype, w.dtype)
+    if p == 1:
+        return _local_mm(x, w, mm).astype(out_dtype)
+    rows = x.shape[0]
+    assert rows % p == 0, f"rows {rows} not divisible by axis size {p}"
+    n = rows // p
+    idx = axis_index(axis)
+    acc = None
+    for s in range(p):
+        blk_id = (idx + (p - 1 - s)) % p
+        blk = lax.dynamic_slice(x, (blk_id * n,) + (0,) * (x.ndim - 1),
+                                (n,) + x.shape[1:])
+        contrib = _local_mm(blk, w, mm).astype(jnp.float32)
+        acc = contrib if acc is None else acc + contrib
+        if s < p - 1:
+            q, sc = Qz.quantize(acc, wire_dtype)
+            q = lax.ppermute(q, axis, ring_perm(p, 1))
+            sc = lax.ppermute(sc, axis, ring_perm(p, 1))
+            acc = Qz.dequantize(q, sc, jnp.float32)
+    return acc.astype(out_dtype)
+
+
+def ring_matmul_accumulate_wire(x, w, axis: str, *, wire_dtype: str = "int8",
+                                return_gathered: bool = False,
+                                mm: str = "auto"):
+    """``ring_matmul_accumulate`` with the travelling weight block sent as
+    a wire pair quantized once at its origin; partial products accumulate
+    in f32 after dequant."""
+    from repro.kernels import quant as Qz
+    p = axis_size(axis)
+    out_dtype = jnp.result_type(x.dtype, w.dtype)
+    if p == 1:
+        out = _local_mm(x, w, mm).astype(out_dtype)
+        return (out, w) if return_gathered else out
+    k_loc = w.shape[0]
+    assert x.shape[-1] == p * k_loc, (x.shape, w.shape, p)
+    idx = axis_index(axis)
+    zeros = (0,) * (w.ndim - 1)
+    gath = jnp.zeros((p * k_loc,) + w.shape[1:], w.dtype) if return_gathered \
+        else None
+    q, sc = Qz.quantize(w, wire_dtype)
+    cur = w                                 # resident block: never on the wire
+    acc = None
+    for s in range(p):
+        nxt = (lax.ppermute(q, axis, ring_perm(p, 1)),
+               lax.ppermute(sc, axis, ring_perm(p, 1))) if s < p - 1 else None
+        src = (idx - s) % p                 # originating rank of `cur`
+        xblk = lax.dynamic_slice_in_dim(x, src * k_loc, k_loc, axis=-1)
+        contrib = _local_mm(xblk, cur, mm).astype(jnp.float32)
+        acc = contrib if acc is None else acc + contrib
+        if return_gathered:
+            gath = lax.dynamic_update_slice(gath, cur.astype(w.dtype),
+                                            (src * k_loc,) + zeros)
+        if nxt is not None:
+            q, sc = nxt
+            cur = Qz.dequantize(q, sc, w.dtype)
+    out = acc.astype(out_dtype)
+    return (out, gath) if return_gathered else out
 
 
 # ---------------------------------------------------------------------------

@@ -80,3 +80,20 @@ def pack_ref(x, idx, p):
     n, d = x.shape
     buf = jnp.zeros((p * n, d), x.dtype)
     return jax.lax.dynamic_update_slice(buf, x, (idx * n, 0))
+
+
+def quant_roundtrip_ref(x, qmax, block_rows=8):
+    """Per-block symmetric int quantize/dequantize (kernels/quant.py wire
+    format), as an explicit loop over scale blocks: scale = max(|block|)/qmax,
+    q = clip(round(x/scale)), roundtrip = q*scale.  Returns (roundtrip
+    [n,d] f32, scales [nblocks] f32)."""
+    import numpy as np
+    xn = np.asarray(x, np.float32)
+    out = np.empty_like(xn)
+    scales = []
+    for b in range(0, xn.shape[0], block_rows):
+        blk = xn[b:b + block_rows]
+        s = max(float(np.max(np.abs(blk))), 1e-30) / qmax
+        scales.append(s)
+        out[b:b + block_rows] = np.clip(np.round(blk / s), -qmax, qmax) * s
+    return out, np.asarray(scales, np.float32)

@@ -107,12 +107,20 @@ def test_registry_impls_semantics(rng, op, impl_check):
         want = np.broadcast_to(want, (p,) + want.shape)
     else:
         want = (x @ np.asarray(w)).sum(0).reshape(p, n, m)
+    from repro.core.selfcheck import rel_err, wire_hops
+    from repro.kernels.quant import wire_tol
     for name in C.impl_names(op):
-        fn = C.REGISTRY[op][name].fn
-        got = jax.vmap(lambda a, fn=fn: fn(a, "x", w=w),
+        impl = C.REGISTRY[op][name]
+        got = jax.vmap(lambda a, fn=impl.fn: fn(a, "x", w=w),
                        axis_name="x")(jnp.asarray(x))
-        np.testing.assert_allclose(np.asarray(got), want, atol=1e-4,
-                                   err_msg=name)
+        if impl.wire_dtype is not None:
+            # quantized-wire impls are approximate by design: gate at
+            # their selfcheck tolerance instead of the exact atol
+            tol = wire_tol(impl.wire_dtype, wire_hops(op, p))
+            assert rel_err(got, want) <= tol, (name, rel_err(got, want))
+        else:
+            np.testing.assert_allclose(np.asarray(got), want, atol=1e-4,
+                                       err_msg=name)
 
 
 # ---------------------------------------------------------------------------
@@ -361,12 +369,16 @@ def test_lm_train_trace_contains_fused_ops_and_tuner_splits(rng):
                                e.count) for e in trace.entries])
     rep = tuner.tune_trace(scaled,
                            backend=tuner.CostModelBackend(cm.V5E_ICI))
+    # the overlap-ring family: fused_ring plus its quantized-wire variants
+    # (wire_q8/wire_fp8 run the same ring schedule with an 8-bit wire and
+    # may legitimately out-model fused_ring on comm-bound cells)
+    ring_family = ("fused_ring", "wire_q8", "wire_fp8")
     fused = [
         (ph, prof.op, r.impl)
         for ph, store in rep.phase_profiles.items()
         for prof in store
         for r in prof.ranges
-        if r.impl == "fused_ring"
+        if r.impl in ring_family
     ]
     assert any(op == "allgather_matmul" for _, op, _ in fused), fused
     assert any(op == "matmul_reducescatter" for _, op, _ in fused), fused
@@ -377,7 +389,7 @@ def test_lm_train_trace_contains_fused_ops_and_tuner_splits(rng):
                      for p_ in s if p_.op == "allgather_matmul")
     agmm_cells = [c for c, _cnt in Trace(scaled.entries).cells(ph).items()
                   if c.op == "allgather_matmul"]
-    assert any(store.lookup_cell(c) == "fused_ring" for c in agmm_cells)
+    assert any(store.lookup_cell(c) in ring_family for c in agmm_cells)
 
 
 # ---------------------------------------------------------------------------

@@ -11,6 +11,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import collectives as C
+from repro.core.selfcheck import rel_err, wire_hops
+from repro.kernels.quant import wire_tol
 
 PS = (4, 8)
 DTYPES = (np.float32, np.int32)
@@ -27,15 +29,29 @@ def data(rng, p, rows, width=3, dtype=np.float32):
     return rng.normal(size=(p, rows, width)).astype(dtype)
 
 
+def assert_close(op, name, p, got, want, atol):
+    """Exact atol for lossless impls; the selfcheck wire tolerance (max-norm
+    relative, hop-scaled) for quantized-wire mock-ups."""
+    wd = C.REGISTRY[op][name].wire_dtype
+    if wd is None:
+        np.testing.assert_allclose(got, want, atol=atol)
+    else:
+        r = rel_err(got, want)
+        assert r <= wire_tol(wd, wire_hops(op, p)), (op, name, r)
+
+
 @pytest.mark.parametrize("p", PS)
 @pytest.mark.parametrize("dtype", DTYPES)
 @pytest.mark.parametrize("name", C.impl_names("allgather"))
 def test_allgather(rng, p, dtype, name):
+    if (C.REGISTRY["allgather"][name].wire_dtype is not None
+            and np.issubdtype(dtype, np.integer)):
+        pytest.skip("quantized wire targets float payloads")
     x = data(rng, p, 5, dtype=dtype)
     want = x.reshape(p * 5, 3)
     got = run(C.REGISTRY["allgather"][name].fn, x, p)
-    np.testing.assert_allclose(got, np.broadcast_to(want, (p,) + want.shape),
-                               atol=1e-5)
+    assert_close("allgather", name, p, got,
+                 np.broadcast_to(want, (p,) + want.shape), 1e-5)
 
 
 @pytest.mark.parametrize("p", PS)
@@ -44,8 +60,8 @@ def test_allgather(rng, p, dtype, name):
 def test_allreduce(rng, p, name, chunk):
     x = data(rng, p, 7)
     got = run(C.REGISTRY["allreduce"][name].fn, x, p, chunk=chunk)
-    np.testing.assert_allclose(
-        got, np.broadcast_to(x.sum(0), (p, 7, 3)), atol=1e-4)
+    assert_close("allreduce", name, p, got,
+                 np.broadcast_to(x.sum(0), (p, 7, 3)), 1e-4)
 
 
 @pytest.mark.parametrize("p", PS)
@@ -54,7 +70,7 @@ def test_reducescatter(rng, p, name):
     x = data(rng, p, p * 4)
     want = x.sum(0).reshape(p, 4, 3)
     got = run(C.REGISTRY["reducescatter"][name].fn, x, p)
-    np.testing.assert_allclose(got, want, atol=1e-4)
+    assert_close("reducescatter", name, p, got, want, 1e-4)
 
 
 @pytest.mark.parametrize("p", PS)

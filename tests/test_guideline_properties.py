@@ -132,23 +132,29 @@ def test_latency_cell_monotone_in_nbytes(op_i, role_i, logp, k, m, n,
 # ---------------------------------------------------------------------------
 
 
-def _floors(cell):
+def _floors(cell, wire_dtype=None):
     """(compute, ring-comm) lower bounds of the cell's EXT decomposition —
     the pure matmul term and the (steps-1) outer-ring transfer term no
-    overlap schedule can hide."""
+    overlap schedule can hide.  A quantized-wire impl legitimately beats
+    the full-precision comm floor: its floor scales the travelling bytes
+    by ``wire_factor`` (the f32 accumulate γ and the matmul stay full
+    width)."""
     t = TOPO
     compute = 2.0 * cell.mm_k * cell.mm_m * cell.mm_n / t.matmul_flops
     B = float(max(cell.nbytes, 1))
+    wf = 1.0 if wire_dtype is None else cm.wire_factor(wire_dtype,
+                                                       cell.itemsize)
     if cell.mm_role == "scatter":
         bt = float(cell.mm_m * cell.mm_n * cell.itemsize)
-        comm = (cell.p - 1) * (t.alpha + bt / cell.p * (t.beta + t.gamma))
+        comm = (cell.p - 1) * (t.alpha + bt * wf / cell.p * t.beta
+                               + bt / cell.p * t.gamma)
     elif cell.mm_role == "2dT":
         # outer travelling accumulator over the p2 (scatter) axis
         bt = float(cell.mm_m * cell.mm_n * cell.itemsize)
         q = max(cell.p2, 1)
         comm = (q - 1) * (t.alpha + bt / q * (t.beta + t.gamma))
     else:  # gather / contract / 2d: the payload streams (p-1) hops
-        comm = (cell.p - 1) * (t.alpha + B * t.beta)
+        comm = (cell.p - 1) * (t.alpha + B * wf * t.beta)
     return compute, comm
 
 
@@ -160,9 +166,9 @@ def test_fused_mockup_never_beats_decomposition_floor(op_i, role_i, logp,
                                                       k, m, n, nbytes):
     op = FUSED_OPS[op_i]
     cell = _mk_cell(op, role_i, 2 ** logp, 2, 0, k, m, n, nbytes)
-    compute, comm = _floors(cell)
     eps = 1 + 1e-9
     for impl in REGISTRY[op]:
+        compute, comm = _floors(cell, REGISTRY[op][impl].wire_dtype)
         tl = cm.latency_cell(cell, impl, TOPO)
         assert tl * eps >= compute, (op, impl, cell, tl, compute)
         assert tl * eps >= comm, (op, impl, cell, tl, comm)

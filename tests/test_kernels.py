@@ -165,3 +165,102 @@ def test_pack_dtypes(dtype):
     o = guideline_pack(x, 2, 4, interpret=True)
     np.testing.assert_array_equal(np.asarray(o),
                                   np.asarray(ref.pack_ref(x, 2, 4)))
+
+
+def test_pack_int8_signed_values(rng):
+    """int8 payloads (the quantized-wire q tensor) place exactly, sign and
+    all — the pack path must not widen, round, or saturate."""
+    x = jnp.asarray(rng.integers(-128, 128, size=(8, 16)), jnp.int8)
+    for idx in range(4):
+        o = guideline_pack(x, idx, 4, interpret=True)
+        assert o.dtype == jnp.int8
+        np.testing.assert_array_equal(np.asarray(o),
+                                      np.asarray(ref.pack_ref(x, idx, 4)))
+
+
+@pytest.mark.parametrize("n,d,p,idx", [
+    (5, 7, 3, 2),      # nothing divides anything
+    (1, 1, 7, 6),      # degenerate single element, last slot
+    (13, 3, 5, 0),     # prime rows, first slot
+])
+def test_pack_non_divisible_shapes(rng, n, d, p, idx):
+    """One-hot placement for shapes with no power-of-two alignment: every
+    non-idx block is exactly zero and block idx is exactly x (no pad rows
+    leak into the output)."""
+    x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    o = np.asarray(guideline_pack(x, idx, p, interpret=True))
+    assert o.shape == (p * n, d)
+    np.testing.assert_array_equal(o[idx * n:(idx + 1) * n], np.asarray(x))
+    mask = np.ones(p * n, bool)
+    mask[idx * n:(idx + 1) * n] = False
+    np.testing.assert_array_equal(o[mask], 0.0)
+
+
+# ---------------------------------------------------------------------------
+# quantized wire (kernels/quant.py)
+# ---------------------------------------------------------------------------
+
+from repro.kernels import quant  # noqa: E402
+
+
+@pytest.mark.parametrize("wire_dtype", quant.WIRE_DTYPES)
+@pytest.mark.parametrize("n,d", [(32, 16), (13, 5), (3, 7), (8, 1)])
+def test_quant_pack_matches_jnp_tier(rng, wire_dtype, n, d):
+    """The Pallas tier (quant_pack/dequant_unpack, interpret mode) must agree
+    with the jnp tier (quantize/dequantize) to within 1 ulp on the scales
+    (the two tiers may associate the f32 division differently) and one
+    quantization step on the payload — including the non-divisible-n pad
+    path, where zero pad rows must not raise any block's abs-max."""
+    x = jnp.asarray(rng.normal(size=(n, d)) * 3.0, jnp.float32)
+    qj, sj = quant.quantize(x, wire_dtype)
+    qk, sk = quant.quant_pack(x, wire_dtype=wire_dtype, interpret=True)
+    assert qk.dtype == jnp.dtype(wire_dtype) and qk.shape == x.shape
+    np.testing.assert_allclose(np.asarray(sk), np.asarray(sj), rtol=3e-7)
+    step = float(np.max(np.asarray(sj)))
+    np.testing.assert_allclose(
+        np.asarray(quant.dequantize(qk, sk), np.float32),
+        np.asarray(quant.dequantize(qj, sj), np.float32), atol=1.01 * step)
+    # the dequant kernel itself is a pure multiply: bit-identical to the
+    # jnp tier on the SAME (q, scales) wire pair
+    dj = quant.dequantize(qj, sj)
+    dk = quant.dequant_unpack(qj, sj, interpret=True)
+    np.testing.assert_array_equal(np.asarray(dk), np.asarray(dj))
+
+
+def test_quant_int8_matches_loop_reference(rng):
+    """jnp-tier int8 roundtrip against the explicit per-block numpy loop in
+    ref.py (independent derivation of the wire format)."""
+    x = jnp.asarray(rng.normal(size=(29, 6)) * 10.0, jnp.float32)
+    got = np.asarray(quant.wire_roundtrip(x, "int8"))
+    want, scales_ref = ref.quant_roundtrip_ref(x, quant.QMAX["int8"],
+                                               quant.BLOCK_ROWS)
+    np.testing.assert_allclose(got, want, atol=1e-6)
+    _, scales = quant.quantize(x, "int8")
+    np.testing.assert_allclose(np.asarray(scales).reshape(-1), scales_ref,
+                               rtol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 40), st.integers(1, 9),
+       st.sampled_from(quant.WIRE_DTYPES), st.integers(0, 2 ** 31 - 1))
+def test_quant_roundtrip_error_bound(n, d, wire_dtype, seed):
+    """Single-hop roundtrip error stays inside wire_tol(wd, 1) for benign
+    payloads of any (including non-divisible) shape."""
+    x = jnp.asarray(np.random.default_rng(seed).normal(size=(n, d)) * 5.0,
+                    jnp.float32)
+    got = np.asarray(quant.wire_roundtrip(x, wire_dtype), np.float32)
+    denom = max(float(np.max(np.abs(np.asarray(x)))), 1e-30)
+    rel = float(np.max(np.abs(got - np.asarray(x)))) / denom
+    assert rel <= quant.wire_tol(wire_dtype, 1)
+
+
+def test_quant_scale_is_per_block(rng):
+    """A huge value in one block must not degrade other blocks' precision
+    (the whole point of per-block scales)."""
+    x = np.asarray(rng.normal(size=(16, 4)), np.float32)
+    x[0, 0] = 1e4                       # poison block 0 only
+    got = np.asarray(quant.wire_roundtrip(jnp.asarray(x), "int8"))
+    tail = slice(quant.BLOCK_ROWS, None)     # block 1 unaffected
+    denom = max(float(np.max(np.abs(x[tail]))), 1e-30)
+    rel = float(np.max(np.abs(got[tail] - x[tail]))) / denom
+    assert rel <= quant.wire_tol("int8", 1)

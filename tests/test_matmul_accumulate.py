@@ -69,13 +69,21 @@ def test_registry_impls_semantics(rng):
     w = rng.normal(size=(p, k_loc, m)).astype(np.float32)
     x = jnp.asarray(rng.normal(size=(t, p * k_loc)).astype(np.float32))
     want = np.asarray(x) @ w.reshape(p * k_loc, m)
+    from repro.core.selfcheck import rel_err, wire_hops
+    from repro.kernels.quant import wire_tol
     for name in C.impl_names("matmul_accumulate"):
-        fn = C.REGISTRY["matmul_accumulate"][name].fn
-        got = jax.vmap(lambda wb, fn=fn: fn(wb, "x", x=x),
+        impl = C.REGISTRY["matmul_accumulate"][name]
+        got = jax.vmap(lambda wb, fn=impl.fn: fn(wb, "x", x=x),
                        axis_name="x")(jnp.asarray(w))
         for r in range(p):
-            np.testing.assert_allclose(np.asarray(got)[r], want, atol=1e-4,
-                                       err_msg=name)
+            if impl.wire_dtype is not None:
+                # quantized-wire impls gate at the selfcheck tolerance
+                tol = wire_tol(impl.wire_dtype,
+                               wire_hops("matmul_accumulate", p))
+                assert rel_err(np.asarray(got)[r], want) <= tol, name
+            else:
+                np.testing.assert_allclose(np.asarray(got)[r], want,
+                                           atol=1e-4, err_msg=name)
 
 
 # ---------------------------------------------------------------------------

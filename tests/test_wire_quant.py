@@ -1,0 +1,176 @@
+"""Quantized-wire admissibility: the tolerance gate, the demotion ledger,
+and the dtype threading that makes both possible.
+
+Satellite coverage for the wire_q8/wire_fp8 mock-up family:
+
+* selfcheck.run_gate demotes a wire impl on an adversarial payload the wire
+  format cannot represent (large in-block dynamic range / cancellation),
+  and passes it on benign payloads;
+* a demoted impl disappears from every selection surface — static dispatch
+  (api._select falls back to default), runtime plans (_admissible_impls),
+  the tuner (never selected, cost estimates fall back to default);
+* OpCell.dtype round-trips dispatch -> trace JSONL -> geometry profile key
+  -> lookup_cell (regression for the dtype-threading audit: a bfloat16
+  callsite must not come back as float32).
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import api, collectives as C, costmodel, selfcheck, tuner
+from repro.core.cell import OpCell
+from repro.core.trace import Trace, TraceEntry
+from repro.kernels.quant import wire_tol
+
+P = 4
+
+
+@pytest.fixture(autouse=True)
+def _clean_ledger():
+    C.clear_demotions()
+    yield
+    C.clear_demotions()
+
+
+def _cancellation_payload(p=P, n=16, d=4, scale=1e3):
+    """Shards with large magnitudes that sum to nearly zero: the allreduce
+    answer is O(1) but every wire hop quantizes O(scale) values, so the
+    absolute quantization error (~scale/254 per hop for int8) dwarfs the
+    true result — exactly the payload class the tolerance gate exists for."""
+    rng = np.random.default_rng(7)
+    tiny = rng.normal(size=(p, n, d)).astype(np.float32)
+    x = tiny.copy()
+    x[0] += scale
+    x[1] -= scale
+    return x
+
+
+# ---------------------------------------------------------------------------
+# tolerance gate -> demotion
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ["wire_q8", "wire_fp8"])
+def test_selfcheck_gate_demotes_wire_on_cancellation(name):
+    ok, rel, tol = selfcheck.run_gate("allreduce", name,
+                                      _cancellation_payload())
+    assert not ok
+    assert rel > tol
+    assert C.is_demoted("allreduce", name)
+    assert ("allreduce", name) in C.demotions()
+
+
+def test_selfcheck_gate_passes_wire_on_benign_payload():
+    rng = np.random.default_rng(3)
+    x = rng.normal(size=(P, 16, 4)).astype(np.float32)
+    ok, rel, tol = selfcheck.run_gate("allreduce", "wire_q8", x)
+    assert ok
+    assert rel <= tol == wire_tol("int8", selfcheck.wire_hops("allreduce", P))
+    assert not C.is_demoted("allreduce", "wire_q8")
+
+
+def test_selfcheck_gate_demote_false_only_reports():
+    ok, _, _ = selfcheck.run_gate("allreduce", "wire_q8",
+                                  _cancellation_payload(), demote=False)
+    assert not ok
+    assert not C.is_demoted("allreduce", "wire_q8")
+
+
+def test_default_impl_cannot_be_demoted():
+    with pytest.raises(ValueError):
+        C.demote("allreduce", "default")
+    with pytest.raises(KeyError):
+        C.demote("allreduce", "no_such_impl")
+
+
+# ---------------------------------------------------------------------------
+# demotion is respected everywhere an impl can be chosen
+# ---------------------------------------------------------------------------
+
+
+def test_demoted_impl_falls_back_to_default_in_dispatch():
+    C.demote("allreduce", "wire_q8", "tolerance")
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(P, 8, 4)),
+                    jnp.float32)
+    with api.tuned(force={"allreduce": "wire_q8"}) as ctx:
+        got = jax.vmap(lambda a: api.allreduce(a, "x"), axis_name="x")(x)
+    # the forced-but-demoted impl was swapped for default: exact result
+    np.testing.assert_allclose(np.asarray(got),
+                               np.broadcast_to(np.asarray(x).sum(0),
+                                               x.shape), atol=1e-5)
+    assert [r.impl for r in ctx.record] == ["default"]
+
+
+def test_demoted_impl_left_out_of_admissible_set_and_plans():
+    cell = OpCell("allreduce", P, 1 << 20)
+    with api.tuned() as ctx:
+        before = api._admissible_impls("allreduce", cell, ctx)
+        assert "wire_q8" in before and "wire_fp8" in before
+        C.demote("allreduce", "wire_q8", "tolerance")
+        after = api._admissible_impls("allreduce", cell, ctx)
+    assert "wire_q8" not in after
+    assert "wire_fp8" in after                   # only the breaker goes
+    assert set(before) - set(after) == {"wire_q8"}
+
+
+def test_tuner_never_selects_demoted_wire_impls():
+    """On a comm-bound DCN cell the wire family wins by construction; after
+    demoting both wire impls the tuner must re-select from the rest."""
+    t = Trace([TraceEntry.of("allreduce", 8, 4 << 20)])
+    backend = tuner.CostModelBackend(costmodel.V5E_DCN)
+
+    rep = tuner.tune_trace(t, backend=backend)
+    sel = rep.phase_profiles["fwd"].lookup("allreduce", 8, 4 << 20)
+    assert sel in ("wire_q8", "wire_fp8")
+
+    C.demote("allreduce", "wire_q8", "tolerance")
+    C.demote("allreduce", "wire_fp8", "tolerance")
+    rep2 = tuner.tune_trace(t, backend=backend)
+    store2 = rep2.phase_profiles.get("fwd")
+    sel2 = store2.lookup("allreduce", 8, 4 << 20) if store2 else None
+    assert sel2 not in ("wire_q8", "wire_fp8")   # None or a non-wire winner
+
+    # cost estimation prices the (stale) wire selection as default, never
+    # the demoted impl's cheaper wire latency
+    est = tuner.estimate_trace_cost(t, backend, phases=rep.phase_profiles)
+    est_def = tuner.estimate_trace_cost(t, backend)
+    assert est["fwd"] == pytest.approx(est_def["fwd"])
+
+
+# ---------------------------------------------------------------------------
+# dtype threading regression (satellite 1)
+# ---------------------------------------------------------------------------
+
+
+def test_non_f32_dispatch_roundtrips_dtype_to_profile_lookup():
+    """bfloat16 fused callsite -> recorded cell -> JSONL -> geometry profile
+    keyed on dtype -> lookup_cell resolves for bf16 and (correctly) NOT for
+    an identical f32 cell."""
+    n, k, m = 256, 512, 64
+    x = jnp.ones((P, n, k), jnp.bfloat16)
+    w = jnp.ones((k, m), jnp.bfloat16)
+    with api.tuned() as ctx:
+        jax.vmap(lambda a: api.allgather_matmul(a, w, "x"),
+                 axis_name="x")(x)
+    t = Trace.from_context(ctx)
+    (cell,) = t.cells().keys()
+    assert cell.dtype == "bfloat16"
+    assert cell.fused and cell.nbytes == n * k * 2
+
+    back = Trace.from_jsonl(t.to_jsonl())
+    assert back == t
+    (bcell,) = back.cells().keys()
+    assert bcell.dtype == "bfloat16"
+    assert bcell.geom() is not None and bcell.geom().dtype == "bfloat16"
+
+    rep = tuner.tune_trace(back,
+                           backend=tuner.CostModelBackend(costmodel.V5E_DCN))
+    store = rep.phase_profiles["fwd"]
+    sel = store.lookup_cell(bcell)
+    assert sel is not None                       # tuned under the bf16 key
+    f32_twin = dataclasses.replace(bcell, dtype="float32")
+    assert store.lookup_cell(f32_twin) is None   # dtype is part of the key
