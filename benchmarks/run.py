@@ -10,8 +10,8 @@ def main() -> None:
     header()
     from benchmarks import (bench_case_allreduce, bench_case_reduce,
                             bench_collective_matmul, bench_decode_profile,
-                            bench_dispatch, bench_guidelines, bench_measured,
-                            bench_nrep_lookup, bench_roofline)
+                            bench_dispatch, bench_guidelines, bench_hierarchy,
+                            bench_measured, bench_nrep_lookup, bench_roofline)
     for mod in (bench_guidelines,       # Figs. 3/4/5 violation tables
                 bench_case_reduce,      # Fig. 6 Reduce<=Allreduce case
                 bench_case_allreduce,   # Fig. 7 rs+agv beats everything
@@ -20,6 +20,7 @@ def main() -> None:
                 bench_nrep_lookup,      # Alg.1/Eq.1 + O(log M) lookup
                 bench_measured,         # ReproMPI-style measured pipeline
                 bench_roofline,         # §Roofline per dry-run cell
+                bench_hierarchy,        # per-axis tiers + hier must-wins
                 bench_decode_profile):  # trace-replay serving (smoke)
         try:
             mod.run()

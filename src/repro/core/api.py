@@ -88,10 +88,32 @@ class TuneContext:
     # the runtime-dispatch plan (api.Plan) — see module docstring
     store_ref: object | None = None
     plan: "Plan | None" = None
+    # per-axis interconnect map (costmodel.MeshTopo): stamps each
+    # dispatched cell's tier token so profiles / traces key by tier
+    mesh_topo: object | None = None
 
 
 def _ctx() -> TuneContext | None:
     return getattr(_TLS, "ctx", None)
+
+
+_GLOBAL_MESH_TOPO = None
+
+
+def set_mesh_topo(topo) -> None:
+    """Install a process-wide ``costmodel.MeshTopo`` describing which
+    interconnect tier each mesh axis runs on.  Dispatch stamps every
+    cell's ``tier`` token from it (a ``tuned(mesh_topo=...)`` context
+    overrides it); ``None`` uninstalls."""
+    global _GLOBAL_MESH_TOPO
+    _GLOBAL_MESH_TOPO = topo
+
+
+def current_mesh_topo():
+    ctx = _ctx()
+    if ctx is not None and ctx.mesh_topo is not None:
+        return ctx.mesh_topo
+    return _GLOBAL_MESH_TOPO
 
 
 def current_phase() -> str:
@@ -126,7 +148,8 @@ def tuned(profiles: ProfileStore | None = None,
           phase_profiles: dict[str, ProfileStore] | None = None,
           record: list | None = None,
           store_ref=None,
-          plan: "Plan | None" = None):
+          plan: "Plan | None" = None,
+          mesh_topo=None):
     """Activate tuning for every ``repro.core.api`` collective issued inside.
 
     ``force`` maps op name -> impl name (the CLI library's static selection);
@@ -153,7 +176,7 @@ def tuned(profiles: ProfileStore | None = None,
                       phase_profiles=(dict(phase_profiles)
                                       if phase_profiles else None),
                       record=record if record is not None else [],
-                      store_ref=store_ref, plan=plan)
+                      store_ref=store_ref, plan=plan, mesh_topo=mesh_topo)
     _TLS.ctx = ctx
     try:
         yield ctx
@@ -205,22 +228,35 @@ def _make_cell(op: str, payload, axis: str, kw) -> OpCell:
     p = axis_size(axis)
     nbytes = _payload_bytes(payload)
     role = OP_MM_ROLE.get(op)
+    mt = current_mesh_topo()
     if role is None:
-        return OpCell(op, p, nbytes, str(payload.dtype))
+        inner = kw.get("inner_axis")
+        if inner is not None:
+            # hierarchical plain cell: p = outer (slow) axis, p2 = inner
+            tier = mt.tier_token(axis, inner) if mt is not None else ""
+            return OpCell(op, p, nbytes, str(payload.dtype),
+                          p2=axis_size(inner), tier=tier)
+        tier = mt.tier_token(axis) if mt is not None else ""
+        return OpCell(op, p, nbytes, str(payload.dtype), tier=tier)
     if role == "2d":
         # two-axis op: p = outer stream axis, p2 = inner reduce-scatter
-        # axis; recorded dims are the PER-RANK GEMM (see core/cell.py)
+        # axis; recorded dims are the PER-RANK GEMM (see core/cell.py).
+        # The tier token is always (stream axis / rs axis) — the costmodel
+        # swaps them itself for the transpose schedule.
         p2 = axis_size(kw["rs_axis"])
+        tier = (mt.tier_token(axis, kw["rs_axis"])
+                if mt is not None else "")
         if kw.get("xpose"):  # payload g [T/p, M] streamed+contracted
             mm_k, mm_m = p * payload.shape[0], payload.shape[-1]
             mm_n = kw["x"].shape[-1]
             return OpCell(op, p, nbytes, str(payload.dtype),
-                          mm_k, mm_m, mm_n, "2dT", p2)
+                          mm_k, mm_m, mm_n, "2dT", p2, tier)
         # payload w [K, M/p] column block streamed over the outer axis
         mm_k, mm_m = payload.shape[0], kw["x"].shape[0]
         mm_n = p * payload.shape[-1]
         return OpCell(op, p, nbytes, str(payload.dtype),
-                      mm_k, mm_m, mm_n, "2d", p2)
+                      mm_k, mm_m, mm_n, "2d", p2, tier)
+    tier = mt.tier_token(axis) if mt is not None else ""
     if role == "gather":     # payload x [n, K] gathered over rows, w [K, M]
         mm_k, mm_m = payload.shape[-1], p * payload.shape[0]
         mm_n = kw["w"].shape[-1]
@@ -230,7 +266,8 @@ def _make_cell(op: str, payload, axis: str, kw) -> OpCell:
     else:                    # contract: payload = streamed w block [K/p, M]
         mm_k, mm_m = p * payload.shape[0], kw["x"].shape[0]
         mm_n = payload.shape[-1]
-    return OpCell(op, p, nbytes, str(payload.dtype), mm_k, mm_m, mm_n, role)
+    return OpCell(op, p, nbytes, str(payload.dtype), mm_k, mm_m, mm_n, role,
+                  tier=tier)
 
 
 def _select(op: str, payload, axis: str, impl: str | None, kw) -> str:
@@ -278,7 +315,13 @@ def _select(op: str, payload, axis: str, impl: str | None, kw) -> str:
         raise KeyError(f"unknown impl {name!r} for op {op!r}")
     # pow2 guard + scratch budget (paper's size_msg_buffer_bytes semantics)
     # + demotion ledger (a quantized-wire impl that broke its tolerance)
-    if cand.requires_pow2 and (p & (p - 1)) != 0:
+    # + tier-world guard (a hier mock-up needs a two-axis cell; a flat
+    #   mock-up over one axis would silently reduce a hier problem wrong)
+    if cand.requires_pow2 and (
+            (p & (p - 1)) != 0
+            or (cell.p2 and (cell.p2 & (cell.p2 - 1)) != 0)):
+        name, cand = "default", C.REGISTRY[op]["default"]
+    if name != "default" and getattr(cand, "hier", False) != cell.hier:
         name, cand = "default", C.REGISTRY[op]["default"]
     if name != "default" and C.is_demoted(op, name):
         name, cand = "default", C.REGISTRY[op]["default"]
@@ -484,7 +527,11 @@ def _admissible_impls(op: str, cell: OpCell,
     out = []
     for name in ["default"] + sorted(n for n in reg if n != "default"):
         impl = reg[name]
-        if impl.requires_pow2 and (p & (p - 1)) != 0:
+        if impl.requires_pow2 and (
+                (p & (p - 1)) != 0
+                or (cell.p2 and (cell.p2 & (cell.p2 - 1)) != 0)):
+            continue
+        if name != "default" and getattr(impl, "hier", False) != cell.hier:
             continue
         if name != "default" and C.is_demoted(op, name):
             continue
@@ -544,16 +591,33 @@ def _dispatch(op: str, payload, axis: str, impl: str | None, /, **kw):
 
 # -- public entry points -----------------------------------------------------
 
-def allgather(x, axis: str, *, impl: str | None = None):
-    return _dispatch("allgather", x, axis, impl)
+def allgather(x, axis: str, *, inner_axis: str | None = None,
+              impl: str | None = None):
+    """With ``inner_axis`` the gather runs over the joint
+    ``(axis, inner_axis)`` group in outer-major block order — ``axis`` is
+    the OUTER (slow-tier) axis — and the cell records ``p2`` + the tier
+    token, making the hierarchical ``MPIX_*`` mock-ups admissible."""
+    if inner_axis is None:
+        return _dispatch("allgather", x, axis, impl)
+    return _dispatch("allgather", x, axis, impl, inner_axis=inner_axis)
 
 
-def allreduce(x, axis: str, *, impl: str | None = None, **kw):
+def allreduce(x, axis: str, *, inner_axis: str | None = None,
+              impl: str | None = None, **kw):
+    """With ``inner_axis`` the sum runs over the joint group (see
+    ``allgather``)."""
+    if inner_axis is not None:
+        kw["inner_axis"] = inner_axis
     return _dispatch("allreduce", x, axis, impl, **kw)
 
 
-def reducescatter(x, axis: str, *, impl: str | None = None):
-    return _dispatch("reducescatter", x, axis, impl)
+def reducescatter(x, axis: str, *, inner_axis: str | None = None,
+                  impl: str | None = None):
+    """With ``inner_axis`` the scatter runs over the joint group: rank
+    ``(i, j)`` receives joint-sum block ``i*q + j`` (outer-major)."""
+    if inner_axis is None:
+        return _dispatch("reducescatter", x, axis, impl)
+    return _dispatch("reducescatter", x, axis, impl, inner_axis=inner_axis)
 
 
 def alltoall(x, axis: str, *, impl: str | None = None):

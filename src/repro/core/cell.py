@@ -41,14 +41,27 @@ matmul_reducescatter_2d  g ``[mm_k/p, mm_m]``       ``2dT`` — the transpose
                                                     over ``p2``
 =======================  =========================  =======================
 
-The 2-D op is the only one whose cell carries a SECOND axis size ``p2``
-(the inner reduce-scatter axis; ``p`` is always the axis the payload
-streams over).  1-D cells keep ``p2 == 0``; ``world()`` is the device
+``p2`` is the SECOND axis size of a two-axis cell: the inner
+reduce-scatter axis of the fused 2-D op, or the intra (fast-tier) axis of
+a HIERARCHICAL plain collective (``allreduce``/``allgather``/
+``reducescatter`` issued over an (inter, intra) axis pair — the
+RS-intra→AR-inter→AG-intra decomposition family).  ``p`` is always the
+axis the payload streams over (2-D) or the OUTER/inter axis
+(hierarchical).  1-D cells keep ``p2 == 0``; ``world()`` is the device
 count the cell needs (``p`` or ``p * p2``).  For 2-D cells the recorded
 GEMM dims are the PER-RANK problem — ``[mm_m, mm_k] @ [mm_k, mm_n]`` is
 the matmul one rank performs across the whole nested ring — consistent
 with the 1-D convention (e.g. ``matmul_reducescatter``'s ``mm_k`` is the
 local partial-contraction depth).
+
+``tier`` is the interconnect-tier token of the cell's axes under a
+hierarchical ``costmodel.MeshTopo``: ``""`` for flat/untiered cells (the
+pre-hierarchy behaviour), a single tier name (``"v5e-dcn"``) for a flat
+cell on a known tier, or ``"<outer>/<inner>"`` for two-axis cells.  The
+token partitions profiles (see ``OpCell.profile_tier`` /
+``ProfileStore.lookup_cell``) so a flat-tier tuning result is never
+served to a hierarchical cell with the same ``(op, p, nbytes)`` —
+and vice versa.
 
 Plain collectives carry ``mm_k == mm_m == mm_n == 0`` and ``mm_role == ""``
 (``fused`` is False); their dtype is still recorded.
@@ -130,21 +143,44 @@ class OpCell:
     mm_m: int = 0               # output rows of the fused GEMM
     mm_n: int = 0               # output cols of the fused GEMM
     mm_role: str = ""           # one of MM_ROLES or "" (plain)
-    p2: int = 0                 # inner axis size (2-D cells only; else 0)
+    p2: int = 0                 # inner axis size (2-D / hierarchical cells)
+    tier: str = ""              # interconnect-tier token ("" = flat/untiered)
+
+    #: plain ops that may carry a second (intra) axis — the hierarchical
+    #: decomposition family
+    HIER_OPS = ("allreduce", "allgather", "reducescatter")
 
     def __post_init__(self):
         if self.mm_role and self.mm_role not in MM_ROLES:
             raise ValueError(f"unknown mm_role {self.mm_role!r}")
         if self.p2 and self.mm_role not in ("2d", "2dT"):
-            raise ValueError(
-                f"p2={self.p2} only valid for 2-D roles, not "
-                f"{self.mm_role!r}")
+            if self.mm_role or self.op not in self.HIER_OPS:
+                raise ValueError(
+                    f"p2={self.p2} only valid for 2-D roles or the "
+                    f"hierarchical plain ops {self.HIER_OPS}, not "
+                    f"op={self.op!r} role={self.mm_role!r}")
 
     # -- views ---------------------------------------------------------------
     @property
     def fused(self) -> bool:
         """True when the cell carries a recorded GEMM geometry."""
         return self.mm_k > 0
+
+    @property
+    def hier(self) -> bool:
+        """True for a hierarchical plain cell: a collective issued over an
+        (inter, intra) axis pair — ``p`` outer ranks × ``p2`` inner ranks —
+        with no fused GEMM (the fused 2-D op keeps its own role)."""
+        return self.p2 > 0 and not self.fused
+
+    def profile_tier(self) -> str:
+        """The tier token profiles partition on.  Hierarchical plain cells
+        fold the inner axis size in (their ``Geom`` is None, so nothing
+        else separates an 8-way flat cell from a 2×4 hierarchical one);
+        fused 2-D cells already carry ``p2`` inside their ``Geom``."""
+        if self.hier:
+            return f"{self.tier or 'hier'}@q{self.p2}"
+        return self.tier
 
     def world(self) -> int:
         """Device count the cell's communication problem spans: ``p`` for

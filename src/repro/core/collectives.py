@@ -118,16 +118,26 @@ def _is_pow2(p: int) -> bool:
 # ---------------------------------------------------------------------------
 
 
-def allgather_default(x, axis: str, **_):
+def allgather_default(x, axis: str, *, inner_axis: str | None = None, **_):
+    """Flat: one ``all_gather``.  Hierarchical (``inner_axis`` set): the
+    untuned two-axis lowering — gather the intra tier, then the inter
+    tier, yielding outer-major block order (what one flat gather over the
+    joint ``(axis, inner_axis)`` group produces)."""
+    if inner_axis is not None:
+        x = lax.all_gather(x, inner_axis, axis=0, tiled=True)
     return lax.all_gather(x, axis, axis=0, tiled=True)
 
 
-def allreduce_default(x, axis: str, **_):
-    return lax.psum(x, axis)
+def allreduce_default(x, axis: str, *, inner_axis: str | None = None, **_):
+    return lax.psum(x, axis if inner_axis is None else (axis, inner_axis))
 
 
-def reducescatter_default(x, axis: str, **_):
-    return lax.psum_scatter(x, axis, scatter_dimension=0, tiled=True)
+def reducescatter_default(x, axis: str, *, inner_axis: str | None = None,
+                          **_):
+    y = lax.psum_scatter(x, axis, scatter_dimension=0, tiled=True)
+    if inner_axis is not None:
+        y = lax.psum_scatter(y, inner_axis, scatter_dimension=0, tiled=True)
+    return y
 
 
 def alltoall_default(x, axis: str, **_):
@@ -770,6 +780,47 @@ def matmul_accumulate_wire(w, axis: str, *, x, wire_dtype: str = "int8",
 
 
 # ---------------------------------------------------------------------------
+# hierarchical (two-tier) mock-ups — MPIX_* extension family.
+#
+# These are the ONLY impls that take a second axis: ``axis`` is the OUTER
+# (inter-tier, slow) axis and ``inner_axis`` the INNER (intra-tier, fast)
+# one.  They decompose a joint-group collective into per-tier ring stages
+# (kernels/hierarchical.py) so the bulk of the bytes stay on the fast
+# tier; admissibility is gated on ``Impl.hier`` — a flat mock-up must
+# never be offered a two-axis cell (it would silently reduce over one
+# axis only), and a hier mock-up is meaningless on a flat cell.
+# ---------------------------------------------------------------------------
+
+
+def _need_inner(name: str, inner_axis):
+    if inner_axis is None:
+        raise ValueError(
+            f"{name} is a hierarchical mock-up: it needs inner_axis= "
+            "(the intra-tier axis) in addition to the outer axis")
+
+
+def allreduce_hier(x, axis: str, *, inner_axis: str | None = None, **_):
+    """(⊕ MPIX_rs_ar_ag) RS-intra → AR-inter → AG-intra."""
+    _need_inner("MPIX_rs_ar_ag", inner_axis)
+    from repro.kernels import hierarchical as H
+    return H.hier_allreduce(x, axis, inner_axis)
+
+
+def allgather_hier(x, axis: str, *, inner_axis: str | None = None, **_):
+    """(⊕ MPIX_ag_ag) AG-intra → AG-inter (outer-major block order)."""
+    _need_inner("MPIX_ag_ag", inner_axis)
+    from repro.kernels import hierarchical as H
+    return H.hier_allgather(x, axis, inner_axis)
+
+
+def reducescatter_hier(x, axis: str, *, inner_axis: str | None = None, **_):
+    """(⊕ MPIX_rs_rs) RS-inter → RS-intra (the MPIX_ag_ag dual)."""
+    _need_inner("MPIX_rs_rs", inner_axis)
+    from repro.kernels import hierarchical as H
+    return H.hier_reduce_scatter(x, axis, inner_axis)
+
+
+# ---------------------------------------------------------------------------
 # registry
 # ---------------------------------------------------------------------------
 
@@ -789,6 +840,11 @@ class Impl:
     # None = the wire carries the compute dtype.  Non-None marks the impl
     # accuracy-conditional: selfcheck's tolerance gate may demote it.
     wire_dtype: str | None = None
+    # True for the two-axis (hierarchical) mock-ups: the impl REQUIRES
+    # ``inner_axis=`` and is only admissible on hierarchical cells
+    # (``OpCell.hier``); flat impls are only admissible on flat cells.
+    # The default impl handles both worlds itself.
+    hier: bool = False
 
     def __call__(self, x, axis, **kw):
         return self.fn(x, axis, **kw)
@@ -803,8 +859,9 @@ def _nb0(nbytes: int, p: int) -> int:  # no extra memory
 
 
 def _reg() -> dict[str, dict[str, Impl]]:
-    def mk(name, op, fn, gl, extra, pow2=False, desc="", wire=None):
-        return Impl(name, op, fn, gl, extra, pow2, desc, wire)
+    def mk(name, op, fn, gl, extra, pow2=False, desc="", wire=None,
+           hier=False):
+        return Impl(name, op, fn, gl, extra, pow2, desc, wire, hier)
 
     # quantized-wire mock-ups share one family shape: MPIX_-style name
     # (wire_q8 / wire_fp8 — the MPIX_ prefix marks a beyond-the-standard
@@ -834,6 +891,10 @@ def _reg() -> dict[str, dict[str, Impl]]:
            "EXT", lambda n, p: p * n),
         mk("allgather_as_doubling", "allgather", allgather_as_doubling,
            "EXT", lambda n, p: p * n, pow2=True),
+        mk("MPIX_ag_ag", "allgather", allgather_hier, "EXT",
+           lambda n, p: p * n, hier=True,
+           desc="hierarchical AG-intra -> AG-inter: node block assembled "
+                "on the fast tier, streamed across the slow tier once"),
         *mk_wire("allgather", allgather_wire,
                  lambda n, p: p * n + n // 2,
                  desc="ring with the chunk on the 8-bit wire "
@@ -857,6 +918,11 @@ def _reg() -> dict[str, dict[str, Impl]]:
            desc="chunked RS + AGv (Fig.7 winner)"),
         mk("allreduce_as_doubling", "allreduce", allreduce_as_doubling,
            "EXT", _nb0, pow2=True, desc="recursive doubling (latency-opt)"),
+        mk("MPIX_rs_ar_ag", "allreduce", allreduce_hier, "EXT",
+           lambda n, p: n + max(n // p, 1), hier=True,
+           desc="hierarchical RS-intra -> AR-inter -> AG-intra: full "
+                "buffer only moves on the fast tier; 1/q of it crosses "
+                "the slow tier"),
         *mk_wire("allreduce", allreduce_wire,
                  lambda n, p: (n + p) + (n + p) // p,
                  desc="padded wire RS + wire AG (GL6 shape, 8-bit wire)"),
@@ -917,6 +983,10 @@ def _reg() -> dict[str, dict[str, Impl]]:
            rsb_as_reduce_scatter_irr, "GL18", lambda n, p: p * _I),
         mk("rsb_as_allreduce", "reducescatter", rsb_as_allreduce,
            "GL19", lambda n, p: n),
+        mk("MPIX_rs_rs", "reducescatter", reducescatter_hier, "EXT",
+           lambda n, p: 2 * max(n // p, 1), hier=True,
+           desc="hierarchical RS-inter -> RS-intra (MPIX_ag_ag dual): "
+                "slow tier reduces node blocks, fast tier finishes"),
         *mk_wire("reducescatter", reducescatter_wire,
                  lambda n, p: 2 * max(n // p, 1),
                  desc="ring with the travelling accumulator requantized "

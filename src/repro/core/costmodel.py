@@ -71,6 +71,16 @@ class Topo:
     def beta(self) -> float:
         return 1.0 / self.link_bw
 
+    def scaled(self, *, name: str | None = None, alpha_mult: float = 1.0,
+               bw_mult: float = 1.0, gamma_mult: float = 1.0) -> "Topo":
+        """A derived tier: the same fabric with its link parameters scaled
+        (how a DCN tier is anchored to a FITTED base tier — published
+        relative gaps applied to measured absolutes, see ``fit_topo``)."""
+        return dataclasses.replace(
+            self, name=name or f"{self.name}-scaled",
+            alpha=self.alpha * alpha_mult, link_bw=self.link_bw * bw_mult,
+            gamma=self.gamma * gamma_mult)
+
 
 # v5e: ~50 GB/s per ICI link/direction, ~1 µs collective start, reductions
 # run at HBM speed (819 GB/s read+write ≈ 2.4e-12 s/B effective).
@@ -83,6 +93,150 @@ BGQ_LIKE = Topo("bgq-like", alpha=2.0e-6, link_bw=2e9, gamma=4e-12,
                 default_pricing="naive", hw_bcast=True)
 
 PRESETS = {t.name: t for t in (V5E_ICI, V5E_DCN, BGQ_LIKE)}
+
+#: published v5e DCN-vs-ICI link gaps (the RATIOS are the assumed part;
+#: ``MeshTopo.fit``/``fit_topo`` anchor the absolutes in measured sweeps)
+DCN_ALPHA_MULT = 10.0
+DCN_BW_MULT = 12.5e9 / 50e9
+
+
+# ---------------------------------------------------------------------------
+# hierarchical topology: one Topo per mesh axis
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshTopo:
+    """Per-axis fabric map of a hierarchical mesh: axis name -> ``Topo``.
+
+    A ``(pod, data, model)`` mesh crosses interconnect tiers with
+    order-of-magnitude link gaps; pricing every axis with one flat ``Topo``
+    is the bug this type fixes.  ``latency_cell``/``sweep_cell`` accept a
+    ``MeshTopo`` wherever they accept a ``Topo`` and resolve each cell's
+    ``tier`` token (``""``, ``"<tier>"`` or ``"<outer>/<inner>"``) to the
+    per-axis parameters; plain-``Topo`` callers keep the flat behaviour
+    bit-for-bit.
+    """
+    axes: tuple[tuple[str, "Topo"], ...]
+
+    @classmethod
+    def of(cls, **axes: "Topo") -> "MeshTopo":
+        """``MeshTopo.of(pod=V5E_DCN, data=V5E_ICI, model=V5E_ICI)``."""
+        return cls(tuple(axes.items()))
+
+    @classmethod
+    def fit(cls, axis_points: "dict[str, tuple[int, list, list | None]]",
+            *, base: "Topo" = V5E_ICI) -> "MeshTopo":
+        """Build a MeshTopo whose per-tier parameters are FIT from measured
+        sweeps: ``axis_points[name] = (p, allgather_points,
+        allreduce_points?)`` with points as ``(payload_bytes, seconds)``
+        (see ``measure.sweep_axis``).  Each axis gets ``fit_topo`` applied
+        to its own sweep — no assumed constants."""
+        fitted = {name: fit_topo(p, ag, ar, name=name, base=base)
+                  for name, (p, ag, ar) in axis_points.items()}
+        return cls(tuple(fitted.items()))
+
+    # -- resolution ----------------------------------------------------------
+    def topo(self, axis: str) -> "Topo":
+        """The fabric of one mesh axis (KeyError for unknown axes)."""
+        for name, t in self.axes:
+            if name == axis:
+                return t
+        raise KeyError(f"MeshTopo has no axis {axis!r} "
+                       f"(axes: {[n for n, _ in self.axes]})")
+
+    def by_tier(self, token: str) -> "Topo | None":
+        """A tier by its ``Topo.name`` token (None when unknown)."""
+        for _, t in self.axes:
+            if t.name == token:
+                return t
+        return None
+
+    @property
+    def flat(self) -> "Topo":
+        """The tier untiered (``tier == ""``) cells price on: the FASTEST
+        axis (min β) — matches the pre-hierarchy flat model, which assumed
+        every link was the good one."""
+        return min((t for _, t in self.axes), key=lambda t: (t.beta, t.alpha))
+
+    @property
+    def slowest(self) -> "Topo":
+        return max((t for _, t in self.axes), key=lambda t: (t.beta, t.alpha))
+
+    def tier_token(self, axis: str, inner_axis: str | None = None) -> str:
+        """The ``OpCell.tier`` token of a dispatch over ``axis`` (and, for
+        two-axis cells, ``inner_axis``).  Unknown axes map to ``""`` (the
+        untiered flat behaviour) rather than raising: an uninstrumented
+        mesh must keep dispatching."""
+        try:
+            tok = self.topo(axis).name
+        except KeyError:
+            return ""
+        if inner_axis is None:
+            return tok
+        try:
+            return f"{tok}/{self.topo(inner_axis).name}"
+        except KeyError:
+            return ""
+
+    def resolve(self, tier: str) -> "tuple[Topo, Topo]":
+        """``(outer, inner)`` fabrics of a cell's tier token.  ``""`` and
+        unknown tokens price flat; a single token prices both slots on
+        that tier (1-D cells only read the first slot)."""
+        if not tier:
+            return self.flat, self.flat
+        out_tok, _, in_tok = tier.partition("/")
+        t_out = self.by_tier(out_tok) or self.flat
+        t_in = (self.by_tier(in_tok) or self.flat) if in_tok else t_out
+        return t_out, t_in
+
+
+def _lstsq_line(points) -> tuple[float, float]:
+    """Closed-form least squares of ``t = intercept + slope·B`` over
+    ``[(B, t), ...]`` (>= 2 distinct sizes required)."""
+    pts = [(float(b), float(t)) for b, t in points]
+    n = len(pts)
+    if n < 2 or len({b for b, _ in pts}) < 2:
+        raise ValueError("fit_topo needs >= 2 distinct payload sizes")
+    mx = sum(b for b, _ in pts) / n
+    my = sum(t for _, t in pts) / n
+    sxx = sum((b - mx) ** 2 for b, _ in pts)
+    sxy = sum((b - mx) * (t - my) for b, t in pts)
+    slope = sxy / sxx
+    return slope, my - slope * mx
+
+
+def fit_topo(p: int, allgather_points, allreduce_points=None, *,
+             name: str = "fit", base: "Topo" = V5E_ICI) -> "Topo":
+    """α-β(-γ) of ONE tier from measured ring sweeps, not assumed constants.
+
+    ``allgather_points``: ``(per-shard payload bytes B, seconds)`` samples
+    of a ring all-gather on a ``p``-rank axis — the model is linear,
+    ``t = (p-1)·α + (p-1)·β·B``, so a least-squares line gives
+    ``α = intercept/(p-1)`` and ``β = slope/(p-1)``.  With
+    ``allreduce_points`` (total-buffer bytes Bt vs seconds;
+    ``t = 2(p-1)·α + (2(p-1)/p)·β·Bt + ((p-1)/p)·γ·Bt``) the reduction
+    cost γ is fit from the slope surplus over the already-fit β.  Non-link
+    fields (overheads, matmul rates) carry over from ``base``.
+    """
+    if p < 2:
+        raise ValueError("fit_topo needs an axis of size >= 2")
+    slope, icept = _lstsq_line(allgather_points)
+    alpha = max(icept / (p - 1), 1e-12)
+    beta = max(slope / (p - 1), 1e-16)
+    gamma = base.gamma
+    if allreduce_points is not None:
+        s2, _ = _lstsq_line(allreduce_points)
+        gamma = max((s2 - 2.0 * (p - 1) / p * beta) * p / (p - 1), 0.0)
+    return dataclasses.replace(base, name=name, alpha=alpha,
+                               link_bw=1.0 / beta, gamma=gamma)
+
+
+def _tiers_for(cell, topo) -> "tuple[Topo, Topo]":
+    """``(outer, inner)`` fabrics for one cell under either topology kind."""
+    if isinstance(topo, MeshTopo):
+        return topo.resolve(getattr(cell, "tier", ""))
+    return topo, topo
 
 
 def _log2c(p: int) -> int:
@@ -163,7 +317,8 @@ def t_overlapped_ring(p, step_comm: float, mm_total: float, t: Topo):
 
 
 def t_overlapped_ring2d(p_out: int, q_in: int, outer_step_comm: float,
-                        inner_step_comm: float, mm_total: float, t: Topo):
+                        inner_step_comm: float, mm_total: float, t: Topo,
+                        t_inner: "Topo | None" = None):
     """The nested overlap law of the 2-D ring:
     ``max(outer_comm, per-step max(inner_comm, compute))``.
 
@@ -174,8 +329,18 @@ def t_overlapped_ring2d(p_out: int, q_in: int, outer_step_comm: float,
     first outer block's inner ring is exposed, and the outer kernel issue
     pays ``fused_step_overhead`` per outer step — so the 2-D schedule
     loses in the latency regime on BOTH axes at once.
+
+    The two axes are independent fabrics: ``t`` prices the OUTER stream
+    (its ``fused_step_overhead`` is the outer kernel-issue cost) and
+    ``t_inner`` the inner ring.  A data(DCN)×model(ICI) mesh priced with
+    one flat ``t`` — the pre-``MeshTopo`` behaviour, kept when ``t_inner``
+    is omitted — underestimates the outer stream by the full ICI/DCN
+    bandwidth gap (~4x at v5e numbers).  Callers must also build
+    ``outer_step_comm``/``inner_step_comm`` from the matching per-axis
+    α/β (see ``latency_cell``).
     """
-    inner = t_overlapped_ring(q_in, inner_step_comm, mm_total / p_out, t)
+    ti = t if t_inner is None else t_inner
+    inner = t_overlapped_ring(q_in, inner_step_comm, mm_total / p_out, ti)
     return inner + (p_out - 1) * max(
         inner, outer_step_comm + t.fused_step_overhead)
 
@@ -230,10 +395,13 @@ def t_quant(B: float, t: Topo) -> float:
 
 
 def latency(op: str, impl: str, p: int, nbytes: int, topo: Topo,
-            *, chunk_bytes: int = 0) -> float:
+            *, chunk_bytes: int = 0, tier: str = "") -> float:
     """Modeled latency (seconds) of one ``impl`` of ``op`` on an axis of size
     ``p``.  Compositions are priced as the sum of the sub-implementations
-    they actually lower to (see collectives.py)."""
+    they actually lower to (see collectives.py).  A ``MeshTopo`` is
+    resolved through ``tier`` (one axis — the first slot of the token)."""
+    if isinstance(topo, MeshTopo):
+        topo = topo.resolve(tier)[0]
     if p <= 1:
         return 0.0
     if op == "collective_permute":
@@ -475,6 +643,10 @@ def latency(op: str, impl: str, p: int, nbytes: int, topo: Topo,
         })
     key = (op, impl)
     if key not in table:
+        imp = REGISTRY.get(op, {}).get(impl)
+        if imp is not None and getattr(imp, "hier", False):
+            # two-axis mock-ups are inadmissible on a one-axis problem
+            return math.inf
         raise KeyError(f"no cost model for {key}")
     imp = REGISTRY[op][impl]
     if imp.requires_pow2 and not _is_pow2(p):
@@ -482,7 +654,55 @@ def latency(op: str, impl: str, p: int, nbytes: int, topo: Topo,
     return float(table[key]())
 
 
-def latency_cell(cell, impl: str, topo: Topo, *,
+def latency_hier(cell, impl: str, t_out: Topo, t_in: Topo) -> float:
+    """Modeled latency of a HIERARCHICAL plain cell: ``cell.p`` outer
+    (inter-tier) ranks × ``cell.p2`` inner (intra-tier) ranks.
+
+    ``default`` is the untuned library's single collective over the joint
+    ``p·p2`` group: a ring through all ranks crosses the outer tier, and
+    ring steps are synchronous, so EVERY step is gated by the slowest
+    link the ring traverses.  The ``MPIX_*`` mock-ups are the composed
+    tier-aware schedules (survey arXiv:1611.06334): the bulk of the bytes
+    move on the fast intra tier, only a ``1/p2`` share crosses the slow
+    tier.  Flat (one-axis) mock-ups are inadmissible here — they would
+    reduce/gather over the outer axis only — and price to ``inf``.
+    """
+    p, q = cell.p, cell.p2
+    B = float(max(cell.nbytes, 1))
+    imp = REGISTRY[cell.op][impl]
+    if imp.requires_pow2 and not (_is_pow2(p) and _is_pow2(q)):
+        return math.inf
+    if p * q <= 1:
+        return 0.0
+    slow = t_out if (t_out.beta, t_out.alpha) >= (t_in.beta, t_in.alpha) \
+        else t_in
+    if impl == "default":
+        if cell.op == "allreduce":
+            return t_ring_allreduce(p * q, B, slow)
+        if cell.op == "allgather":
+            return t_ring_allgather(p * q, B, slow)
+        if cell.op == "reducescatter":
+            return t_ring_reduce_scatter(p * q, B, slow)
+    if cell.op == "allreduce" and impl == "MPIX_rs_ar_ag":
+        # RS-intra -> AR-inter -> AG-intra (B = buffer bytes)
+        return (t_ring_reduce_scatter(q, B, t_in)
+                + t_ring_allreduce(p, B / q, t_out)
+                + t_ring_allgather(q, B / q, t_in))
+    if cell.op == "allgather" and impl == "MPIX_ag_ag":
+        # AG-intra -> AG-inter (B = per-shard contribution; the inter
+        # stage moves the q·B intra-gathered block)
+        return (t_ring_allgather(q, B, t_in)
+                + t_ring_allgather(p, q * B, t_out))
+    if cell.op == "reducescatter" and impl == "MPIX_rs_rs":
+        # RS-inter -> RS-intra (B = total buffer, p·q chunks): the dual
+        # of MPIX_ag_ag — outer tier reduces to a B/p block per outer
+        # rank, the intra tier finishes at full speed
+        return (t_ring_reduce_scatter(p, B, t_out)
+                + t_ring_reduce_scatter(q, B / p, t_in))
+    return math.inf
+
+
+def latency_cell(cell, impl: str, topo: "Topo | MeshTopo", *,
                  chunk_bytes: int = 0) -> float:
     """Modeled latency of one ``OpCell`` — the geometry-aware entry point.
 
@@ -491,53 +711,67 @@ def latency_cell(cell, impl: str, topo: Topo, *,
     recorded GEMM are priced from the TRUE flop count ``2·K·M·N`` instead
     of the canonical ``fused_mm_cols``-width assumption, and the
     matmul-reducescatter ring moves its true output-block bytes.
+
+    ``topo`` may be a flat ``Topo`` (both axes of a two-axis cell price on
+    it — the pre-hierarchy behaviour) or a ``MeshTopo``, resolved through
+    ``cell.tier``: the OUTER fabric prices the ``p`` axis (the stream /
+    inter tier), the INNER fabric the ``p2`` axis.
     """
+    t_out, t_in = _tiers_for(cell, topo)
+    if getattr(cell, "hier", False):
+        return latency_hier(cell, impl, t_out, t_in)
     if not getattr(cell, "fused", False):
-        return latency(cell.op, impl, cell.p, cell.nbytes, topo,
+        return latency(cell.op, impl, cell.p, cell.nbytes, t_out,
                        chunk_bytes=chunk_bytes)
     p = cell.p
     if p <= 1 and getattr(cell, "p2", 0) <= 1:
         return 0.0
     imp = REGISTRY[cell.op][impl]
+    if getattr(imp, "hier", False):
+        return math.inf          # two-axis plain mock-up on a fused cell
     if imp.requires_pow2 and not _is_pow2(p):
         return math.inf
-    mm = 2.0 * cell.mm_k * cell.mm_m * cell.mm_n / topo.matmul_flops
+    mm = 2.0 * cell.mm_k * cell.mm_m * cell.mm_n / t_out.matmul_flops
     B = float(max(cell.nbytes, 1))
     if cell.op == "matmul_reducescatter_2d":
-        # nested 2-D cells: p = outer stream axis, p2 = inner rs axis; the
-        # recorded dims are the PER-RANK GEMM, so ``mm`` above is already
-        # one rank's compute and the output product is mm_m x mm_n.
+        # nested 2-D cells: p = outer stream axis (t_out), p2 = inner rs
+        # axis (t_in); the recorded dims are the PER-RANK GEMM, so ``mm``
+        # above is already one rank's compute and the output product is
+        # mm_m x mm_n.
         q = max(cell.p2, 1)
         it = cell.itemsize
         bt_out = float(cell.mm_m * cell.mm_n * it)
         if cell.mm_role == "2dT":
-            # outer = travelling accumulator over the rs axis (q steps,
-            # [mm_m/q, mm_n] blocks); inner = cotangent column-slice
-            # stream over the gather axis (p steps)
+            # outer loop = travelling accumulator over the rs axis (q
+            # steps, [mm_m/q, mm_n] blocks, t_in fabric); inner =
+            # cotangent column-slice stream over the gather axis (p
+            # steps, t_out fabric)
             acc_blk = bt_out / q
             slice_blk = (float(cell.mm_k) / p) * (float(cell.mm_m) / q) * it
             if impl == "default":
                 return (latency("allgather", "default", p, cell.nbytes,
-                                topo)
+                                t_out)
                         + mm
-                        + t_ring_reduce_scatter(q, bt_out, topo))
+                        + t_ring_reduce_scatter(q, bt_out, t_in))
             return t_overlapped_ring2d(
                 q, p,
-                topo.alpha + acc_blk * (topo.beta + topo.gamma),
-                topo.alpha + slice_blk * topo.beta,
-                mm, topo)
+                t_in.alpha + acc_blk * (t_in.beta + t_in.gamma),
+                t_out.alpha + slice_blk * t_out.beta,
+                mm, t_in, t_out)
         # forward "2d": outer = weight column-block stream over the gather
-        # axis (p steps, B bytes each); inner = matmul-reducescatter ring
-        # over the rs axis (q steps, [mm_m/q, mm_n/p] accumulator blocks)
+        # axis (p steps, B bytes each, t_out fabric); inner =
+        # matmul-reducescatter ring over the rs axis (q steps,
+        # [mm_m/q, mm_n/p] accumulator blocks, t_in fabric)
         inner_blk = (float(cell.mm_m) / q) * (float(cell.mm_n) / p) * it
         if impl == "default":
-            return (latency("allgather", "default", p, cell.nbytes, topo)
+            return (latency("allgather", "default", p, cell.nbytes, t_out)
                     + mm
-                    + t_ring_reduce_scatter(q, bt_out, topo))
+                    + t_ring_reduce_scatter(q, bt_out, t_in))
         return t_overlapped_ring2d(
-            p, q, topo.alpha + B * topo.beta,
-            topo.alpha + inner_blk * (topo.beta + topo.gamma),
-            mm, topo)
+            p, q, t_out.alpha + B * t_out.beta,
+            t_in.alpha + inner_blk * (t_in.beta + t_in.gamma),
+            mm, t_out, t_in)
+    topo = t_out
     if cell.op in ("allgather_matmul", "matmul_accumulate"):
         # streamed operand all-gathered over the axis; steps move B bytes
         if impl == "default":
@@ -590,7 +824,8 @@ def sweep_cell(cell, topo: Topo, *, chunk_bytes: int = 0) -> dict[str, float]:
     impls = REGISTRY.get(cell.op)
     if impls is None:
         return {"default": latency(cell.op, "default", cell.p, cell.nbytes,
-                                   topo, chunk_bytes=chunk_bytes)}
+                                   topo, chunk_bytes=chunk_bytes,
+                                   tier=getattr(cell, "tier", ""))}
     return {name: latency_cell(cell, name, topo, chunk_bytes=chunk_bytes)
             for name in impls}
 

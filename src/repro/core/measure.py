@@ -106,8 +106,9 @@ def problem_shapes(cell: OpCell) -> dict[str, tuple[int, ...]]:
     itemsize = cell.itemsize
     n_rows = max(1, cell.nbytes // itemsize)
     if cell.op in ("alltoall", "reducescatter", "scatter"):
-        # v-style ops: nbytes is the per-chunk payload, input is p chunks
-        n_rows *= p
+        # v-style ops: nbytes is the per-chunk payload, input is one chunk
+        # per rank of the (possibly hierarchical) group
+        n_rows *= cell.world()
     return {"x": (n_rows, 1)}
 
 
@@ -115,6 +116,8 @@ def problem_shapes(cell: OpCell) -> dict[str, tuple[int, ...]]:
 def _compiled(cell: OpCell, impl: str):
     if cell.op == "matmul_reducescatter_2d":
         return _compiled_2d(cell, impl)
+    if cell.hier:
+        return _compiled_hier(cell, impl)
     mesh = _mesh()
     p = mesh.devices.size
     if cell.p != p:
@@ -145,6 +148,28 @@ def _compiled(cell: OpCell, impl: str):
     spec = NamedSharding(mesh, P(AXIS))
     rows, width = shapes["x"]
     x = jax.device_put(jnp.ones((p * rows, width), dt), spec)
+    return jax.jit(sm).lower(x).compile(), x
+
+
+def _compiled_hier(cell: OpCell, impl: str):
+    """Compile a HIERARCHICAL plain cell's replay: the joint ``p x p2``
+    group as a real two-axis host mesh, payload sharded over both axes in
+    outer-major order (exactly the dispatch-time layout), the impl called
+    with ``inner_axis=`` — so the measured backend replays the same
+    composed schedule the api would run."""
+    mesh = _mesh2(cell.p, cell.p2)
+    fn = C.REGISTRY[cell.op][impl].fn
+    shapes = problem_shapes(cell)
+    dt = jnp.dtype(cell.dtype if cell.dtype else "float32")
+
+    def body(x):
+        return fn(x, AXIS, inner_axis=AXIS2)
+
+    sm = shard_map(body, mesh=mesh, in_specs=P((AXIS, AXIS2)),
+                   out_specs=P((AXIS, AXIS2)), check_vma=False)
+    spec = NamedSharding(mesh, P((AXIS, AXIS2)))
+    rows, width = shapes["x"]
+    x = jax.device_put(jnp.ones((cell.world() * rows, width), dt), spec)
     return jax.jit(sm).lower(x).compile(), x
 
 
@@ -206,6 +231,27 @@ def sample_latency(cell: OpCell, impl: str, count: int,
         t0 = time.perf_counter()
         jax.block_until_ready(fn(x))
         out.append(time.perf_counter() - t0)
+    return out
+
+
+def sweep_axis(op: str, sizes, *, impl: str = "default",
+               count: int = 5) -> list[tuple[int, float]]:
+    """Measured ``(payload_bytes, median_seconds)`` points of one op's
+    default ring over the host axis — the input ``costmodel.fit_topo`` /
+    ``costmodel.MeshTopo.fit`` turn into per-tier alpha/beta/gamma.
+
+    The per-tier Topo parameters a hierarchical cost model prices with
+    must come from sweeps like this, not assumed constants: fit the tier
+    you can run (``fit_topo(axis_size(), sweep_axis("allgather", ...),
+    sweep_axis("allreduce", ...))``) and derive unreachable tiers via the
+    published hardware RATIOS (``Topo.scaled``), keeping the fitted
+    absolutes."""
+    import statistics
+    out = []
+    for nbytes in sizes:
+        cell = host_cell(op, int(nbytes))
+        out.append((int(nbytes),
+                    statistics.median(sample_latency(cell, impl, count))))
     return out
 
 

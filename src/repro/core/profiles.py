@@ -75,6 +75,12 @@ class Profile:
     ranges: list[Range] = dataclasses.field(default_factory=list)
     meta: dict = dataclasses.field(default_factory=dict)
     geom: Geom | None = None    # fused-op matmul geometry partition
+    # interconnect-tier token (``OpCell.profile_tier()``): "" = flat/
+    # untiered, "<name>" = flat on a known tier, "<out>/<in>[@q<p2>]" =
+    # hierarchical.  Part of the store key — a profile tuned on one tier
+    # must NEVER answer a lookup from another (a DCN-crossing cell and an
+    # all-ICI cell of the same (op, p, nbytes) have different winners).
+    tier: str = ""
 
     def __post_init__(self):
         self.ranges = sorted(self.ranges, key=lambda r: r.lo)
@@ -112,6 +118,10 @@ class Profile:
             f"{self.axis_size} # nb. of. processes",
             f"{len(impls)} # nb. of mock-up impl.",
         ]
+        if self.tier:
+            # a comment line to v1 parsers; the tier key to v2 (flat
+            # untiered profiles stay byte-identical)
+            lines.insert(1, f"#@tier {self.tier}")
         if self.geom is not None:
             # a comment line to v1 parsers; geometry to v2.  The trailing
             # p2 token (inner axis of a 2-D cell) is only written when
@@ -130,7 +140,10 @@ class Profile:
     @classmethod
     def from_text(cls, text: str) -> "Profile":
         geom = None
+        tier = ""
         for ln in text.splitlines():
+            if ln.startswith("#@tier"):
+                tier = ln.split(None, 1)[1].strip() if " " in ln else ""
             if ln.startswith("#@geom"):
                 parts = ln.split()
                 _, dt, k, m, n, role = parts[:6]
@@ -151,7 +164,8 @@ class Profile:
         for ln in rows[4 + n_impl:4 + n_impl + n_ranges]:
             lo, hi, alg = ln.split()
             ranges.append(Range(int(lo), int(hi), table[int(alg)]))
-        return cls(op=op, axis_size=axis_size, ranges=ranges, geom=geom)
+        return cls(op=op, axis_size=axis_size, ranges=ranges, geom=geom,
+                   tier=tier)
 
     # -- JSON ----------------------------------------------------------------
     def to_json(self) -> str:
@@ -163,6 +177,8 @@ class Profile:
         }
         if self.geom is not None:
             d["geom"] = dataclasses.asdict(self.geom)
+        if self.tier:
+            d["tier"] = self.tier
         return json.dumps(d, indent=1)
 
     @classmethod
@@ -171,7 +187,8 @@ class Profile:
         geom = Geom(**d["geom"]) if d.get("geom") else None
         return cls(op=d["op"], axis_size=d["axis_size"],
                    ranges=[Range(**r) for r in d["ranges"]],
-                   meta=d.get("meta", {}), geom=geom)
+                   meta=d.get("meta", {}), geom=geom,
+                   tier=d.get("tier", ""))
 
 
 def _geom_tag(geom: Geom) -> str:
@@ -183,47 +200,63 @@ def _geom_tag(geom: Geom) -> str:
     return tag
 
 
+def _tier_tag(tier: str) -> str:
+    """Filesystem-safe tier suffix (the token may carry '/' and '@')."""
+    return tier.replace("/", "--").replace("@", "-")
+
+
 class ProfileStore:
     """All loaded profiles; the PGMPITuneD in-memory state."""
 
     def __init__(self, profiles: list[Profile] | None = None):
-        self._by_key: dict[tuple[str, int, Geom | None], Profile] = {}
+        self._by_key: dict[
+            tuple[str, int, Geom | None, str], Profile] = {}
         for p in profiles or []:
             self.add(p)
 
     def add(self, p: Profile) -> None:
-        self._by_key[(p.op, p.axis_size, p.geom)] = p
+        self._by_key[(p.op, p.axis_size, p.geom, p.tier)] = p
 
-    def get(self, op: str, axis_size: int,
-            geom: Geom | None = None) -> Profile | None:
-        return self._by_key.get((op, axis_size, geom))
+    def get(self, op: str, axis_size: int, geom: Geom | None = None,
+            tier: str = "") -> Profile | None:
+        return self._by_key.get((op, axis_size, geom, tier))
 
-    def lookup(self, op: str, axis_size: int, nbytes: int) -> str | None:
+    def lookup(self, op: str, axis_size: int, nbytes: int,
+               tier: str = "") -> str | None:
         """Geometry-less lookup (plain collectives, legacy callers)."""
-        p = self.get(op, axis_size)
+        p = self.get(op, axis_size, tier=tier)
         return p.lookup(nbytes) if p else None
 
     def lookup_cell(self, cell: OpCell) -> str | None:
         """Resolve a dispatch cell: exact geometry profile first; on an
         exact MISS — no profile for this geometry, OR the exact profile's
         tuned ranges don't cover ``cell.nbytes`` — the nearest OTHER tuned
-        geometry (same role + dtype + p2, minimal log-space shape
-        distance); then the geometry-less (op, axis_size) profile.
+        geometry (same role + dtype + p2 + TIER, minimal log-space shape
+        distance); then the geometry-less (op, axis_size, tier) profile.
 
         The middle step must run on BOTH kinds of exact miss: an exact
         profile whose ranges miss the size used to fall straight through
         to the geometry-less lookup, silently shadowing a tuned
-        near-geometry profile that did cover it."""
+        near-geometry profile that did cover it.
+
+        Every step is pinned to ``cell.profile_tier()`` — nearest-geometry
+        fallback must never answer across interconnect tiers (a flat-ICI
+        winner is wrong on a DCN-crossing cell of identical shape), and
+        hierarchical plain cells fold their inner size into the token so
+        an 8-way flat profile can't shadow a 2x4 hierarchical one."""
+        t = cell.profile_tier()
         g = cell.geom()
         if g is not None:
-            prof = self._by_key.get((cell.op, cell.p, g))
+            prof = self._by_key.get((cell.op, cell.p, g, t))
             if prof is not None:
                 hit = prof.lookup(cell.nbytes)
                 if hit is not None:
                     return hit
-            near = [(geom, p) for (op, ax, geom), p in self._by_key.items()
+            near = [(geom, p)
+                    for (op, ax, geom, tr), p in self._by_key.items()
                     if op == cell.op and ax == cell.p and geom is not None
                     and geom != g
+                    and tr == t
                     and geom.mm_role == g.mm_role
                     and geom.dtype == g.dtype
                     and geom.p2 == g.p2]
@@ -233,7 +266,7 @@ class ProfileStore:
                 hit = nprof.lookup_nearest(cell.nbytes)
                 if hit is not None:
                     return hit
-        return self.lookup(cell.op, cell.p, cell.nbytes)
+        return self.lookup(cell.op, cell.p, cell.nbytes, t)
 
     def __len__(self) -> int:
         return len(self._by_key)
@@ -251,12 +284,15 @@ class ProfileStore:
         epoch before its profiles are complete."""
         d = pathlib.Path(directory)
         d.mkdir(parents=True, exist_ok=True)
-        for (op, p_size, geom), prof in sorted(
+        for (op, p_size, geom, tier), prof in sorted(
                 self._by_key.items(),
-                key=lambda kv: (kv[0][0], kv[0][1], str(kv[0][2]))):
+                key=lambda kv: (kv[0][0], kv[0][1], str(kv[0][2]),
+                                kv[0][3])):
             stem = f"{op}_p{p_size}"
             if geom is not None:
                 stem += "_" + _geom_tag(geom)
+            if tier:
+                stem += "_t" + _tier_tag(tier)
             if fmt == "text":
                 (d / f"{stem}.pgtune").write_text(prof.to_text())
             else:
@@ -345,7 +381,8 @@ def profiles_digest(directory: str | pathlib.Path) -> str:
 def write_manifest(directory: str | pathlib.Path, epoch: int, *,
                    source_digest: str | None = None,
                    base: "ProfileStore | None" = None,
-                   phases: "dict[str, ProfileStore] | None" = None) \
+                   phases: "dict[str, ProfileStore] | None" = None,
+                   demotions: "dict[tuple[str, str], str] | None" = None) \
         -> pathlib.Path:
     """Stamp a profile directory as fleet generation ``epoch``.
 
@@ -358,7 +395,18 @@ def write_manifest(directory: str | pathlib.Path, epoch: int, *,
     ``profiles_digest`` is computed HERE, over the already-written
     profile files, so an adopting reader can verify the manifest and the
     profiles belong to the same generation.
+
+    The publishing process's DEMOTION ledger rides along: a tuning run
+    that demoted a wire impl (tolerance breach in selfcheck) must not
+    publish profiles that a fresh serving process — whose own ledger is
+    empty — would happily route back onto the demoted impl.  Pass
+    ``demotions=`` to override; the default snapshots
+    ``collectives.demotions()``.  ``StoreRef.poll`` re-applies the list
+    on adoption.
     """
+    if demotions is None:
+        from repro.core import collectives as _C
+        demotions = _C.demotions()
     d = pathlib.Path(directory)
     d.mkdir(parents=True, exist_ok=True)
     man = {
@@ -369,12 +417,39 @@ def write_manifest(directory: str | pathlib.Path, epoch: int, *,
         "base_profiles": len(base) if base is not None else 0,
         "phases": {ph: len(st) for ph, st in sorted((phases or {}).items())},
         "geometry_census": _census([base, *(phases or {}).values()]),
+        "demotions": [[op, name, reason] for (op, name), reason
+                      in sorted(demotions.items())],
     }
     path = d / MANIFEST_NAME
     tmp = d / (MANIFEST_NAME + ".tmp")
     tmp.write_text(json.dumps(man, indent=1) + "\n")
     os.replace(tmp, path)
     return path
+
+
+def _apply_demotions(man: dict) -> int:
+    """Re-apply a manifest's demotion ledger to this process's
+    ``collectives`` registry (the adoption half of the persistence
+    round-trip).  Unknown impls — e.g. a manifest published by a newer
+    build — are skipped with a warning, never fatal.  Returns the number
+    of newly applied demotions."""
+    rows = man.get("demotions") or []
+    if not rows:
+        return 0
+    from repro.core import collectives as _C
+    applied = 0
+    for row in rows:
+        try:
+            op, name, reason = row
+            if not _C.is_demoted(op, name):
+                _C.demote(op, name, reason=f"manifest: {reason}")
+                applied += 1
+        except Exception as e:
+            import warnings
+            warnings.warn(
+                f"manifest demotion entry {row!r} not applied "
+                f"({type(e).__name__}: {e})")
+    return applied
 
 
 def read_manifest(directory: str | pathlib.Path) -> dict | None:
@@ -578,7 +653,12 @@ class StoreRef:
                           f"({type(e).__name__}: {e}); keeping epoch "
                           f"{self.epoch}")
             return False
-        return self.swap(base, phases, epoch)
+        if not self.swap(base, phases, epoch):
+            return False
+        # the adopted generation's demotion ledger applies to THIS
+        # process too — its profiles were tuned with those impls excluded
+        _apply_demotions(man)
+        return True
 
 
 # ---------------------------------------------------------------------------

@@ -25,14 +25,30 @@ import os
 import sys
 
 
-def wire_hops(op: str, p: int) -> int:
-    """(Re)quantization count of a wire impl's travelling data: gather-style
-    rings quantize once at the origin; travelling accumulators requantize
-    every hop; the wire allreduce composes RS hops plus the AG quantize."""
-    if op in ("reducescatter", "matmul_reducescatter"):
+def wire_hops(op: str, p: int, p2: int = 0) -> int:
+    """Number of independently-quantized error terms that can ADD into one
+    output element of a wire impl — the multiplier on the single-roundtrip
+    ``wire_tol`` base bound.
+
+    Gather-style rings quantize each block once at its origin and no two
+    blocks' errors meet (hops=1).  Reduction rings accumulate: the
+    travelling-accumulator reduce-scatter requantizes the partial sum on
+    every one of its p-1 hops, and the wire allreduce adds the AG
+    re-quantize on top.  ``matmul_accumulate`` streams WEIGHT blocks that
+    are each quantized only once — but the stationary-x contraction sums
+    all p-1 wire-crossed blocks' independent errors into every output
+    element, so the additive count is p-1, not 1 (counting requantize
+    events of the travelling data, the old rule, under-bounds it and
+    spuriously demotes benign payloads as p grows).  A 2-D cell's error
+    budget is set by its inner reduction ring of size ``p2`` (the outer
+    stream is gather-style); pass ``p2`` for those."""
+    if op in ("reducescatter", "matmul_reducescatter", "matmul_accumulate"):
         return max(p - 1, 1)
     if op == "allreduce":
         return max(p, 1)
+    if op == "matmul_reducescatter_2d":
+        q = p2 if p2 else p
+        return max(q - 1, 1)
     return 1
 
 
@@ -44,14 +60,18 @@ def rel_err(got, want) -> float:
     return float(np.max(np.abs(g - w)) / max(np.max(np.abs(w)), 1e-30))
 
 
-def run_gate(op: str, name: str, x, *, w=None, demote: bool = True):
+def run_gate(op: str, name: str, x, *, w=None, demote: bool = True,
+             p2: int = 0):
     """Run one impl of ``op`` on a CONCRETE stacked payload ``x`` ([p, ...],
     one leading row block per rank) under ``vmap`` and apply the wire
     tolerance gate against the dense numpy oracle.
 
     Returns ``(ok, rel, tol)``.  For a quantized-wire impl that breaks its
     tolerance the impl is demoted (unless ``demote=False``); non-wire impls
-    are gated at the wire-agnostic 1e-5 bound and never demoted.
+    are gated at the wire-agnostic 1e-5 bound and never demoted.  For a
+    hierarchical (``Impl.hier``) mock-up pass ``p2`` (inner axis size,
+    dividing ``p``): the p ranks run as a nested (p//p2, p2) vmap mesh in
+    outer-major order.
     """
     import jax
     import jax.numpy as jnp
@@ -63,7 +83,25 @@ def run_gate(op: str, name: str, x, *, w=None, demote: bool = True):
     p = x.shape[0]
     xs = jnp.asarray(x)
     xn = np.asarray(x, np.float64)
-    if op in ("allgather", "allreduce", "reducescatter"):
+    if getattr(impl, "hier", False):
+        if op not in ("allgather", "allreduce", "reducescatter"):
+            raise KeyError(f"run_gate does not model hier {op!r}")
+        if p2 <= 1 or p % p2:
+            raise ValueError(
+                f"hier impl {name!r} needs p2 in (1, p) dividing p={p}")
+        nested = xs.reshape((p // p2, p2) + x.shape[1:])
+        got = jax.vmap(jax.vmap(
+            lambda s: impl.fn(s, "o", inner_axis="i"), axis_name="i"),
+            axis_name="o")(nested)
+        got = np.asarray(got).reshape((p,) + got.shape[2:])
+        if op == "allgather":
+            full = xn.reshape((-1,) + xn.shape[2:])
+            want = np.broadcast_to(full, (p,) + full.shape)
+        elif op == "allreduce":
+            want = np.broadcast_to(xn.sum(0), (p,) + xn.shape[1:])
+        else:
+            want = xn.sum(0).reshape((p, -1) + xn.shape[2:])
+    elif op in ("allgather", "allreduce", "reducescatter"):
         got = jax.vmap(lambda s: impl.fn(s, "x"), axis_name="x")(xs)
         if op == "allgather":
             full = xn.reshape((-1,) + xn.shape[2:])
@@ -161,19 +199,50 @@ def main(argv=None) -> int:
             print(f"{name:44s} {tag}")
 
     for nm in C.impl_names("allgather"):
+        if C.REGISTRY["allgather"][nm].hier:
+            continue                     # needs inner_axis — hier section
         y = run(C.REGISTRY["allgather"][nm].fn, xf)
         check(f"allgather/{nm}", y, np.broadcast_to(full, (P_,) + full.shape),
               rtol=rtol_for("allgather", nm), key=("allgather", nm))
     want = x.sum(0)
     for nm in C.impl_names("allreduce"):
+        if C.REGISTRY["allreduce"][nm].hier:
+            continue
         y = run(C.REGISTRY["allreduce"][nm].fn, xf, chunk=2)
         check(f"allreduce/{nm}", y, np.broadcast_to(want, (P_,) + want.shape),
               rtol=rtol_for("allreduce", nm), key=("allreduce", nm))
     wantrs = xb.sum(0).reshape(P_, n, w)
     for nm in C.impl_names("reducescatter"):
+        if C.REGISTRY["reducescatter"][nm].hier:
+            continue
         check(f"reducescatter/{nm}", run(C.REGISTRY["reducescatter"][nm].fn, xbf),
               wantrs, rtol=rtol_for("reducescatter", nm),
               key=("reducescatter", nm))
+
+    # hierarchical MPIX mock-ups (and the defaults' inner_axis path): a
+    # REAL two-axis ("o" outer/slow, "i" inner/fast) mesh; the joint-group
+    # result in outer-major block order must match the flat oracle exactly
+    d_h = 2
+    mesh_h = Mesh(np.array(jax.devices()[:P_]).reshape(d_h, P_ // d_h),
+                  ("o", "i"))
+
+    def run_h(fn, xin):
+        sm = shard_map(lambda a: fn(a, "o", inner_axis="i"), mesh=mesh_h,
+                       in_specs=P(("o", "i")), out_specs=P(("o", "i")),
+                       check_vma=False)
+        return np.asarray(jax.jit(sm)(xin)).reshape(
+            (P_, -1) + xin.shape[1:])
+
+    for op, xin, wanth in (
+            ("allgather", xf, np.broadcast_to(full, (P_,) + full.shape)),
+            ("allreduce", xf, np.broadcast_to(want, (P_,) + want.shape)),
+            ("reducescatter", xbf, wantrs)):
+        for nm in C.impl_names(op):
+            impl = C.REGISTRY[op][nm]
+            if not (impl.hier or nm == "default"):
+                continue
+            check(f"{op}@{d_h}x{P_ // d_h}/{nm}", run_h(impl.fn, xin),
+                  wanth)
     wanta2a = xb.reshape(P_, P_, n, w).transpose(1, 0, 2, 3).reshape(
         P_, P_ * n, w)
     for nm in C.impl_names("alltoall"):

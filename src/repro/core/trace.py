@@ -112,7 +112,9 @@ def _cell_dict(cell: OpCell) -> dict:
         d["mm"] = [cell.mm_k, cell.mm_m, cell.mm_n]
         d["role"] = cell.mm_role
     if cell.p2:
-        d["p2"] = cell.p2      # inner axis of a 2-D cell
+        d["p2"] = cell.p2      # inner axis of a 2-D / hierarchical cell
+    if cell.tier:
+        d["tier"] = cell.tier  # interconnect-tier token ("out/in" or flat)
     return d
 
 
@@ -121,7 +123,8 @@ def _cell_from_dict(d: dict) -> OpCell:
     return OpCell(op=d["op"], p=int(d["p"]), nbytes=int(d["nbytes"]),
                   dtype=d.get("dtype", "float32"),
                   mm_k=int(mm[0]), mm_m=int(mm[1]), mm_n=int(mm[2]),
-                  mm_role=d.get("role", ""), p2=int(d.get("p2", 0)))
+                  mm_role=d.get("role", ""), p2=int(d.get("p2", 0)),
+                  tier=d.get("tier", ""))
 
 
 class Trace:

@@ -90,12 +90,20 @@ class CostModelBackend:
     Backends price ``OpCell``s: a cell with recorded matmul geometry is
     priced from its true flops (``costmodel.latency_cell``); geometry-less
     cells use the canonical table.
+
+    ``topo`` may be a flat ``costmodel.Topo`` or a per-axis
+    ``costmodel.MeshTopo``: with a mesh topo, each cell's ``tier`` token
+    resolves to its (outer, inner) tier pair, so a DCN-crossing cell and
+    an all-ICI cell of the same shape price differently — and the
+    hierarchical ``MPIX_*`` mock-ups become finitely priced on
+    hierarchical cells.
     """
 
     name = "costmodel"
     supported_axis_size: int | None = None      # any p
 
-    def __init__(self, topo: costmodel.Topo, *, chunk_bytes: int = 0):
+    def __init__(self, topo: "costmodel.Topo | costmodel.MeshTopo", *,
+                 chunk_bytes: int = 0):
         self.topo = topo
         self.chunk_bytes = chunk_bytes
 
@@ -274,7 +282,14 @@ def _measure_cell(cell: OpCell, backend,
     lats: dict[str, float] = {}
     p, nbytes = cell.p, cell.nbytes
     for impl_name, impl in REGISTRY[cell.op].items():
-        if impl.requires_pow2 and (p & (p - 1)) != 0:
+        if impl.requires_pow2 and (
+                (p & (p - 1)) != 0
+                or (cell.p2 and (cell.p2 & (cell.p2 - 1)) != 0)):
+            continue
+        # hier impls only fit hierarchical cells and vice versa; the cost
+        # model prices the mismatch inf, but the measured backend would
+        # CRASH replaying a flat mock-up on a two-axis problem — gate here
+        if getattr(impl, "hier", False) != cell.hier and impl_name != "default":
             continue
         if impl_name != "default" and is_demoted(cell.op, impl_name):
             continue
@@ -423,15 +438,16 @@ def tune_trace(trace, backend=None, *, min_win: float = 0.10,
             cands = {k: v for k, v in lats.items() if k != "default"}
             best = min(cands, key=cands.get) if cands else None
             if best is not None and cands[best] < t_def * (1.0 - min_win):
-                picks.setdefault((op, p, cell.geom()), []).append(
+                picks.setdefault(
+                    (op, p, cell.geom(), cell.profile_tier()), []).append(
                     (nbytes, best))
                 t_t += weight * cands[best]
             else:
                 t_t += weight * t_def
 
-        for (op, p, geom), pk in sorted(
+        for (op, p, geom, tier), pk in sorted(
                 picks.items(), key=lambda kv: (kv[0][0], kv[0][1],
-                                               str(kv[0][2]))):
+                                               str(kv[0][2]), kv[0][3])):
             ranges = [Range(nb, nb, impl) for nb, impl in sorted(pk)]
             if coalesce:
                 ranges = _coalesce(ranges)
@@ -439,7 +455,7 @@ def tune_trace(trace, backend=None, *, min_win: float = 0.10,
                     "phase": ph, "source": "trace"}
             phase_profiles.setdefault(ph, ProfileStore()).add(
                 Profile(op=op, axis_size=p, ranges=ranges, meta=meta,
-                        geom=geom))
+                        geom=geom, tier=tier))
         est_default[ph] = t_d
         est_tuned[ph] = t_t
 
@@ -560,7 +576,10 @@ def estimate_trace_cost(trace, backend=None, *,
             impl = REGISTRY[cell.op][name]
             p, nbytes = cell.p, cell.nbytes
             if name != "default" and (
-                    (impl.requires_pow2 and (p & (p - 1)) != 0)
+                    (impl.requires_pow2 and (
+                        (p & (p - 1)) != 0
+                        or (cell.p2 and (cell.p2 & (cell.p2 - 1)) != 0)))
+                    or getattr(impl, "hier", False) != cell.hier
                     or is_demoted(cell.op, name)
                     or (scratch_budget_bytes is not None
                         and impl.extra_bytes(nbytes, p)

@@ -1,0 +1,135 @@
+"""Composed hierarchical ring schedules for two-tier meshes.
+
+A (pod, data, model) mesh crosses interconnect tiers with ~order-of-
+magnitude link gaps (ICI vs DCN).  A single flat collective over the
+joint group runs every synchronous ring step at the SLOW tier's rate;
+the hierarchical decompositions below keep the bulk of the bytes on the
+fast intra tier and move only a ``1/q`` share across the slow inter tier
+(survey arXiv:1611.06334; the composition-of-guidelines idea of PGMPI
+arXiv:1606.00215):
+
+* ``hier_allreduce``      RS-intra → AR-inter → AG-intra
+* ``hier_allgather``      AG-intra → AG-inter
+* ``hier_reduce_scatter`` RS-inter → RS-intra   (the all-gather dual)
+
+Everything is built from the two exact (full-precision wire) ring
+primitives ``ring_reduce_scatter`` / ``ring_allgather`` — per-axis
+neighbour ``ppermute`` loops in the style of the pallas-guide ring-
+collective pattern, expressed at the jnp tier so the same code runs
+under shard_map, vmap semantic tests, and the subprocess SPMD harness.
+Axis-pair convention everywhere: ``inter_axis`` is the OUTER (slow)
+axis, ``intra_axis`` the INNER (fast) one; gathered/scattered block
+order is outer-major, matching a flat collective over
+``(inter, intra)``.
+
+Mock-ups call these directly (never the dispatcher — no recursive
+re-tuning); ``core.collectives`` registers them as the ``MPIX_*``
+EXT-guideline impls.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core._axis import axis_index, axis_size, pshift, ring_perm
+
+
+def _n_rows(x) -> int:
+    return int(x.shape[0])
+
+
+def _pad_rows(x, n_pad: int):
+    """Zero-pad dim 0 up to ``n_pad`` rows (reduction identity)."""
+    n = _n_rows(x)
+    if n_pad == n:
+        return x
+    pad = [(0, n_pad - n)] + [(0, 0)] * (x.ndim - 1)
+    return jnp.pad(x, pad)
+
+
+def ring_reduce_scatter(x, axis: str):
+    """Exact (p-1)-hop travelling-accumulator ring reduce-scatter.
+
+    Per-shard ``[p·n, ...]`` → ``[n, ...]``: rank ``i`` ends with the sum
+    of block ``i`` over the axis (``lax.psum_scatter`` tiled semantics).
+    Rows must divide ``p`` — callers pad (the hierarchical wrappers do).
+    """
+    p = axis_size(axis)
+    if p == 1:
+        return x
+    n = _n_rows(x) // p
+    idx = axis_index(axis)
+    zeros = (0,) * (x.ndim - 1)
+    acc = None
+    for s in range(p):
+        blk_id = (idx + (p - 1 - s)) % p
+        blk = lax.dynamic_slice(x, (blk_id * n,) + zeros, (n,) + x.shape[1:])
+        acc = blk if acc is None else acc + blk
+        if s < p - 1:
+            acc = pshift(acc, axis, ring_perm(p, 1))
+    return acc
+
+
+def ring_allgather(x, axis: str):
+    """Exact (p-1)-hop neighbour-ring all-gather: ``[n, ...]`` →
+    ``[p·n, ...]`` in rank order."""
+    p = axis_size(axis)
+    if p == 1:
+        return x
+    n = _n_rows(x)
+    idx = axis_index(axis)
+    zeros = (0,) * (x.ndim - 1)
+    out = jnp.zeros((p * n,) + x.shape[1:], x.dtype)
+    out = lax.dynamic_update_slice(out, x, (idx * n,) + zeros)
+    cur = x
+    for s in range(1, p):
+        cur = pshift(cur, axis, ring_perm(p, 1))
+        src = (idx - s) % p
+        out = lax.dynamic_update_slice(out, cur, (src * n,) + zeros)
+    return out
+
+
+def ring_allreduce(x, axis: str):
+    """Exact ring allreduce = padded ring RS + ring AG (Rabenseifner /
+    GL6 shape) — the inter-tier stage of ``hier_allreduce``."""
+    p = axis_size(axis)
+    if p == 1:
+        return x
+    n = _n_rows(x)
+    k = -(-n // p)
+    red = ring_reduce_scatter(_pad_rows(x, k * p), axis)
+    out = ring_allgather(red, axis)
+    return out[:n] if out.shape[0] != n else out
+
+
+def hier_allreduce(x, inter_axis: str, intra_axis: str):
+    """RS-intra → AR-inter → AG-intra.
+
+    The full buffer only ever moves on the intra tier; the inter tier
+    reduces ``1/q`` of it per rank.  Result = ``psum`` over BOTH axes.
+    """
+    q = axis_size(intra_axis)
+    n = _n_rows(x)
+    k = -(-n // q)
+    red = ring_reduce_scatter(_pad_rows(x, k * q), intra_axis)
+    mid = ring_allreduce(red, inter_axis)
+    out = ring_allgather(mid, intra_axis)
+    return out[:n] if out.shape[0] != n else out
+
+
+def hier_allgather(x, inter_axis: str, intra_axis: str):
+    """AG-intra → AG-inter: gather the fast tier first, then stream the
+    already-assembled ``q·n`` node block across the slow tier once.
+    Block order is outer-major — identical to a flat all-gather over
+    ``(inter, intra)``."""
+    return ring_allgather(ring_allgather(x, intra_axis), inter_axis)
+
+
+def hier_reduce_scatter(x, inter_axis: str, intra_axis: str):
+    """RS-inter → RS-intra (the ``hier_allgather`` dual): the slow tier
+    reduces ``q·n``-row node blocks down to one per outer rank, the fast
+    tier finishes at full speed.  Rank ``(i, j)`` ends with the joint
+    sum of block ``i·q + j`` — ``psum_scatter`` over ``(inter, intra)``.
+    Rows must divide ``p·q`` (the dispatcher op's contract)."""
+    return ring_reduce_scatter(ring_reduce_scatter(x, inter_axis),
+                               intra_axis)

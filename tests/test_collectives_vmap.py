@@ -23,6 +23,23 @@ def run(fn, x, p, **kw):
         jax.vmap(lambda a: fn(a, "x", **kw), axis_name="x")(jnp.asarray(x)))
 
 
+def run_hier(fn, x, p, **kw):
+    """Hierarchical mock-ups need a nested mesh: split the p ranks into
+    (p/2 outer, 2 inner) — outer-major, so the joint group order matches
+    the flat stack and the same oracle applies."""
+    nested = jnp.asarray(x).reshape((p // 2, 2) + x.shape[1:])
+    out = jax.vmap(jax.vmap(lambda a: fn(a, "x", inner_axis="y", **kw),
+                            axis_name="y"), axis_name="x")(nested)
+    return np.asarray(out).reshape((p,) + out.shape[2:])
+
+
+def run_any(op, name, x, p, **kw):
+    fn = C.REGISTRY[op][name].fn
+    if C.REGISTRY[op][name].hier:
+        return run_hier(fn, x, p, **kw)
+    return run(fn, x, p, **kw)
+
+
 def data(rng, p, rows, width=3, dtype=np.float32):
     if np.issubdtype(dtype, np.integer):
         return rng.integers(-50, 50, size=(p, rows, width)).astype(dtype)
@@ -49,7 +66,7 @@ def test_allgather(rng, p, dtype, name):
         pytest.skip("quantized wire targets float payloads")
     x = data(rng, p, 5, dtype=dtype)
     want = x.reshape(p * 5, 3)
-    got = run(C.REGISTRY["allgather"][name].fn, x, p)
+    got = run_any("allgather", name, x, p)
     assert_close("allgather", name, p, got,
                  np.broadcast_to(want, (p,) + want.shape), 1e-5)
 
@@ -59,7 +76,7 @@ def test_allgather(rng, p, dtype, name):
 @pytest.mark.parametrize("chunk", (1, 3))
 def test_allreduce(rng, p, name, chunk):
     x = data(rng, p, 7)
-    got = run(C.REGISTRY["allreduce"][name].fn, x, p, chunk=chunk)
+    got = run_any("allreduce", name, x, p, chunk=chunk)
     assert_close("allreduce", name, p, got,
                  np.broadcast_to(x.sum(0), (p, 7, 3)), 1e-4)
 
@@ -69,7 +86,7 @@ def test_allreduce(rng, p, name, chunk):
 def test_reducescatter(rng, p, name):
     x = data(rng, p, p * 4)
     want = x.sum(0).reshape(p, 4, 3)
-    got = run(C.REGISTRY["reducescatter"][name].fn, x, p)
+    got = run_any("reducescatter", name, x, p)
     assert_close("reducescatter", name, p, got, want, 1e-4)
 
 

@@ -147,6 +147,68 @@ def test_tuner_survives_unmeasurable_default():
     assert prof.lookup(8) is None
 
 
+# ---------------------------------------------------------------------------
+# hierarchical per-axis pricing: the flat-link-cost regression
+# ---------------------------------------------------------------------------
+
+
+def _cell_2d(tier=""):
+    """A comm-bound ICI-inner/DCN-outer 2-D fused cell: the streamed
+    weight column block dominates (large K, small M/N), so the cell's
+    cost is essentially the outer stream's transfer time."""
+    p, q, k, m, n, it = 4, 4, 8192, 256, 256, 4
+    return OpCell("matmul_reducescatter_2d", p, k * (n // p) * it,
+                  "float32", mm_k=k, mm_m=m, mm_n=n, mm_role="2d", p2=q,
+                  tier=tier)
+
+
+def test_2d_cell_outer_stream_priced_on_its_own_tier():
+    """Regression for the flat-link cost model: a data(DCN)-outer x
+    model(ICI)-inner 2-D cell priced with one flat ICI ``Topo``
+    underestimates the outer stream by the full ICI/DCN bandwidth gap
+    (4x at v5e numbers).  With a ``MeshTopo`` the ``p`` axis prices on
+    the DCN fabric and the ``p2`` axis on ICI — on this comm-bound cell
+    the tiered price must come out ~4x the flat-ICI price."""
+    mesh = cm.MeshTopo.of(data=cm.V5E_DCN, model=cm.V5E_ICI)
+    tiered = _cell_2d(tier="v5e-dcn/v5e-ici")
+    flat = _cell_2d()
+    for impl in REGISTRY["matmul_reducescatter_2d"]:
+        t_mesh = cm.latency_cell(tiered, impl, mesh)
+        t_flat = cm.latency_cell(flat, impl, cm.V5E_ICI)
+        assert 3.0 <= t_mesh / t_flat <= 4.5, (impl, t_mesh, t_flat)
+        # plain-Topo callers keep the pre-hierarchy behaviour bit-for-bit,
+        # tier token or not
+        assert cm.latency_cell(tiered, impl, cm.V5E_ICI) == t_flat
+
+
+def test_2d_cell_untiered_prices_on_fastest_axis():
+    """An untiered cell under a MeshTopo prices on the fastest axis — the
+    flat model's implicit assumption, now explicit — so pre-hierarchy
+    traces keep their numbers."""
+    mesh = cm.MeshTopo.of(data=cm.V5E_DCN, model=cm.V5E_ICI)
+    flat = _cell_2d()
+    for impl in REGISTRY["matmul_reducescatter_2d"]:
+        assert cm.latency_cell(flat, impl, mesh) == \
+            cm.latency_cell(flat, impl, cm.V5E_ICI)
+
+
+def test_overlapped_ring2d_per_axis_fabrics():
+    """``t_overlapped_ring2d`` prices the outer stream on ``t`` and the
+    inner ring on ``t_inner``; omitting ``t_inner`` keeps the old flat
+    single-fabric behaviour."""
+    mm = 1e-5
+    outer_dcn = cm.V5E_DCN.alpha + 2 ** 20 * cm.V5E_DCN.beta
+    outer_ici = cm.V5E_ICI.alpha + 2 ** 20 * cm.V5E_ICI.beta
+    inner = cm.V5E_ICI.alpha + 2 ** 16 * cm.V5E_ICI.beta
+    flat = cm.t_overlapped_ring2d(4, 4, outer_ici, inner, mm, cm.V5E_ICI)
+    assert cm.t_overlapped_ring2d(4, 4, outer_ici, inner, mm, cm.V5E_ICI,
+                                  None) == flat
+    tiered = cm.t_overlapped_ring2d(4, 4, outer_dcn, inner, mm,
+                                    cm.V5E_DCN, cm.V5E_ICI)
+    # the comm-bound outer stream exposes the DCN/ICI bandwidth gap
+    assert tiered > flat * 3.0
+
+
 @pytest.mark.slow
 def test_tuner_measured_backend_smoke():
     """Full measured pipeline on host devices (tiny sizes, single device is

@@ -167,6 +167,52 @@ def test_profile_store_save_with_epoch_writes_manifest(tmp_path):
     assert len(back) == 1
 
 
+def test_manifest_demotions_roundtrip_through_poll(tmp_path):
+    """The publishing process's demotion ledger rides MANIFEST.json and is
+    re-applied when a FRESH process (empty ledger) adopts the epoch — a
+    generation tuned with a wire impl excluded must not be served by a
+    process that would route traffic back onto it."""
+    C.clear_demotions()
+    try:
+        C.demote("allreduce", "wire_q8", "tolerance rel=0.5 > 0.063")
+        _store().save(tmp_path, epoch=3)          # ledger snapshot rides along
+        man = read_manifest(tmp_path)
+        assert man["demotions"] == \
+            [["allreduce", "wire_q8", "tolerance rel=0.5 > 0.063"]]
+
+        C.clear_demotions()                       # the fresh serving process
+        assert not C.is_demoted("allreduce", "wire_q8")
+        ref = StoreRef(directory=tmp_path)
+        assert ref.poll() and ref.epoch == 3
+        assert C.is_demoted("allreduce", "wire_q8")
+        reason = C.demotions()[("allreduce", "wire_q8")]
+        assert reason.startswith("manifest: ")    # provenance is visible
+    finally:
+        C.clear_demotions()
+
+
+def test_manifest_demotions_explicit_and_unknown_rows(tmp_path):
+    """``demotions=`` overrides the ambient ledger; a row naming an impl
+    this build doesn't know (a manifest from a newer build) is skipped
+    with a warning, never fatal, and the rest still apply."""
+    C.clear_demotions()
+    try:
+        _store().save(tmp_path)
+        write_manifest(tmp_path, 4, base=_store(),
+                       demotions={("allreduce", "wire_fp8"): "tol",
+                                  ("allreduce", "no_such_impl"): "tol"})
+        assert len(read_manifest(tmp_path)["demotions"]) == 2
+        ref = StoreRef(directory=tmp_path)
+        with warnings.catch_warnings(record=True) as caught:
+            warnings.simplefilter("always")
+            assert ref.poll()
+        assert any("no_such_impl" in str(w.message) for w in caught)
+        assert C.is_demoted("allreduce", "wire_fp8")
+        assert not C.is_demoted("allreduce", "wire_q8")
+    finally:
+        C.clear_demotions()
+
+
 def test_trace_tune_report_save_with_epoch(tmp_path):
     rep = tuner.TraceTuneReport(
         phase_profiles={"decode": _store()}, measurements=[],

@@ -41,7 +41,7 @@ ROLE_OF_OP = {"allgather_matmul": ("gather",),
 FUSED_OPS = tuple(ROLE_OF_OP)
 
 _SEEN = {"nearest": 0, "monotone": 0, "floor": 0, "roundtrip": 0,
-         "merge": 0}
+         "merge": 0, "tier": 0}
 
 
 def _mk_cell(op, role_i, p, p2, dt_i, k, m, n, nbytes):
@@ -101,6 +101,82 @@ def test_nearest_geometry_lookup_same_role_and_dtype(op_i, role_i, dt_i,
     assert dt == cell.dtype, (cell, hit)
     assert int(p2) == cell.p2, (cell, hit)
     _SEEN["nearest"] += 1
+
+
+# ---------------------------------------------------------------------------
+# 1b. the tier key partitions EVERY lookup path (flat / hierarchical /
+#     nearest-geometry fallback) — a profile tuned on one interconnect
+#     tier must never answer a cell on another
+# ---------------------------------------------------------------------------
+
+HIER_OPS = OpCell.HIER_OPS
+FLAT_TIERS = ("", "v5e-dcn", "v5e-ici")
+HIER_TIERS = ("", "v5e-dcn/v5e-ici")
+
+
+def _tier_store():
+    """Profiles whose impl names ENCODE their tier key, covering every
+    token class: flat untiered, flat on a named tier, hierarchical with
+    the inner size folded in, and fused 2-D under two tiers with the SAME
+    stored geometry (so an un-pinned nearest-geometry fallback would be
+    free to cross tiers)."""
+    store = ProfileStore()
+    for op in HIER_OPS:
+        for tier in FLAT_TIERS:
+            store.add(Profile(op=op, axis_size=8,
+                              ranges=[Range(1, 10 ** 9, f"tenc|{tier}")],
+                              tier=tier))
+        for tier in HIER_TIERS:
+            for q in (2, 4):
+                tok = f"{tier or 'hier'}@q{q}"
+                store.add(Profile(op=op, axis_size=8,
+                                  ranges=[Range(1, 10 ** 9, f"tenc|{tok}")],
+                                  tier=tok))
+    for tier in HIER_TIERS:
+        store.add(Profile(op="matmul_reducescatter_2d", axis_size=8,
+                          ranges=[Range(1, 10 ** 9, f"tenc|{tier}")],
+                          geom=Geom("float32", 64, 128, 32, "2d", 4),
+                          tier=tier))
+    return store
+
+
+_TIER_STORE = _tier_store()
+
+
+@settings(max_examples=24, deadline=None)
+@given(st.integers(0, len(HIER_OPS) - 1),
+       st.integers(0, len(FLAT_TIERS) - 1),
+       st.integers(0, len(HIER_TIERS) - 1),
+       st.integers(0, 1), st.integers(1, 10 ** 8))
+def test_tier_key_partitions_plain_lookups(op_i, ft_i, ht_i, q_i, nbytes):
+    op = HIER_OPS[op_i]
+    flat = OpCell(op, 8, nbytes, tier=FLAT_TIERS[ft_i])
+    hit = _TIER_STORE.lookup_cell(flat)
+    assert hit == f"tenc|{flat.profile_tier()}", (flat, hit)
+    # the hierarchical sibling of the SAME (op, p, nbytes) resolves to its
+    # own tier key — an 8-way flat profile never shadows a 2x4/2x2
+    # hierarchical cell, and vice versa
+    hcell = OpCell(op, 8, nbytes, p2=(2, 4)[q_i], tier=HIER_TIERS[ht_i])
+    hhit = _TIER_STORE.lookup_cell(hcell)
+    assert hhit == f"tenc|{hcell.profile_tier()}", (hcell, hhit)
+    assert hhit != hit
+    _SEEN["tier"] += 1
+
+
+@settings(max_examples=24, deadline=None)
+@given(st.integers(0, len(HIER_TIERS) - 1), st.integers(1, 3000),
+       st.integers(2, 9000), st.integers(1, 3000), st.integers(1, 10 ** 8))
+def test_tier_key_pins_nearest_geometry_fallback(t_i, k, m, n, nbytes):
+    """The stored 2-D geometries are IDENTICAL under both tiers, so a
+    random-geometry query exercises the nearest-geometry fallback with a
+    cross-tier twin at distance zero — only the tier filter keeps the
+    resolution inside the cell's own tier."""
+    tier = HIER_TIERS[t_i]
+    cell = OpCell("matmul_reducescatter_2d", 8, nbytes, mm_k=k, mm_m=m,
+                  mm_n=n, mm_role="2d", p2=4, tier=tier)
+    hit = _TIER_STORE.lookup_cell(cell)
+    assert hit == f"tenc|{tier}", (cell, hit)
+    _SEEN["tier"] += 1
 
 
 # ---------------------------------------------------------------------------

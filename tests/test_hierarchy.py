@@ -1,0 +1,372 @@
+"""Hierarchical per-axis topology: MeshTopo, tier-aware pricing, the
+MPIX_* composed mock-ups, and the dispatch/trace/tuner plumbing.
+
+Tentpole coverage for the per-axis topology model:
+
+* the composed hierarchical mock-ups (RS-intra→AR-inter→AG-intra
+  allreduce, AG-intra→AG-inter allgather, RS-inter→RS-intra
+  reducescatter) match the flat numpy oracle under nested vmap, padding
+  included;
+* ``MeshTopo`` resolves axis names to per-tier fabrics; ``fit_topo``
+  recovers a tier's alpha/beta/gamma from synthetic ring sweeps and
+  ``Topo.scaled`` derives an unreachable tier from published RATIOS on
+  the fitted absolutes;
+* the cost model prices a hierarchical cell's composed schedule below
+  the flat joint-ring default on a DCN-crossing mesh, and enforces
+  hier↔flat admissibility (each worlds' mock-ups price ``inf`` in the
+  other);
+* api dispatch with ``inner_axis=`` + an ambient ``MeshTopo`` stamps
+  ``p2`` and the tier token, selects the hierarchical mock-up from a
+  tier-keyed profile, and refuses cross-world forces;
+* tier tokens round-trip trace JSONL and profile text/JSON/disk;
+* ``tune_trace`` over a mixed flat/hierarchical trace emits tier-keyed
+  profiles that never cross-match.
+"""
+import math
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import api, collectives as C, costmodel as cm, measure, tuner
+from repro.core.cell import OpCell
+from repro.core.profiles import Profile, ProfileStore, Range
+from repro.core.trace import Trace, TraceEntry
+
+P_OUT, P_IN = 2, 4                 # 2 outer (inter) x 4 inner (intra) ranks
+MESH = cm.MeshTopo.of(o=cm.V5E_DCN, i=cm.V5E_ICI)
+TIER = "v5e-dcn/v5e-ici"
+
+HIER_IMPL = {"allreduce": "MPIX_rs_ar_ag", "allgather": "MPIX_ag_ag",
+             "reducescatter": "MPIX_rs_rs"}
+
+
+def _run_hier(op, name, x, p=P_OUT, q=P_IN):
+    """Run one impl over the nested (outer, inner) vmap mesh on a stacked
+    payload ``x`` ([p*q, ...] in outer-major rank order)."""
+    fn = C.REGISTRY[op][name].fn
+    nested = jnp.asarray(x).reshape((p, q) + x.shape[1:])
+    out = jax.vmap(jax.vmap(lambda s: fn(s, "o", inner_axis="i"),
+                            axis_name="i"), axis_name="o")(nested)
+    return np.asarray(out).reshape((p * q,) + out.shape[2:])
+
+
+# ---------------------------------------------------------------------------
+# semantics: composed mock-ups == flat oracle over the joint group
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ["default", "MPIX_rs_ar_ag"])
+@pytest.mark.parametrize("n", [8, 5])          # 5: not a multiple of q
+def test_hier_allreduce_matches_oracle(name, n):
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(P_OUT * P_IN, n, 3)).astype(np.float32)
+    got = _run_hier("allreduce", name, x)
+    np.testing.assert_allclose(
+        got, np.broadcast_to(x.sum(0), x.shape), atol=1e-5)
+
+
+@pytest.mark.parametrize("name", ["default", "MPIX_ag_ag"])
+def test_hier_allgather_matches_oracle(name):
+    rng = np.random.default_rng(1)
+    x = rng.normal(size=(P_OUT * P_IN, 3, 2)).astype(np.float32)
+    got = _run_hier("allgather", name, x)
+    full = x.reshape(-1, x.shape[-1] if x.ndim == 2 else x.shape[2])
+    full = x.reshape((-1,) + x.shape[2:])
+    np.testing.assert_allclose(
+        got, np.broadcast_to(full, (P_OUT * P_IN,) + full.shape), atol=1e-5)
+
+
+@pytest.mark.parametrize("name", ["default", "MPIX_rs_rs"])
+def test_hier_reducescatter_matches_oracle(name):
+    rng = np.random.default_rng(2)
+    w = P_OUT * P_IN
+    x = rng.normal(size=(w, w * 3, 2)).astype(np.float32)
+    got = _run_hier("reducescatter", name, x)
+    want = x.sum(0).reshape(w, 3, 2)
+    np.testing.assert_allclose(got, want, atol=1e-5)
+
+
+def test_hier_impl_requires_inner_axis():
+    for op, name in HIER_IMPL.items():
+        with pytest.raises(ValueError, match="inner_axis"):
+            C.REGISTRY[op][name].fn(jnp.ones((4, 2)), "x")
+
+
+# ---------------------------------------------------------------------------
+# MeshTopo resolution + fitting
+# ---------------------------------------------------------------------------
+
+
+def test_mesh_topo_resolution():
+    assert MESH.topo("o") is cm.V5E_DCN and MESH.topo("i") is cm.V5E_ICI
+    with pytest.raises(KeyError):
+        MESH.topo("nope")
+    assert MESH.by_tier("v5e-ici") is cm.V5E_ICI
+    assert MESH.by_tier("nope") is None
+    # flat = fastest axis (the pre-hierarchy assumption), slowest for the
+    # joint-ring bound
+    assert MESH.flat is cm.V5E_ICI and MESH.slowest is cm.V5E_DCN
+    # tier tokens: axis names -> Topo names; unknown axes -> "" (an
+    # uninstrumented mesh keeps dispatching flat)
+    assert MESH.tier_token("o") == "v5e-dcn"
+    assert MESH.tier_token("o", "i") == TIER
+    assert MESH.tier_token("z") == "" and MESH.tier_token("o", "z") == ""
+    # resolve: "" -> flat/flat; one token -> both slots; out/in -> each
+    assert MESH.resolve("") == (cm.V5E_ICI, cm.V5E_ICI)
+    assert MESH.resolve("v5e-dcn") == (cm.V5E_DCN, cm.V5E_DCN)
+    assert MESH.resolve(TIER) == (cm.V5E_DCN, cm.V5E_ICI)
+    assert MESH.resolve("bogus/unknown") == (cm.V5E_ICI, cm.V5E_ICI)
+
+
+def test_fit_topo_recovers_ring_parameters():
+    """Synthetic sweeps generated from a known fabric round-trip through
+    the least-squares fit: the per-tier parameters come from measurement,
+    not assumed constants."""
+    true = cm.Topo("truth", alpha=3.0e-6, link_bw=25e9, gamma=4.0e-12)
+    p = 8
+    sizes = [1 << s for s in range(10, 24, 2)]
+    ag = [(b, cm.t_ring_allgather(p, b, true)) for b in sizes]
+    ar = [(b, cm.t_ring_allreduce(p, b, true)) for b in sizes]
+    fit = cm.fit_topo(p, ag, ar, name="fit")
+    assert fit.alpha == pytest.approx(true.alpha, rel=1e-6)
+    assert fit.beta == pytest.approx(true.beta, rel=1e-6)
+    assert fit.gamma == pytest.approx(true.gamma, rel=1e-6)
+    # without allreduce points, gamma carries over from base
+    assert cm.fit_topo(p, ag, base=true).gamma == true.gamma
+    with pytest.raises(ValueError):
+        cm.fit_topo(p, [(1024, 1e-4)])          # one size: underdetermined
+    with pytest.raises(ValueError):
+        cm.fit_topo(1, ag)
+
+
+def test_scaled_tier_derives_from_fitted_absolutes():
+    """An unreachable tier (DCN from inside one pod) anchors to the FITTED
+    base via the published ratios — absolutes measured, ratios assumed."""
+    base = cm.fit_topo(
+        4, [(b, cm.t_ring_allgather(4, b, cm.V5E_ICI)) for b in
+            (1 << 12, 1 << 16, 1 << 20)], name="fit-ici")
+    dcn = base.scaled(name="fit-dcn", alpha_mult=cm.DCN_ALPHA_MULT,
+                      bw_mult=cm.DCN_BW_MULT)
+    assert dcn.alpha == pytest.approx(base.alpha * 10.0)
+    assert dcn.link_bw == pytest.approx(base.link_bw * 0.25)
+    assert dcn.gamma == base.gamma
+    mt = cm.MeshTopo.of(i=base, o=dcn)
+    assert mt.resolve("fit-dcn/fit-ici") == (dcn, base)
+
+
+def test_mesh_topo_fit_builds_per_axis_tiers():
+    pts = {
+        "i": (4, [(b, cm.t_ring_allgather(4, b, cm.V5E_ICI))
+                  for b in (1 << 12, 1 << 20)], None),
+        "o": (2, [(b, cm.t_ring_allgather(2, b, cm.V5E_DCN))
+                  for b in (1 << 12, 1 << 20)], None),
+    }
+    mt = cm.MeshTopo.fit(pts)
+    assert mt.topo("i").beta == pytest.approx(cm.V5E_ICI.beta, rel=1e-6)
+    assert mt.topo("o").beta == pytest.approx(cm.V5E_DCN.beta, rel=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# pricing: composed schedules vs the flat joint ring; admissibility
+# ---------------------------------------------------------------------------
+
+
+def _hier_cell(op="allreduce", nbytes=4 << 20, tier=TIER):
+    return OpCell(op, P_OUT, nbytes, p2=P_IN, tier=tier)
+
+
+def test_hier_allreduce_priced_below_flat_joint_ring():
+    """The guideline the mock-ups exist for: on a DCN-crossing mesh the
+    untuned default is one ring through all p*q ranks — every synchronous
+    step gated by the DCN link — while the composed schedule moves only a
+    1/q share across DCN."""
+    cell = _hier_cell()
+    B = float(cell.nbytes)
+    t_def = cm.latency_cell(cell, "default", MESH)
+    assert t_def == pytest.approx(
+        cm.t_ring_allreduce(P_OUT * P_IN, B, cm.V5E_DCN))
+    t_mpix = cm.latency_cell(cell, "MPIX_rs_ar_ag", MESH)
+    assert t_mpix == pytest.approx(
+        cm.t_ring_reduce_scatter(P_IN, B, cm.V5E_ICI)
+        + cm.t_ring_allreduce(P_OUT, B / P_IN, cm.V5E_DCN)
+        + cm.t_ring_allgather(P_IN, B / P_IN, cm.V5E_ICI))
+    assert t_mpix < t_def / 2.0
+
+
+def test_hier_allgather_and_reducescatter_composed_prices():
+    B = 1 << 20
+    ag = _hier_cell("allgather", B)
+    assert cm.latency_cell(ag, "MPIX_ag_ag", MESH) == pytest.approx(
+        cm.t_ring_allgather(P_IN, B, cm.V5E_ICI)
+        + cm.t_ring_allgather(P_OUT, P_IN * B, cm.V5E_DCN))
+    rs = _hier_cell("reducescatter", 8 << 20)
+    assert cm.latency_cell(rs, "MPIX_rs_rs", MESH) == pytest.approx(
+        cm.t_ring_reduce_scatter(P_OUT, 8 << 20, cm.V5E_DCN)
+        + cm.t_ring_reduce_scatter(P_IN, (8 << 20) / P_OUT, cm.V5E_ICI))
+
+
+def test_hier_flat_admissibility_is_mutual():
+    # flat one-axis mock-ups are inadmissible on a hierarchical cell ...
+    sw = cm.sweep_cell(_hier_cell(), MESH)
+    assert math.isfinite(sw["default"]) and math.isfinite(sw["MPIX_rs_ar_ag"])
+    for name, t in sw.items():
+        if name not in ("default", "MPIX_rs_ar_ag"):
+            assert t == math.inf, name
+    # ... and hierarchical mock-ups on a flat cell
+    flat = OpCell("allreduce", P_OUT * P_IN, 4 << 20)
+    assert cm.latency_cell(flat, "MPIX_rs_ar_ag", MESH) == math.inf
+    assert math.isfinite(cm.latency_cell(flat, "default", MESH))
+
+
+def test_hier_untiered_cell_prices_on_slowest_vs_flat():
+    """A hierarchical cell with NO tier token still prices hier-aware:
+    default = joint ring on the flat (fastest) assumption is wrong, so
+    the resolver maps "" to flat/flat and the joint default rides the
+    slower of the two slots — here both flat, i.e. the old behaviour."""
+    cell = _hier_cell(tier="")
+    t_def = cm.latency_cell(cell, "default", MESH)
+    assert t_def == pytest.approx(cm.t_ring_allreduce(
+        P_OUT * P_IN, float(cell.nbytes), cm.V5E_ICI))
+
+
+# ---------------------------------------------------------------------------
+# api dispatch: inner_axis + ambient MeshTopo -> tier-stamped cells
+# ---------------------------------------------------------------------------
+
+
+def _tier_profile(impl="MPIX_rs_ar_ag"):
+    return ProfileStore([Profile(
+        op="allreduce", axis_size=P_OUT,
+        ranges=[Range(1, 1 << 30, impl)], tier=f"{TIER}@q{P_IN}")])
+
+
+def _dispatch_hier(ctx_kw):
+    rng = np.random.default_rng(3)
+    x = rng.normal(size=(P_OUT, P_IN, 6, 2)).astype(np.float32)
+    with api.tuned(**ctx_kw) as ctx:
+        got = jax.vmap(jax.vmap(
+            lambda s: api.allreduce(s, "o", inner_axis="i"),
+            axis_name="i"), axis_name="o")(jnp.asarray(x))
+    np.testing.assert_allclose(
+        np.asarray(got),
+        np.broadcast_to(x.sum((0, 1)), x.shape), atol=1e-5)
+    return ctx.record
+
+
+def test_dispatch_stamps_tier_and_selects_hier_mockup():
+    recs = _dispatch_hier(dict(profiles=_tier_profile(), mesh_topo=MESH))
+    (rec,) = recs
+    assert rec.impl == "MPIX_rs_ar_ag"
+    assert rec.cell.p == P_OUT and rec.cell.p2 == P_IN
+    assert rec.cell.tier == TIER and rec.cell.hier
+    assert rec.cell.profile_tier() == f"{TIER}@q{P_IN}"
+
+
+def test_dispatch_without_mesh_topo_stays_untiered():
+    (rec,) = _dispatch_hier({})
+    assert rec.impl == "default"
+    assert rec.cell.tier == "" and rec.cell.p2 == P_IN
+    assert rec.cell.profile_tier() == f"hier@q{P_IN}"
+
+
+def test_dispatch_global_mesh_topo_registry():
+    api.set_mesh_topo(MESH)
+    try:
+        (rec,) = _dispatch_hier({})
+        assert rec.cell.tier == TIER
+    finally:
+        api.set_mesh_topo(None)
+    (rec,) = _dispatch_hier({})
+    assert rec.cell.tier == ""
+
+
+def test_dispatch_refuses_cross_world_forces():
+    # a hier mock-up forced onto a FLAT callsite falls back to default
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.normal(size=(P_OUT * P_IN, 4, 2)), jnp.float32)
+    with api.tuned(force={"allreduce": "MPIX_rs_ar_ag"}) as ctx:
+        jax.vmap(lambda a: api.allreduce(a, "x"), axis_name="x")(x)
+    assert [r.impl for r in ctx.record] == ["default"]
+    # and a flat mock-up forced onto a hierarchical callsite likewise
+    recs = _dispatch_hier(dict(force={"allreduce": "allreduce_as_doubling"}))
+    assert [r.impl for r in recs] == ["default"]
+
+
+# ---------------------------------------------------------------------------
+# persistence: tier through trace JSONL, profile text/JSON, disk
+# ---------------------------------------------------------------------------
+
+
+def test_trace_jsonl_roundtrips_tier():
+    t = Trace([TraceEntry.of("allreduce", P_OUT, 4096, "fwd", "default", 3,
+                             p2=P_IN, tier=TIER),
+               TraceEntry.of("allreduce", 8, 4096, "fwd", "default", 2)])
+    back = Trace.from_jsonl(t.to_jsonl())
+    assert back == t
+    cells = sorted(back.cells(), key=lambda c: c.p)
+    assert cells[0].tier == TIER and cells[0].p2 == P_IN
+    assert cells[1].tier == "" and cells[1].p2 == 0
+
+
+def test_profile_tier_text_json_disk_roundtrip(tmp_path):
+    prof = Profile(op="allreduce", axis_size=P_OUT,
+                   ranges=[Range(1, 1 << 20, "MPIX_rs_ar_ag")],
+                   tier=f"{TIER}@q{P_IN}")
+    assert "#@tier" in prof.to_text()
+    for back in (Profile.from_text(prof.to_text()),
+                 Profile.from_json(prof.to_json())):
+        assert back.tier == prof.tier and back.ranges == prof.ranges
+    # untiered profiles stay byte-identical to the pre-tier format
+    flat = Profile(op="allreduce", axis_size=8,
+                   ranges=[Range(1, 1 << 20, "allreduce_as_doubling")])
+    assert "#@tier" not in flat.to_text()
+    store = ProfileStore([prof, flat])
+    store.save(tmp_path)
+    names = sorted(f.name for f in tmp_path.glob("*.pgtune"))
+    assert any("_t" in n for n in names)        # tier tag in the filename
+    back = ProfileStore.load(tmp_path)
+    assert len(back) == 2
+    assert back.get("allreduce", P_OUT,
+                    tier=f"{TIER}@q{P_IN}").tier == f"{TIER}@q{P_IN}"
+    assert back.get("allreduce", 8).tier == ""
+
+
+# ---------------------------------------------------------------------------
+# tuner: tier-keyed profiles from a mixed flat/hierarchical trace
+# ---------------------------------------------------------------------------
+
+
+def test_tune_trace_emits_tier_keyed_profiles():
+    t = Trace([TraceEntry.of("allreduce", P_OUT, 4 << 20, "fwd", "default",
+                             8, p2=P_IN, tier=TIER),
+               TraceEntry.of("allreduce", P_OUT * P_IN, 4 << 20, "fwd",
+                             "default", 8)])
+    backend = tuner.CostModelBackend(MESH)
+    rep = tuner.tune_trace(t, backend=backend)
+    store = rep.phase_profiles["fwd"]
+    hier_cell = OpCell("allreduce", P_OUT, 4 << 20, p2=P_IN, tier=TIER)
+    flat_cell = OpCell("allreduce", P_OUT * P_IN, 4 << 20)
+    assert store.lookup_cell(hier_cell) == "MPIX_rs_ar_ag"
+    # the flat sibling resolves in its own tier partition and never to a
+    # hierarchical mock-up
+    flat_sel = store.lookup_cell(flat_cell)
+    assert flat_sel != "MPIX_rs_ar_ag"
+    # the modeled win is real: tuned estimate strictly below default
+    est_def = tuner.estimate_trace_cost(t, backend)
+    est_tuned = tuner.estimate_trace_cost(t, backend,
+                                          phases=rep.phase_profiles)
+    assert est_tuned["fwd"] < est_def["fwd"]
+
+
+def test_measure_problem_shapes_hier_uses_world():
+    """v-style hierarchical cells size their replay input by the JOINT
+    group (p*p2 chunks), mirroring the flat path's p chunks."""
+    flat = OpCell("reducescatter", 8, 64)
+    hier = OpCell("reducescatter", 2, 64, p2=4)
+    assert measure.problem_shapes(flat)["x"][0] == \
+        measure.problem_shapes(hier)["x"][0] == (64 // 4) * 8
+    ar = OpCell("allreduce", 2, 64, p2=4)
+    assert measure.problem_shapes(ar)["x"][0] == 64 // 4

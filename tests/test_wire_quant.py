@@ -20,6 +20,7 @@ import pytest
 
 import jax
 import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
 
 from repro.core import api, collectives as C, costmodel, selfcheck, tuner
 from repro.core.cell import OpCell
@@ -174,3 +175,104 @@ def test_non_f32_dispatch_roundtrips_dtype_to_profile_lookup():
     assert sel is not None                       # tuned under the bf16 key
     f32_twin = dataclasses.replace(bcell, dtype="float32")
     assert store.lookup_cell(f32_twin) is None   # dtype is part of the key
+
+
+# ---------------------------------------------------------------------------
+# wire_hops audit: count error-ADDING quantization events, not ring hops
+# ---------------------------------------------------------------------------
+
+PA = 8           # accumulate-audit axis size
+K_LOC, M_A, T_A = 8, 16, 4
+
+
+def test_wire_hops_counts_error_adding_events():
+    """The tolerance multiplier is the number of independently-quantized
+    error terms that can ADD into one output element — NOT the number of
+    times the travelling payload crosses the wire."""
+    # gather-style: each block quantized once at its origin, errors never meet
+    assert selfcheck.wire_hops("allgather", PA) == 1
+    assert selfcheck.wire_hops("allgather_matmul", PA) == 1
+    # travelling accumulators: p-1 requantized partial sums
+    assert selfcheck.wire_hops("reducescatter", PA) == PA - 1
+    assert selfcheck.wire_hops("matmul_reducescatter", PA) == PA - 1
+    # allreduce = RS (p-1 requantizes) + the AG-phase re-quantize on top
+    assert selfcheck.wire_hops("allreduce", PA) == PA
+    # matmul_accumulate streams blocks quantized ONCE each, but the
+    # stationary-x contraction sums all p-1 wire-crossed blocks' errors
+    # into every output element (the audited fix: the old travelling-data
+    # rule said 1)
+    assert selfcheck.wire_hops("matmul_accumulate", PA) == PA - 1
+    # a 2-D cell's budget comes from its INNER reduction ring of size p2
+    assert selfcheck.wire_hops("matmul_reducescatter_2d", PA, 4) == 3
+    assert selfcheck.wire_hops("matmul_reducescatter_2d", PA) == PA - 1
+    # degenerate axes never multiply below the single-roundtrip base
+    for op in ("reducescatter", "allreduce", "matmul_accumulate"):
+        assert selfcheck.wire_hops(op, 1) == 1
+    # the multiplier is monotone in the tolerance it produces
+    assert wire_tol("int8", PA - 1) == (PA - 1) * wire_tol("int8", 1)
+
+
+def _accumulate_payload(gamma, seed=11, p=PA):
+    """Stacked weight K-blocks [p, k_loc, m] + stationary x [T, K].
+
+    Weight columns are near-constant with sub-quantization-step dither, so
+    each block's int8 rounding residuals are independent k-varying noise
+    (NO in-block dynamic-range abuse — every value sits in [1, 2]); the
+    stationary rows have their sum suppressed by ``gamma``, so the true
+    output shrinks with gamma while the p-1 accumulated per-block errors
+    random-walk undiminished.  gamma=0.1 lands the relative error ABOVE
+    the single-roundtrip bound but UNDER the (p-1)-event bound; gamma=0
+    is the full-cancellation adversarial payload.
+    """
+    rng = np.random.default_rng(seed)
+    K = p * K_LOC
+    c = rng.uniform(1.0, 2.0, size=(1, M_A))
+    dither = rng.uniform(-0.004, 0.004, size=(K, M_A))
+    wblocks = (np.broadcast_to(c, (K, M_A)) + dither).astype(
+        np.float32).reshape(p, K_LOC, M_A)
+    z = rng.normal(size=(T_A, K))
+    xstat = (z - (1.0 - gamma) * z.mean(axis=1, keepdims=True)).astype(
+        np.float32)
+    return wblocks, xstat
+
+
+def test_accumulate_error_adding_payload_needs_p_minus_1_events():
+    """Regression for the hops audit: a benign error-ADDING payload whose
+    measured error exceeds the old hops=1 bound (spurious demotion on
+    HEAD) but sits inside the corrected (p-1)-event budget."""
+    wb, xs = _accumulate_payload(gamma=0.1)
+    ok, rel, tol = selfcheck.run_gate("matmul_accumulate", "wire_q8",
+                                      wb, w=xs)
+    assert rel > wire_tol("int8", 1)       # the old bound would demote this
+    assert ok and rel <= tol == wire_tol("int8", PA - 1)
+    assert not C.is_demoted("matmul_accumulate", "wire_q8")
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(0, 1), st.integers(0, 10 ** 6))
+def test_accumulate_benign_payloads_never_demote(wd_i, seed):
+    """Property: random normal payloads stay under the (p-1)-event bound
+    for both wire dtypes — the gate never spuriously demotes."""
+    name = ("wire_q8", "wire_fp8")[wd_i]
+    rng = np.random.default_rng(seed)
+    wb = rng.normal(size=(PA, K_LOC, M_A)).astype(np.float32)
+    xs = rng.normal(size=(T_A, PA * K_LOC)).astype(np.float32)
+    C.clear_demotions()
+    ok, rel, tol = selfcheck.run_gate("matmul_accumulate", name, wb, w=xs)
+    assert ok and rel <= tol
+    assert not C.is_demoted("matmul_accumulate", name)
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(0, 1), st.integers(0, 10 ** 6))
+def test_accumulate_adversarial_cancellation_always_fires(wd_i, seed):
+    """Property: on full-cancellation payloads the measured error exceeds
+    even the widened (p-1)-event bound — the gate bound is never looser
+    than the error the payload class actually produces, so widening the
+    multiplier did not open a demotion hole."""
+    name = ("wire_q8", "wire_fp8")[wd_i]
+    wb, xs = _accumulate_payload(gamma=0.0, seed=seed)
+    C.clear_demotions()
+    ok, rel, tol = selfcheck.run_gate("matmul_accumulate", name, wb, w=xs)
+    assert not ok and rel > tol
+    assert C.is_demoted("matmul_accumulate", name)
